@@ -1,0 +1,77 @@
+"""Fig. 10/11: data-distribution statistics for Bessel under MCMA.
+
+Fig. 10: each approximator's territory (dispatch share, per-territory mean
+error) — shows the specialization the paper plots in 2D.
+Fig. 11: confusion quadrants (AC / AnC / nAC / nAnC) for one-pass,
+iterative, MCMA — MCMA must raise true-positive AC and crush the false
+negatives (abandoned-but-safe data).
+Writes benchmarks/out/distribution.csv.
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import APPS, make_dataset
+from repro.core import quality, train_iterative, train_mcma, train_one_pass
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+
+
+def main(n_train=8_000, n_test=3_000, epochs=1500, seed=0):
+    os.makedirs(OUT, exist_ok=True)
+    app = APPS["bessel"]
+    key = jax.random.PRNGKey(seed)
+    xtr, ytr, xte, yte = make_dataset(app, key, n_train, n_test)
+    ks = jax.random.split(key, 3)
+    rows = []
+
+    # ---- Fig. 11 quadrants for the three methods ---------------------------
+    methods = {
+        "one-pass": train_one_pass(app, ks[0], xtr, ytr, epochs=epochs),
+        "iterative": train_iterative(app, ks[1], xtr, ytr, epochs=epochs),
+        "mcma-competitive": train_mcma(app, ks[2], xtr, ytr,
+                                       scheme="competitive", epochs=epochs),
+    }
+    for name, model in methods.items():
+        met = model.evaluate(xte, yte)
+        nanc = 1.0 - met.true_invocation - met.false_neg - met.false_pos
+        rows.append({"table": "fig11", "method": name, "approx": "",
+                     "AC": round(met.true_invocation, 4),
+                     "AnC": round(met.false_neg, 4),
+                     "nAC": round(met.false_pos, 4),
+                     "nAnC": round(nanc, 4),
+                     "recall": round(met.recall, 4),
+                     "share": "", "territory_err": ""})
+        print(f"fig11 {name:18s} AC={met.true_invocation:.3f} "
+              f"AnC={met.false_neg:.3f} nAC={met.false_pos:.3f}", flush=True)
+
+    # ---- Fig. 10: per-approximator territories under MCMA ------------------
+    mcma = methods["mcma-competitive"]
+    cls = np.asarray(mcma.classify(xte))
+    errs = np.asarray(mcma.approximator_errors(xte, yte))
+    for i in range(mcma.n_approx):
+        sel = cls == i
+        share = float(sel.mean())
+        terr = float(errs[i][sel].mean()) if sel.any() else float("nan")
+        rows.append({"table": "fig10", "method": "mcma-competitive",
+                     "approx": f"A{i + 1}", "AC": "", "AnC": "", "nAC": "",
+                     "nAnC": "", "recall": "",
+                     "share": round(share, 4),
+                     "territory_err": round(terr, 5)})
+        print(f"fig10 A{i+1}: share={share:.3f} territory_err={terr:.4f}",
+              flush=True)
+
+    with open(os.path.join(OUT, "distribution.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

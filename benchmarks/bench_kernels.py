@@ -1,0 +1,85 @@
+"""Pallas kernel micro-bench (interpret mode on CPU: correctness + VMEM
+working-set accounting, NOT wall-time — the target is TPU v5e).
+
+For each kernel configuration we report the analytic per-tile VMEM bytes
+(must be << 16 MiB more) and the HBM-traffic saving vs the unfused XLA
+path that materializes the hidden activations.
+Writes benchmarks/out/kernels.csv.
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+VMEM = 16 * 2 ** 20
+
+
+def mlp_vmem(block_t, d_in, d_h, d_out, itemsize=2):
+    tile = (block_t * d_in + d_in * d_h + block_t * d_h
+            + d_h * d_out + block_t * d_out)
+    return tile * itemsize
+
+
+def hbm_saving(t, d_h, itemsize=2):
+    """Unfused XLA writes+reads the (T, d_h) hidden activations."""
+    return 2 * t * d_h * itemsize
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    rows = []
+    cases = [
+        # (name, T, n, d_in, d_h, d_out, block_t)
+        ("approx_paper_bs", 4096, 1, 6, 8, 1, 256),
+        ("approx_ffn_1b", 2048, 1, 2048, 256, 2048, 256),
+        ("approx_ffn_3b", 2048, 1, 2560, 256, 2560, 512),
+        ("switched_n3_1b", 2048, 3, 2048, 256, 2048, 256),
+        ("switched_n8_1b", 2048, 8, 2048, 256, 2048, 256),
+    ]
+    for name, t, n, d_in, d_h, d_out, bt in cases:
+        key = jax.random.PRNGKey(0)
+        x = (jax.random.normal(key, (t, d_in)) * 0.3).astype(jnp.bfloat16)
+        ks = jax.random.split(key, 5)
+        if n == 1:
+            w1 = (jax.random.normal(ks[0], (d_in, d_h)) * 0.1).astype(jnp.bfloat16)
+            b1 = jnp.zeros((d_h,), jnp.bfloat16)
+            w2 = (jax.random.normal(ks[1], (d_h, d_out)) * 0.1).astype(jnp.bfloat16)
+            b2 = jnp.zeros((d_out,), jnp.bfloat16)
+            got = ops.mlp_apply(x, w1, b1, w2, b2, block_t=bt, interpret=True)
+            want = ref.mlp_forward_ref(x, w1, b1, w2, b2)
+        else:
+            w1 = (jax.random.normal(ks[0], (n, d_in, d_h)) * 0.1).astype(jnp.bfloat16)
+            b1 = jnp.zeros((n, d_h), jnp.bfloat16)
+            w2 = (jax.random.normal(ks[1], (n, d_h, d_out)) * 0.1).astype(jnp.bfloat16)
+            b2 = jnp.zeros((n, d_out), jnp.bfloat16)
+            cls = jax.random.randint(ks[2], (t,), 0, n)
+            got = ops.switched_apply(x, cls, w1, b1, w2, b2, block_t=bt,
+                                     interpret=True)
+            want = ref.switched_mlp_ref(x, cls, w1, b1, w2, b2)
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - want.astype(jnp.float32))))
+        vm = mlp_vmem(bt, d_in, d_h, d_out) * (1 if n == 1 else 1)  # per tile
+        rows.append({"kernel": name, "T": t, "n_approx": n,
+                     "block_t": bt, "vmem_tile_bytes": vm,
+                     "vmem_ok": vm < VMEM,
+                     "hbm_saving_bytes": hbm_saving(t, d_h),
+                     "max_abs_err_vs_ref": round(err, 5)})
+        print(f"{name:18s} vmem/tile={vm/2**20:.2f}MiB "
+              f"hbm_saved={hbm_saving(t, d_h)/2**20:.1f}MiB err={err:.4f}",
+              flush=True)
+    with open(os.path.join(OUT, "kernels.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Ablation: invocation vs number of approximators (the question MCCA was
+built to answer — paper §III-B "how many approximators are enough to cover
+the majority of the input space?").
+
+Expected: invocation rises steeply from n=1 (== iterative) to n=2..3, then
+saturates — the clusters of safe-to-approximate data are few.
+Writes benchmarks/out/nablation.csv.
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import jax
+
+from repro.apps import APPS, make_dataset
+from repro.core import train_mcma
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+
+
+def main(apps=("blackscholes", "bessel", "kmeans"), ns=(1, 2, 3, 4, 6),
+         n_train=6_000, n_test=2_000, epochs=800, seed=0):
+    os.makedirs(OUT, exist_ok=True)
+    rows = []
+    for app_name in apps:
+        app = APPS[app_name]
+        key = jax.random.PRNGKey(seed)
+        xtr, ytr, xte, yte = make_dataset(app, key, n_train, n_test)
+        for n in ns:
+            m = train_mcma(app, jax.random.fold_in(key, n), xtr, ytr,
+                           n_approx=n, scheme="competitive", iters=4,
+                           epochs=epochs)
+            met = m.evaluate(xte, yte)
+            rows.append({"app": app_name, "n_approx": n,
+                         "invocation": round(met.invocation, 4),
+                         "err_over_bound": round(met.err_norm, 4),
+                         "recall": round(met.recall, 4)})
+            print(f"{app_name:14s} n={n} inv={met.invocation:.3f} "
+                  f"err/b={met.err_norm:.3f}", flush=True)
+    with open(os.path.join(OUT, "nablation.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

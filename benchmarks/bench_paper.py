@@ -1,0 +1,86 @@
+"""Reproduces Fig. 7(a)/(b): invocation + normalized error per benchmark for
+one-pass / iterative / MCCA / MCMA-complementary / MCMA-competitive, and the
+derived Fig. 8 speedup/energy via the NPU cost model.
+
+Writes a CSV to benchmarks/out/paper_table.csv (one row per app x method).
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import jax
+
+from repro.apps import APPS, make_dataset
+from repro.core import (npu_model, train_iterative, train_mcca, train_mcma,
+                        train_one_pass)
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+
+# CI-scale sizes: the paper's 70K/30K splits shrink to keep a full 8x5 sweep
+# in CPU minutes; pass full=True for paper-scale sizes.
+N_TRAIN, N_TEST = 8_000, 3_000
+EPOCHS, ITERS, LR = 1500, 5, 3e-3
+
+
+def run_app(app, key, *, n_train=N_TRAIN, n_test=N_TEST, epochs=EPOCHS,
+            iters=ITERS, n_approx=3):
+    xtr, ytr, xte, yte = make_dataset(app, key, n_train, n_test)
+    ks = jax.random.split(key, 5)
+    rows = {}
+    t0 = time.time()
+    rows["one-pass"] = train_one_pass(app, ks[0], xtr, ytr, epochs=epochs,
+                                      lr=LR).evaluate(xte, yte)
+    rows["iterative"] = train_iterative(app, ks[1], xtr, ytr, iters=iters,
+                                        epochs=epochs, lr=LR).evaluate(xte, yte)
+    mcca = train_mcca(app, ks[2], xtr, ytr, max_pairs=n_approx, epochs=epochs, lr=LR)
+    rows["mcca"] = mcca.evaluate(xte, yte)
+    for scheme in ("complementary", "competitive"):
+        m = train_mcma(app, ks[3], xtr, ytr, n_approx=n_approx, scheme=scheme,
+                       iters=iters, epochs=epochs, lr=LR)
+        rows[f"mcma-{scheme}"] = m.evaluate(xte, yte)
+    elapsed = time.time() - t0
+
+    # NPU cost model -> speedup / energy vs one-pass (Fig. 8 normalization)
+    costs = {}
+    for name, met in rows.items():
+        multi = name.startswith("mcma")
+        n_cls = (mcca.classifiers_consulted(xte) if name == "mcca" else 1.0)
+        costs[name] = npu_model.cost(
+            app, met.invocation, n_approx=n_approx if multi or name == "mcca" else 1,
+            n_classifier_calls=float(n_cls), multiclass=multi,
+            switch_rate=0.5 if multi else 0.0)
+    base = costs["one-pass"]
+    return rows, costs, base, elapsed
+
+
+def main(apps=None, seed=0):
+    os.makedirs(OUT, exist_ok=True)
+    apps = apps or list(APPS)
+    results = []
+    for i, name in enumerate(apps):
+        app = APPS[name]
+        rows, costs, base, elapsed = run_app(app, jax.random.PRNGKey(seed + i))
+        for method, met in rows.items():
+            c = costs[method]
+            results.append(dict(
+                app=name, method=method, invocation=round(met.invocation, 4),
+                err_over_bound=round(met.err_norm, 4),
+                recall=round(met.recall, 4), false_pos=round(met.false_pos, 4),
+                speedup_vs_onepass=round(c.speedup_vs(base), 4),
+                energy_red_vs_onepass=round(c.energy_reduction_vs(base), 4),
+            ))
+            print(f"{name:14s} {method:18s} inv={met.invocation:.3f} "
+                  f"err/b={met.err_norm:.3f} spd={c.speedup_vs(base):.3f} "
+                  f"en={c.energy_reduction_vs(base):.3f}")
+        print(f"  [{name}: {elapsed:.0f}s]", flush=True)
+    with open(os.path.join(OUT, "paper_table.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(results[0].keys()))
+        w.writeheader()
+        w.writerows(results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Benchmark driver: one sub-benchmark per paper table/figure plus the
+kernel microbench and the dry-run/roofline summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Paper-scale knobs (Fig. 6 dataset sizes, 1500 epochs) are reduced to
+CI-scale by default (8k/3k samples) — pass --full for paper sizes.
+Everything writes CSVs under benchmarks/out/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sizes for smoke (epochs=200, 2k samples)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dataset sizes (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma list: paper,errorbound,alloc,distribution,"
+                         "kernels,roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_alloc, bench_distribution, bench_errorbound,
+                            bench_kernels, bench_nablation, bench_paper)
+
+    if args.quick:
+        kw = dict(n_train=2_000, n_test=1_000, epochs=200)
+    elif args.full:
+        kw = dict(n_train=None, n_test=None, epochs=1500)  # per-app Fig. 6
+    else:
+        kw = dict(n_train=8_000, n_test=3_000, epochs=1500)
+
+    jobs = {
+        "paper": lambda: bench_paper.main(),
+        "errorbound": lambda: bench_errorbound.main(
+            n_train=kw["n_train"] or 8000, n_test=kw["n_test"] or 3000,
+            epochs=kw["epochs"]),
+        "alloc": lambda: bench_alloc.main(
+            n_train=kw["n_train"] or 8000, n_test=kw["n_test"] or 3000,
+            epochs=kw["epochs"]),
+        "distribution": lambda: bench_distribution.main(
+            n_train=kw["n_train"] or 8000, n_test=kw["n_test"] or 3000,
+            epochs=kw["epochs"]),
+        "kernels": lambda: bench_kernels.main(),
+        "nablation": lambda: bench_nablation.main(
+            epochs=min(kw["epochs"], 800)),
+        "roofline": _roofline,
+    }
+    only = [s for s in args.only.split(",") if s] or list(jobs)
+    failures = []
+    for name in only:
+        print(f"\n===== bench: {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            jobs[name]()
+            print(f"===== {name} done in {time.time() - t0:.0f}s =====",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+    print("\nall benchmarks complete; outputs in benchmarks/out/ "
+          "and runs/roofline.md")
+
+
+def _roofline():
+    if not os.path.isdir("runs/dryrun") or not os.listdir("runs/dryrun"):
+        print("no dry-run cells found (run `python -m repro.launch.dryrun "
+              "--all --mesh-all` first); skipping")
+        return
+    from repro.launch import roofline
+    roofline.main([])
+
+
+if __name__ == "__main__":
+    main()

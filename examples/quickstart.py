@@ -1,0 +1,43 @@
+"""Quickstart: the paper's pipeline end-to-end in ~1 minute on CPU.
+
+Trains one-pass / iterative / MCMA on Black-Scholes (reduced sizes),
+prints the invocation + error table (the paper's headline comparison),
+and the NPU cost model's speedup estimate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.apps import APPS, make_dataset
+from repro.core import npu_model, train_iterative, train_mcma, train_one_pass
+
+
+def main():
+    app = APPS["blackscholes"]
+    key = jax.random.PRNGKey(0)
+    xtr, ytr, xte, yte = make_dataset(app, key, 4_000, 2_000)
+    ks = jax.random.split(key, 3)
+
+    print(f"app={app.name} error_bound={app.error_bound}")
+    models = {
+        "one-pass": train_one_pass(app, ks[0], xtr, ytr, epochs=600),
+        "iterative": train_iterative(app, ks[1], xtr, ytr, epochs=600),
+        "mcma-competitive": train_mcma(app, ks[2], xtr, ytr, n_approx=3,
+                                       scheme="competitive", epochs=600),
+    }
+    base = None
+    for name, m in models.items():
+        met = m.evaluate(xte, yte)
+        cost = npu_model.cost(app, met.invocation,
+                              n_approx=3 if "mcma" in name else 1,
+                              multiclass="mcma" in name)
+        if base is None:
+            base = cost
+        print(f"{name:18s} invocation={met.invocation:.3f} "
+              f"err/bound={met.err_norm:.3f} "
+              f"speedup-vs-onepass={cost.speedup_vs(base):.2f}x "
+              f"energy-red={cost.energy_reduction_vs(base):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

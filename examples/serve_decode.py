@@ -1,0 +1,60 @@
+"""Batched decoding with continuous batching (the serving deliverable).
+
+Loads a reduced config of an assigned architecture, submits a wave of
+requests with staggered lengths, and drains them through the slot-table
+decode server — demonstrating per-slot cache positions, slot recycling,
+and (optionally) the MCMA ApproxFFN serve path with capacity dispatch.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
+    PYTHONPATH=src python examples/serve_decode.py --approx
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models import model as M
+from repro.runtime.server import DecodeServer, Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--approx", action="store_true",
+                    help="serve through the MCMA ApproxFFN capacity path")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(get_config(args.arch))
+    if args.approx:
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, enable=True))
+    assert cfg.input_mode == "tokens", "serve demo expects token models"
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    server = DecodeServer(cfg, params, batch=args.batch, max_len=96)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 20))
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(0, cfg.vocab, plen)
+                            .astype(np.int32),
+                            max_new=int(rng.integers(8, 24))))
+        server.submit(reqs[-1])
+    stats = server.run_until_drained()
+    for r in reqs[:4]:
+        print(f"req {r.rid}: prompt_len={len(r.prompt)} -> "
+              f"{len(r.out)} new tokens: {r.out[:8]}...")
+    done = sum(r.done for r in reqs)
+    print(f"\n{done}/{len(reqs)} requests served in {stats['ticks']} ticks "
+          f"with a {args.batch}-slot table "
+          f"({'approx-FFN' if args.approx else 'exact-FFN'} path)")
+    assert done == len(reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: invocation-driven neural approximate computing (MCMA, ICCAD'18)
+as a production-grade multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""The paper's eight benchmark applications (Fig. 6).
+
+Each app bundles the exact target function ("CPU path"), an input generator,
+the paper's approximator/classifier topologies, a default error bound, and
+the per-invocation CPU cost constant used by the NPU cost model.
+"""
+from repro.apps.registry import APPS, App, get_app, make_dataset
+
+__all__ = ["APPS", "App", "get_app", "make_dataset"]

@@ -1,0 +1,162 @@
+"""Registry binding each benchmark app to its topologies, data generator,
+error semantics and NPU cost constants (Fig. 6 of the paper).
+
+``cpu_cycles`` follows the dynamic-instruction scale of the NPU paper
+(Esmaeilzadeh et al., MICRO'12) that both the paper and we use for the
+Fig. 8 speedup/energy estimates; see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps import functions as F
+from repro.core.mlp import MLPSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class App:
+    name: str
+    domain: str
+    fn: Callable[[jax.Array], jax.Array]          # exact target function
+    gen: Callable[[jax.Array, int], jax.Array]    # (key, n) -> inputs
+    approx_topo: str                              # Fig. 6 approximator topology
+    cls_topo: str                                 # Fig. 6 classifier topology (binary head)
+    n_in: int
+    n_out: int
+    error_bound: float                            # default quality requirement
+    err_kind: str                                 # "rmse_rel" | "class"
+    cpu_cycles: float                             # exact-path cost per call
+    n_train: int                                  # paper-scale training set size
+    n_test: int
+    in_lo: tuple = ()                             # input-normalization bounds
+    in_hi: tuple = ()
+
+    def normalize(self, x_raw: jax.Array) -> jax.Array:
+        """Map raw inputs into [-1, 1] for the neural networks."""
+        lo = jnp.asarray(self.in_lo, jnp.float32)
+        hi = jnp.asarray(self.in_hi, jnp.float32)
+        return (x_raw - lo) / (hi - lo) * 2.0 - 1.0
+
+    @property
+    def approx_spec(self) -> MLPSpec:
+        return MLPSpec.parse(self.approx_topo)
+
+    def cls_spec(self, n_classes: int = 2) -> MLPSpec:
+        """Classifier spec; the last layer widens for MCMA multiclass heads."""
+        sizes = MLPSpec.parse(self.cls_topo).sizes[:-1] + (n_classes,)
+        return MLPSpec(sizes=sizes, out_act="linear")
+
+
+def _uniform(lo, hi):
+    def gen(key, n):
+        lo_a = jnp.asarray(lo, jnp.float32)
+        hi_a = jnp.asarray(hi, jnp.float32)
+        return jax.random.uniform(key, (n, lo_a.shape[0]), jnp.float32) * (hi_a - lo_a) + lo_a
+    return gen
+
+
+def _gen_patches(key, n):
+    """Natural-image-like 3x3 patches: luminance ramp + small noise (sobel).
+
+    Pure-noise patches make the Sobel magnitude unlearnable for a 9->8->1
+    net; real image patches are locally smooth directional gradients.
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    base = jax.random.uniform(k1, (n, 1))
+    theta = jax.random.uniform(k2, (n, 1)) * 2 * jnp.pi
+    slope = jax.random.uniform(k3, (n, 1), minval=-0.4, maxval=0.4)
+    ii = jnp.arange(3.0) - 1
+    ramp = slope[:, 0, None, None] * (
+        ii[None, :, None] * jnp.cos(theta)[:, :, None]
+        + ii[None, None, :] * jnp.sin(theta)[:, :, None])
+    eps = jax.random.uniform(k4, (n, 3, 3), minval=-0.05, maxval=0.05)
+    return jnp.clip(base[:, :, None] + ramp + eps, 0.0, 1.0).reshape(n, 9)
+
+
+def _gen_blocks(key, n):
+    """8x8 blocks: DC level + 2 random low-frequency cosines + noise (jpeg)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    dc = jax.random.uniform(k1, (n, 1, 1))
+    fx = jax.random.randint(k2, (n, 2), 0, 4).astype(jnp.float32)
+    amp = jax.random.uniform(k3, (n, 2), minval=-0.3, maxval=0.3)
+    ii = jnp.arange(8.0)
+    wave = (amp[:, 0, None, None] * jnp.cos(jnp.pi * fx[:, 0, None, None] * ii[None, :, None] / 8.0)
+            + amp[:, 1, None, None] * jnp.cos(jnp.pi * fx[:, 1, None, None] * ii[None, None, :] / 8.0))
+    return jnp.clip(dc + wave, 0.0, 1.0).reshape(n, 64)
+
+
+def _gen_triangles(key, n):
+    """Triangle pairs with centers drawn close enough that ~half intersect."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    t1 = jax.random.uniform(k1, (n, 9), minval=-1.0, maxval=1.0)
+    offset = jax.random.uniform(k2, (n, 1, 3), minval=-0.8, maxval=0.8)
+    t2 = jax.random.uniform(k3, (n, 3, 3), minval=-1.0, maxval=1.0) * 0.9 + offset
+    return jnp.concatenate([t1, t2.reshape(n, 9)], axis=-1)
+
+
+APPS: dict[str, App] = {}
+
+
+def _register(app: App):
+    APPS[app.name] = app
+    return app
+
+
+_register(App("blackscholes", "Financial Analysis", F.blackscholes,
+              _uniform([0.5, 0.5, 0.0, 0.0, 0.05, 0.1], [1.5, 1.5, 0.1, 0.05, 0.5, 2.0]),
+              "6->8->1", "6->8->2", 6, 1, 0.05, "rmse_rel", 1000.0, 70_000, 30_000,
+              (0.5, 0.5, 0.0, 0.0, 0.05, 0.1), (1.5, 1.5, 0.1, 0.05, 0.5, 2.0)))
+_register(App("fft", "Signal Processing", F.fft_twiddle,
+              _uniform([0.0], [1.0]),
+              "1->2->2->2", "1->2->2", 1, 2, 0.10, "rmse_rel", 70.0, 8_000, 3_000,
+              (0.0,), (1.0,)))
+_register(App("inversek2j", "Robotics", F.inversek2j,
+              # reachable annulus-ish box for a (0.5, 0.5) arm
+              _uniform([0.05, 0.05], [0.9, 0.9]),
+              "2->8->2", "2->8->2", 2, 2, 0.05, "rmse_rel", 600.0, 70_000, 30_000,
+              (0.05, 0.05), (0.9, 0.9)))
+_register(App("jmeint", "3D gaming", F.jmeint,
+              _gen_triangles,
+              "18->32->16->2", "18->16->2", 18, 2, 0.05, "class", 1100.0, 70_000, 30_000,
+              (-1.8,) * 18, (1.8,) * 18))
+_register(App("jpeg", "Compression", F.jpeg_block,
+              _gen_blocks,
+              "64->16->64", "64->16->2", 64, 64, 0.05, "rmse_rel", 1300.0, 4_096, 4_096,
+              (0.0,) * 64, (1.0,) * 64))
+_register(App("kmeans", "Machine Learning", F.kmeans_dist,
+              _uniform([0.0] * 6, [1.0] * 6),
+              "6->8->4->1", "6->8->4->2", 6, 1, 0.05, "rmse_rel", 30.0, 100_000, 50_000,
+              (0.0,) * 6, (1.0,) * 6))
+_register(App("sobel", "Image Processing", F.sobel,
+              _gen_patches,
+              "9->8->1", "9->8->2", 9, 1, 0.05, "rmse_rel", 90.0, 4_096, 4_096,
+              (0.0,) * 9, (1.0,) * 9))
+_register(App("bessel", "Scientific Computing", F.bessel,
+              _uniform([0.0, 0.0], [5.0, 5.0]),
+              "2->4->4->1", "2->4->2", 2, 1, 0.05, "rmse_rel", 900.0, 70_000, 30_000,
+              (0.0, 0.0), (5.0, 5.0)))
+
+
+def get_app(name: str) -> App:
+    return APPS[name]
+
+
+def make_dataset(app: App, key: jax.Array, n_train: int | None = None,
+                 n_test: int | None = None):
+    """Generate (x_train, y_train, x_test, y_test) for an app.
+
+    Sizes default to the paper's (Fig. 6) but can be reduced for CI speed.
+    Inputs are returned NORMALIZED to [-1, 1] (what the networks consume);
+    targets are the exact function of the raw inputs.
+    """
+    n_train = n_train or app.n_train
+    n_test = n_test or app.n_test
+    k1, k2 = jax.random.split(key)
+    x_tr = app.gen(k1, n_train)
+    x_te = app.gen(k2, n_test)
+    return (app.normalize(x_tr), app.fn(x_tr),
+            app.normalize(x_te), app.fn(x_te))

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import all_steps, latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step", "all_steps"]

@@ -1,0 +1,138 @@
+"""Atomic, mesh-elastic checkpointing.
+
+* Arrays are host-gathered (fully addressable) and written as one .npz per
+  step plus a JSON manifest of the pytree structure — checkpoints carry NO
+  mesh/sharding information, so a run can restore onto a different device
+  count or mesh shape (elastic scaling; asserted in tests).
+* Writes are atomic: write to ``<dir>/tmp.<step>``, fsync, rename to
+  ``<dir>/step_<k>`` — a preempted writer never corrupts the latest
+  checkpoint (restart-safe).
+* keep_k garbage collection retains the newest k checkpoints.
+* Restore: load host arrays, then ``jax.device_put`` against the target
+  shardings (or plain arrays when no mesh is given).
+
+At real multi-pod scale the same layout extends to per-host shard files +
+a distributed barrier; on one host the gather is a no-op.  Bitwise resume
+is tested (tests/test_checkpoint.py): save@k -> restore -> train to n must
+equal uninterrupted train to n.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import numpy as np
+
+
+_EMPTY = "__empty_dict__"  # sentinel: empty subtree (e.g. non-param LN {})
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        if not tree:
+            out[prefix[:-1]] = _EMPTY
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        if not tree:
+            out[prefix[:-1]] = _EMPTY
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        is_sentinel = (isinstance(v, str) or
+                       (hasattr(v, "dtype") and v.dtype.kind == "U"))
+        node[parts[-1]] = {} if is_sentinel and str(v) == _EMPTY else v
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(re.fullmatch(r"\d+", k) for k in keys):
+            return [fix(node[str(i)]) for i in range(len(keys))]
+        return {k: fix(v) for k, v in node.items()}
+    return fix(root)
+
+
+def save(ckpt_dir: str, step: int, state, *, keep_k: int = 3) -> str:
+    flat = _flatten(state)
+    host = {k: (np.asarray(v) if isinstance(v, str)
+                else np.asarray(jax.device_get(v)))
+            for k, v in flat.items()}
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    # npz with sanitized names + manifest mapping
+    names = {k: f"a{i}" for i, k in enumerate(host)}
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{names[k]: v for k, v in host.items()})
+    manifest = {"step": step,
+                "paths": {k: {"name": names[k], "dtype": str(v.dtype),
+                              "shape": list(v.shape)}
+                          for k, v in host.items()}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep_k)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_k: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_k] if keep_k else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:09d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(ckpt_dir: str):
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None, *, shardings=None):
+    """Returns (state, step).  ``shardings``: optional pytree of
+    NamedShardings to place leaves onto (elastic restore)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k: arrays[meta["name"]]
+            for k, meta in manifest["paths"].items()}
+    state = _unflatten(flat)
+    if shardings is not None:
+        state = jax.tree.map(lambda a, s: jax.device_put(a, s), state, shardings)
+    return state, step

@@ -1,0 +1,107 @@
+"""Architecture registry: maps ``--arch`` ids to ModelConfigs, provides the
+reduced smoke variants and the dry-run input specs (ShapeDtypeStruct
+stand-ins, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.CONFIG
+
+
+def full_attention_only(cfg: ModelConfig) -> bool:
+    """True when the arch has no sub-quadratic path (long_500k is skipped)."""
+    return cfg.family in ("dense", "moe", "audio", "vlm") and not cfg.sliding_window
+
+
+def cells(arch: str):
+    """The (shape, step-kind) cells assigned to an arch, honoring skips."""
+    cfg = get_config(arch)
+    out = []
+    for name, sh in SHAPES.items():
+        if name == "long_500k" and full_attention_only(cfg):
+            continue  # noted in DESIGN.md §Arch-applicability
+        out.append(sh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reduced smoke variants (same family wiring, tiny dims, CPU-runnable)
+# ---------------------------------------------------------------------------
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    kv_ratio = max(1, cfg.n_heads // cfg.n_kv_heads)
+    n_heads = 4
+    ssm = dataclasses.replace(cfg.ssm, d_state=16, head_dim=16, chunk=32,
+                              slstm_every=2)
+    moe = dataclasses.replace(cfg.moe, n_experts=min(cfg.moe.n_experts, 4),
+                              top_k=min(cfg.moe.top_k, 2))
+    approx = dataclasses.replace(cfg.approx, n_approx=2, d_hidden=32)
+    if cfg.family == "ssm":
+        n_layers, attn_every = 4, 0
+    elif cfg.family == "hybrid":
+        n_layers, attn_every = 4, 2
+    else:
+        n_layers, attn_every = 2, 0
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, d_model=64, n_heads=n_heads,
+        n_kv_heads=max(1, n_heads // kv_ratio), head_dim=16,
+        d_ff=128 if cfg.d_ff else 0, vocab=512,
+        sliding_window=min(cfg.sliding_window, 32) if cfg.sliding_window else 0,
+        attn_every=attn_every, ssm=ssm, moe=moe, approx=approx,
+        param_dtype="float32", act_dtype="float32", remat=False,
+        q_block=32, kv_block=32)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (weak-type-correct, shardable, no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    train:   {"inputs", "labels"}
+    prefill: {"inputs"}
+    decode:  {"inputs", "cache"} — one new token against a seq_len cache.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if cfg.input_mode == "embeddings":
+        def inp(n):
+            return jax.ShapeDtypeStruct((b, n, cfg.d_model), cfg.adtype)
+    else:
+        def inp(n):
+            return jax.ShapeDtypeStruct((b, n), tok)
+
+    if shape.kind == "train":
+        return {"inputs": inp(s), "labels": jax.ShapeDtypeStruct((b, s), tok)}
+    if shape.kind == "prefill":
+        return {"inputs": inp(s)}
+    # decode: cache sized for the context length
+    from repro.models.model import init_cache  # late import (jax state)
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {"inputs": inp(1), "cache": cache}

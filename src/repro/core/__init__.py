@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — approximators, classifiers, co-training
+methods (one-pass / iterative / MCCA / MCMA), quality control, NPU cost
+model, and the ApproxFFN LM-scale generalization.
+"""
+from repro.core.mlp import MLPSpec, apply_mlp, init_mlp, mlp_logits, train_mlp
+from repro.core.onepass import BinaryPair, train_one_pass
+from repro.core.iterative import train_iterative
+from repro.core.mcca import MCCA, train_mcca
+from repro.core.mcma import MCMA, train_mcma
+from repro.core import npu_model, quality
+
+__all__ = [
+    "MLPSpec", "apply_mlp", "init_mlp", "mlp_logits", "train_mlp",
+    "BinaryPair", "train_one_pass", "train_iterative",
+    "MCCA", "train_mcca", "MCMA", "train_mcma", "npu_model", "quality",
+]

@@ -1,0 +1,83 @@
+"""MCCA — Multiple Cascaded Classifiers and Approximators (paper §III-B).
+
+Pair i+1 is trained on the residual inputs rejected by classifiers 1..i
+(category "C" selection inside each pair's iterative loop, per the paper).
+The cascade stops when a pair "cannot converge" — operationalized as the
+residual set dropping below ``min_frac`` of the data or ``max_pairs``.
+
+Runtime is cascaded: the first classifier that accepts wins; inputs rejected
+by every classifier go to the CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid circular import (apps imports core.mlp)
+    from repro.apps.registry import App
+from repro.core import quality
+from repro.core.mlp import balanced_weights, init_mlp, mlp_logits, train_mlp
+
+
+@dataclasses.dataclass
+class MCCA:
+    app: "App"
+    pairs: list  # list of (a_params, c_params)
+
+    def dispatch(self, x: jax.Array):
+        """Returns (dispatched mask, chosen pair index; -1 = CPU)."""
+        cspec = self.app.cls_spec(2)
+        choice = jnp.full(x.shape[0], -1, jnp.int32)
+        for i, (_, c) in enumerate(self.pairs):
+            accept = jnp.argmax(mlp_logits(c, x, cspec), -1) == 1
+            choice = jnp.where((choice < 0) & accept, i, choice)
+        return choice >= 0, choice
+
+    def evaluate(self, x: jax.Array, y: jax.Array) -> quality.Metrics:
+        aspec = self.app.approx_spec
+        errs = jnp.stack([quality.approx_errors(self.app, a, aspec, x, y)
+                          for a, _ in self.pairs])        # (n_pairs, n)
+        dispatched, choice = self.dispatch(x)
+        err_chosen = errs[jnp.maximum(choice, 0), jnp.arange(x.shape[0])]
+        return quality.confusion_metrics(self.app, dispatched, err_chosen,
+                                         errs.min(0), len(self.pairs), choice)
+
+    def classifiers_consulted(self, x: jax.Array) -> jax.Array:
+        """Mean number of classifier inferences per input (MCCA's serial cost)."""
+        _, choice = self.dispatch(x)
+        n = len(self.pairs)
+        return jnp.mean(jnp.where(choice >= 0, choice + 1, n).astype(jnp.float32))
+
+
+def train_mcca(app: "App", key: jax.Array, x, y, *, max_pairs: int = 3,
+               iters: int = 2, epochs: int = 1500, lr: float = 1e-2,
+               min_frac: float = 0.05) -> MCCA:
+    aspec, cspec = app.approx_spec, app.cls_spec(2)
+    pairs = []
+    residual = jnp.ones(x.shape[0], jnp.float32)
+    for p in range(max_pairs):
+        if float(jnp.mean(residual)) < min_frac:
+            break  # cascade "cannot converge" on too little data
+        kp, key = jax.random.split(key)
+        ka, kc = jax.random.split(kp)
+        a, c = init_mlp(ka, aspec), init_mlp(kc, cspec)
+        w = residual
+        for it in range(iters):
+            a = train_mlp(a, x, y, aspec, weights=w, epochs=epochs, lr=lr)
+            err = quality.approx_errors(app, a, aspec, x, y)
+            labels = ((err <= app.error_bound) & (residual > 0)).astype(jnp.int32)
+            c = train_mlp(c, x, labels, cspec, loss="xent",
+                          weights=residual * balanced_weights(labels, 2),
+                          epochs=epochs, lr=lr)
+            accept = jnp.argmax(mlp_logits(c, x, cspec), -1) == 1
+            # category "C" selection (paper: clusters, easier to separate)
+            w = (accept.astype(jnp.float32)) * residual
+            w = jnp.where(jnp.sum(w) < 8, residual, w)
+        pairs.append((a, c))
+        accept = jnp.argmax(mlp_logits(c, x, cspec), -1) == 1
+        residual = residual * (~accept).astype(jnp.float32)
+    return MCCA(app, pairs)

@@ -1,0 +1,151 @@
+"""MCMA — Multiclass-Classifier and Multiple Approximators (paper §III-C).
+
+One (n+1)-way classifier dispatches each input either to the approximator
+predicted safe (classes 0..n-1) or to the CPU (class n = "nC").  Two
+co-training data-allocation mechanisms:
+
+* complementary — approximators are initialized SERIALLY on residual data
+  (AdaBoost-flavored); iteration labels are produced by the FIRST
+  approximator that fits each sample under the bound.
+* competitive — all approximators train on ALL data from diversified
+  inits/hyper-params; the label is the argmin-error approximator (if under
+  the bound, else nC).
+
+After initialization both schemes iterate: train the multiclass classifier
+on the labels, re-partition the input space by the classifier's prediction
+(each approximator's "territory"), retrain each approximator on its
+territory, regenerate labels.  Invocation history per iteration reproduces
+Fig. 9.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid circular import (apps imports core.mlp)
+    from repro.apps.registry import App
+from repro.core import quality
+from repro.core.mlp import init_mlp, mlp_logits, train_mlp
+
+
+@dataclasses.dataclass
+class MCMA:
+    app: "App"
+    a_params: list          # n approximator param pytrees (identical topology)
+    c_params: object        # multiclass classifier params
+    history: list           # per-iteration invocation on the training set
+    scheme: str
+
+    @property
+    def n_approx(self) -> int:
+        return len(self.a_params)
+
+    def classify(self, x: jax.Array) -> jax.Array:
+        """(n,) int class per input; == n_approx means nC (CPU)."""
+        cspec = self.app.cls_spec(self.n_approx + 1)
+        return jnp.argmax(mlp_logits(self.c_params, x, cspec), -1)
+
+    def approximator_errors(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        aspec = self.app.approx_spec
+        return jnp.stack([quality.approx_errors(self.app, a, aspec, x, y)
+                          for a in self.a_params])  # (n_approx, n)
+
+    def evaluate(self, x: jax.Array, y: jax.Array) -> quality.Metrics:
+        errs = self.approximator_errors(x, y)
+        cls = self.classify(x)
+        dispatched = cls < self.n_approx
+        err_chosen = errs[jnp.minimum(cls, self.n_approx - 1), jnp.arange(x.shape[0])]
+        return quality.confusion_metrics(self.app, dispatched, err_chosen,
+                                         errs.min(0), self.n_approx, cls)
+
+
+def _labels_complementary(errs: jax.Array, bound: float,
+                          prev: jax.Array | None = None) -> jax.Array:
+    """First approximator under the bound wins; else nC (= n_approx)."""
+    n_approx = errs.shape[0]
+    safe = errs <= bound                                    # (n_approx, n)
+    first = jnp.argmax(safe, axis=0)                        # first True (0 if none)
+    any_safe = jnp.any(safe, axis=0)
+    return jnp.where(any_safe, first, n_approx).astype(jnp.int32)
+
+
+def _labels_competitive(errs: jax.Array, bound: float,
+                        prev: jax.Array | None = None) -> jax.Array:
+    """Lowest-error approximator wins if under the bound; else nC.
+
+    With ``prev`` labels, ties are sticky (hysteresis): a sample only
+    changes owner when the challenger beats the incumbent by 20% of the
+    bound.  This is the paper's "bias of each approximator is reinforced" —
+    without it, near-ties churn between owners every iteration and the
+    classifier chases moving targets.
+    """
+    n_approx = errs.shape[0]
+    if prev is not None:
+        owner = jax.nn.one_hot(prev, n_approx + 1, axis=0)[:n_approx]  # (n_approx, n)
+        errs = errs - 0.2 * bound * owner
+    best = jnp.argmin(errs, axis=0)
+    return jnp.where(errs.min(0) <= bound, best, n_approx).astype(jnp.int32)
+
+
+from repro.core.mlp import balanced_weights as _balanced_weights  # noqa: E402
+
+
+def train_mcma(app: "App", key: jax.Array, x, y, *, n_approx: int = 3,
+               scheme: str = "competitive", iters: int = 5,
+               epochs: int = 1500, lr: float = 1e-2) -> MCMA:
+    assert scheme in ("competitive", "complementary")
+    aspec = app.approx_spec
+    cspec = app.cls_spec(n_approx + 1)
+    keys = jax.random.split(key, n_approx + 1)
+    kc, kas = keys[0], keys[1:]
+
+    # ----- initialization pass ---------------------------------------------
+    a_params = []
+    if scheme == "complementary":
+        residual = jnp.ones(x.shape[0], jnp.float32)
+        for i in range(n_approx):
+            a = init_mlp(kas[i], aspec)
+            a = train_mlp(a, x, y, aspec, weights=residual, epochs=epochs, lr=lr)
+            err = quality.approx_errors(app, a, aspec, x, y)
+            residual = residual * (err > app.error_bound).astype(jnp.float32)
+            residual = jnp.where(jnp.sum(residual) < 8, jnp.ones_like(residual) * 0.05,
+                                 residual)
+            a_params.append(a)
+    else:  # competitive: diversified hyper-params reach different local minima
+        for i in range(n_approx):
+            a = init_mlp(kas[i], aspec, scale=0.3 * (i + 1))
+            a = train_mlp(a, x, y, aspec, epochs=epochs, lr=lr * (0.5 + 0.5 * i))
+            a_params.append(a)
+
+    label_fn = _labels_complementary if scheme == "complementary" else _labels_competitive
+    c = init_mlp(kc, cspec)
+    history = []
+    labels = None
+
+    # ----- iterative co-training -------------------------------------------
+    for it in range(iters):
+        errs = jnp.stack([quality.approx_errors(app, a, aspec, x, y) for a in a_params])
+        labels = label_fn(errs, app.error_bound, labels)
+        c = train_mlp(c, x, labels, cspec, loss="xent", epochs=epochs, lr=lr,
+                      weights=_balanced_weights(labels, n_approx + 1))
+        pred = jnp.argmax(mlp_logits(c, x, cspec), -1)
+        history.append(float(jnp.mean(pred < n_approx)))
+        if it == iters - 1:
+            break
+        # The classifier partitions the input space into n+1 territories and
+        # each approximator retrains on its own territory.  A sample also
+        # keeps a small weight with its *current* owner (err under bound) so
+        # a noisy classifier round cannot erase an approximator's competence.
+        new_params = []
+        for i, a in enumerate(a_params):
+            w = ((pred == i).astype(jnp.float32)
+                 + 0.25 * (errs[i] <= app.error_bound).astype(jnp.float32))
+            w = jnp.where(jnp.sum(w) < 8, 0.05 * jnp.ones_like(w), w)
+            new_params.append(train_mlp(a, x, y, aspec, weights=w, epochs=epochs, lr=lr))
+        a_params = new_params
+
+    return MCMA(app, a_params, c, history, scheme)

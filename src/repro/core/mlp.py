@@ -1,0 +1,153 @@
+"""Small MLP substrate used by approximators and classifiers.
+
+The paper trains multilayer perceptrons with backpropagation + RMSprop for
+1500 epochs.  Topologies come from Fig. 6 (e.g. ``6->8->1`` for the
+Black-Scholes approximator).  Everything here is pure-functional JAX:
+``init`` returns a parameter pytree, ``apply`` maps ``(params, x) -> y``.
+
+Training whole runs are a single ``jax.lax.scan`` over epochs so a 1500-epoch
+paper-faithful run costs one XLA dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = list  # list of {"w": (in, out), "b": (out,)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    """Topology spec: ``sizes=(6, 8, 1)`` means 6->8->1."""
+
+    sizes: tuple
+    # The NPU's activation unit is sigmoid-family; we default to tanh (a
+    # rescaled sigmoid) which trains markedly better on normalized inputs.
+    hidden_act: str = "tanh"
+    out_act: str = "linear"      # regression output by default
+
+    @staticmethod
+    def parse(topo: str, **kw) -> "MLPSpec":
+        """Parse a paper-style topology string like ``"6->8->1"``."""
+        sizes = tuple(int(t) for t in topo.replace(" ", "").split("->"))
+        return MLPSpec(sizes=sizes, **kw)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.sizes) - 1
+
+    @property
+    def n_macs(self) -> int:
+        """Multiply-accumulates per forward pass (used by the NPU cost model)."""
+        return int(sum(a * b for a, b in zip(self.sizes[:-1], self.sizes[1:])))
+
+    @property
+    def n_params(self) -> int:
+        return int(sum(a * b + b for a, b in zip(self.sizes[:-1], self.sizes[1:])))
+
+
+_ACTS: dict = {
+    "sigmoid": jax.nn.sigmoid,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "linear": lambda x: x,
+    "gelu": jax.nn.gelu,
+}
+
+
+def init_mlp(key: jax.Array, spec: MLPSpec, dtype=jnp.float32, scale: float | None = None) -> Params:
+    """Glorot-uniform init; ``scale`` overrides the per-layer fan-based scale
+    (used by competitive co-training to diversify local minima)."""
+    params = []
+    keys = jax.random.split(key, spec.n_layers)
+    for k, (fan_in, fan_out) in zip(keys, zip(spec.sizes[:-1], spec.sizes[1:])):
+        s = scale if scale is not None else (6.0 / (fan_in + fan_out)) ** 0.5
+        w = jax.random.uniform(k, (fan_in, fan_out), dtype, -s, s)
+        params.append({"w": w, "b": jnp.zeros((fan_out,), dtype)})
+    return params
+
+
+def apply_mlp(params: Params, x: jax.Array, spec: MLPSpec) -> jax.Array:
+    """Forward pass. ``x``: (..., in_features) -> (..., out_features)."""
+    h = x
+    hidden = _ACTS[spec.hidden_act]
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = hidden(h)
+    return _ACTS[spec.out_act](h)
+
+
+def mlp_logits(params: Params, x: jax.Array, spec: MLPSpec) -> jax.Array:
+    """Forward pass returning pre-output-activation logits (for classifiers)."""
+    h = x
+    hidden = _ACTS[spec.hidden_act]
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = hidden(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# RMSprop training (paper setup), full-run scan.
+# ---------------------------------------------------------------------------
+
+def _rmsprop_update(params, grads, ms, lr, decay=0.9, eps=1e-8):
+    new_ms = jax.tree.map(lambda m, g: decay * m + (1 - decay) * g * g, ms, grads)
+    new_p = jax.tree.map(lambda p, g, m: p - lr * g / (jnp.sqrt(m) + eps), params, grads, new_ms)
+    return new_p, new_ms
+
+
+def mse_loss(params, x, y, spec, weights=None):
+    pred = apply_mlp(params, x, spec)
+    err = jnp.sum((pred - y) ** 2, axis=-1)
+    if weights is None:
+        return jnp.mean(err)
+    # Weighted mean: lets callers mask out samples outside a territory while
+    # keeping shapes static (crucial for jit).
+    return jnp.sum(err * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def xent_loss(params, x, labels, spec, weights=None):
+    logits = mlp_logits(params, x, spec)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if weights is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def balanced_weights(labels: jax.Array, n_classes: int) -> jax.Array:
+    """Inverse-frequency sample weights (mean 1) so minority classes train."""
+    counts = jnp.bincount(labels, length=n_classes).astype(jnp.float32)
+    w = 1.0 / jnp.maximum(counts, 1.0)
+    w = w / jnp.sum(w * counts) * labels.shape[0]
+    return w[labels]
+
+
+@partial(jax.jit, static_argnames=("spec", "loss", "epochs", "lr"))
+def train_mlp(params: Params, x: jax.Array, y: jax.Array, spec: MLPSpec, *,
+              weights: jax.Array | None = None, loss: str = "mse",
+              epochs: int = 1500, lr: float = 1e-2) -> Params:
+    """Full-batch RMSprop for ``epochs`` steps (paper: RMSprop, epoch=1500).
+
+    ``weights`` is an optional per-sample mask/weight vector; masked-out
+    samples contribute zero gradient, which is how territories are selected
+    without dynamic shapes.
+    """
+    loss_fn = mse_loss if loss == "mse" else xent_loss
+    ms = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, _):
+        p, m = carry
+        g = jax.grad(loss_fn)(p, x, y, spec, weights)
+        p, m = _rmsprop_update(p, g, m, lr)
+        return (p, m), None
+
+    (params, _), _ = jax.lax.scan(step, (params, ms), None, length=epochs)
+    return params

@@ -1,0 +1,51 @@
+"""One-pass baseline [Mahajan et al., ISCA'16]:
+
+Train the approximator once on ALL data; derive safe/unsafe labels from its
+errors; train a binary classifier on those labels.  No iteration — the A<->C
+correlation is ignored (paper §II-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid circular import (apps imports core.mlp)
+    from repro.apps.registry import App
+from repro.core import quality
+from repro.core.mlp import (MLPSpec, Params, apply_mlp, balanced_weights,
+                            init_mlp, mlp_logits, train_mlp)
+
+
+@dataclasses.dataclass
+class BinaryPair:
+    """A trained (approximator, binary classifier) pair."""
+
+    app: "App"
+    a_params: Params
+    c_params: Params
+
+    def dispatch(self, x: jax.Array) -> jax.Array:
+        """True where the classifier accepts the input (class 1 = safe)."""
+        logits = mlp_logits(self.c_params, x, self.app.cls_spec(2))
+        return jnp.argmax(logits, -1) == 1
+
+    def evaluate(self, x: jax.Array, y: jax.Array) -> quality.Metrics:
+        err = quality.approx_errors(self.app, self.a_params, self.app.approx_spec, x, y)
+        return quality.confusion_metrics(self.app, self.dispatch(x), err, err, 1)
+
+
+def train_one_pass(app: "App", key: jax.Array, x, y, *, epochs: int = 1500,
+                   lr: float = 1e-2) -> BinaryPair:
+    ka, kc = jax.random.split(key)
+    a0 = init_mlp(ka, app.approx_spec)
+    a = train_mlp(a0, x, y, app.approx_spec, epochs=epochs, lr=lr)
+    err = quality.approx_errors(app, a, app.approx_spec, x, y)
+    labels = (err <= app.error_bound).astype(jnp.int32)
+    c0 = init_mlp(kc, app.cls_spec(2))
+    c = train_mlp(c0, x, labels, app.cls_spec(2), loss="xent", epochs=epochs,
+                  lr=lr, weights=balanced_weights(labels, 2))
+    return BinaryPair(app, a, c)

@@ -1,0 +1,81 @@
+"""Quality control: per-sample approximation error, safe-to-approximate
+labels, and the invocation/error/confusion metrics of Fig. 7 and Fig. 11.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid circular import (apps imports core.mlp)
+    from repro.apps.registry import App
+from repro.core.mlp import MLPSpec, Params, apply_mlp
+
+
+def per_sample_error(app: "App", y_pred: jax.Array, y_true: jax.Array) -> jax.Array:
+    """Per-sample error, comparable against ``app.error_bound``.
+
+    * ``rmse_rel``: per-sample RMSE over output dims, normalized by the
+      GLOBAL output RMS of the batch.  A per-sample denominator would make
+      near-zero outputs unapproximable by definition; the paper's benchmarks
+      (Fig. 10b "relative error") are scale-relative, not pointwise-relative.
+    * ``class``: 0/1 misclassification (jmeint).
+    """
+    if app.err_kind == "class":
+        return (jnp.argmax(y_pred, -1) != jnp.argmax(y_true, -1)).astype(jnp.float32)
+    se = jnp.mean((y_pred - y_true) ** 2, axis=-1)
+    denom = jnp.sqrt(jnp.mean(y_true ** 2))
+    return jnp.sqrt(se) / jnp.maximum(denom, 1e-6)
+
+
+def approx_errors(app: "App", params: Params, spec: MLPSpec, x, y) -> jax.Array:
+    return per_sample_error(app, apply_mlp(params, x, spec), y)
+
+
+@dataclasses.dataclass
+class Metrics:
+    """Runtime metrics for one method on one app (test set)."""
+
+    invocation: float        # fraction of inputs dispatched to an approximator
+    err_norm: float          # mean error of dispatched samples / error bound
+    true_invocation: float   # AC fraction (dispatched AND truly safe)
+    recall: float            # AC / (AC + AnC) — how much safe data we salvage
+    false_neg: float         # AnC: safe data abandoned to the CPU
+    false_pos: float         # nAC: unsafe data wrongly dispatched
+    dispatch_frac: list      # per-approximator share of dispatched inputs
+
+    def row(self) -> str:
+        return (f"inv={self.invocation:.3f} err/bound={self.err_norm:.3f} "
+                f"AC={self.true_invocation:.3f} recall={self.recall:.3f} "
+                f"AnC={self.false_neg:.3f} nAC={self.false_pos:.3f}")
+
+
+def confusion_metrics(app: "App", dispatched: jax.Array, err_dispatched: jax.Array,
+                      err_best: jax.Array, n_approx: int,
+                      choice: jax.Array | None = None) -> Metrics:
+    """Build Metrics from runtime decisions.
+
+    ``dispatched``: bool (n,) — classifier sent the input to an approximator.
+    ``err_dispatched``: error of the *chosen* approximator per sample.
+    ``err_best``: error of the best available approximator per sample (defines
+    ground-truth "safe" = any approximator could have fit it).
+    """
+    bound = app.error_bound
+    safe = err_best <= bound
+    inv = jnp.mean(dispatched)
+    ac = jnp.mean(dispatched & (err_dispatched <= bound))
+    anc = jnp.mean(~dispatched & safe)
+    nac = jnp.mean(dispatched & (err_dispatched > bound))
+    denom = jnp.maximum(ac + anc, 1e-9)
+    err_n = jnp.sum(jnp.where(dispatched, err_dispatched, 0.0)) / jnp.maximum(
+        jnp.sum(dispatched), 1.0) / bound
+    if choice is None:
+        frac = [float(inv)]
+    else:
+        tot = jnp.maximum(jnp.sum(dispatched), 1.0)
+        frac = [float(jnp.sum(dispatched & (choice == i)) / tot) for i in range(n_approx)]
+    return Metrics(float(inv), float(err_n), float(ac), float(ac / denom),
+                   float(anc), float(nac), frac)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, batch_at
+
+__all__ = ["SyntheticLM", "batch_at"]

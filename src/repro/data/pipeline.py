@@ -1,0 +1,68 @@
+"""Deterministic, seekable, shardable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) — ``batch_at(step)`` —
+so restarts replay NO data and need NO pipeline checkpointing: after
+restoring model state at step k, training resumes with batch_at(k) and the
+run is bitwise identical to an uninterrupted one (asserted in
+tests/test_checkpoint.py).  Per-host slicing for multi-host clusters takes
+``host_id``/``n_hosts`` and generates only the local rows from the same
+global key stream (no cross-host coordination).
+
+The stream is a Zipf-ish token mixture with a Markov backbone — enough
+statistical structure for a ~100M model's loss to drop visibly in a few
+hundred steps (examples/train_lm_mcma.py), while remaining fully
+synthetic/offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+    def batch_at(self, step: int) -> dict:
+        return batch_at(self, step)
+
+
+def _markov_tokens(key, batch, seq_len, vocab):
+    """Zipf marginals + first-order Markov structure (learnable bigrams)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Zipf-ish marginal via exponential transform of uniforms
+    u = jax.random.uniform(k1, (batch, seq_len), minval=1e-6)
+    ranks = jnp.floor(jnp.exp(u * jnp.log(float(vocab)))) - 1.0
+    base = ranks.astype(jnp.int32) % vocab
+    # Markov backbone: with p=0.5, token t+1 = f(token t) (a fixed affine
+    # map over the vocab), else the Zipf draw — gives the model bigram
+    # structure worth ~1 nat of loss to learn.
+    follow = jax.random.bernoulli(k2, 0.5, (batch, seq_len))
+    shift = jax.random.randint(k3, (), 1, 977)
+
+    def step(prev, xs):
+        tok, fol = xs
+        nxt = jnp.where(fol, (prev * 31 + shift) % vocab, tok)
+        return nxt, nxt
+    _, toks = jax.lax.scan(step, base[:, 0], (base.T, follow.T))
+    return toks.T
+
+
+def batch_at(ds: SyntheticLM, step: int) -> dict:
+    """{"inputs": (local_B, S) int32, "labels": (local_B, S) int32}."""
+    key = jax.random.fold_in(jax.random.PRNGKey(ds.seed), step)
+    key = jax.random.fold_in(key, ds.host_id)
+    toks = _markov_tokens(key, ds.local_batch, ds.seq_len + 1, ds.vocab)
+    return {"inputs": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the MCMA hot paths.
+
+mcma_mlp:     fused 2-layer approximator MLP (VMEM-resident weights).
+switched_mlp: multi-approximator weight switch via scalar-prefetch grouped
+              matmul (the paper's NPU weight-buffer swap, TPU-native).
+ops:          jit'd wrappers (padding, class grouping, scatter-back).
+ref:          pure-jnp oracles defining kernel semantics.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

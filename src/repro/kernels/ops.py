@@ -1,0 +1,93 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities kept OUT of the kernels:
+  * padding feature dims to lane multiples (128) and rows to tile multiples;
+  * sorting rows by classifier class and building the per-tile class index
+    (every tile must be single-class for the weight switch);
+  * scattering results back to the original row order.
+
+Zero-padding is semantics-preserving for a tanh MLP (tanh(0) = 0 contributes
+nothing through zero weight columns).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import mcma_mlp, switched_mlp
+
+LANE = 128
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def mlp_apply(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+              b2: jax.Array, *, block_t: int = 256,
+              interpret: bool = False) -> jax.Array:
+    """Fused approximator MLP on arbitrary (T, d_in) inputs."""
+    t, d_in = x.shape
+    d_h, d_out = w1.shape[1], w2.shape[1]
+    tp, d_in_p = _pad_to(max(t, 1), block_t), _pad_to(d_in, LANE)
+    d_h_p, d_out_p = _pad_to(d_h, LANE), _pad_to(d_out, LANE)
+    y = mcma_mlp.mlp_forward(
+        _pad2(x, tp, d_in_p), _pad2(w1, d_in_p, d_h_p),
+        jnp.pad(b1, (0, d_h_p - d_h)), _pad2(w2, d_h_p, d_out_p),
+        jnp.pad(b2, (0, d_out_p - d_out)), block_t=block_t, interpret=interpret)
+    return y[:t, :d_out]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
+                   w2: jax.Array, b2: jax.Array, *, block_t: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """MCMA dispatch: row t is evaluated under approximator cls[t].
+
+    x: (T, d_in); cls: (T,) int32 in [0, n).  Rows are grouped by class into
+    single-class tiles (worst-case padding: one partial tile per class), the
+    switched kernel runs over the padded buffer, and results scatter back.
+    """
+    t, d_in = x.shape
+    n = w1.shape[0]
+    d_h, d_out = w1.shape[2], w2.shape[2]
+    d_in_p, d_h_p, d_out_p = (_pad_to(d_in, LANE), _pad_to(d_h, LANE),
+                              _pad_to(d_out, LANE))
+    t_pad = _pad_to(t + n * block_t, block_t)  # static worst case
+
+    # --- group rows by class (stable sort keeps cache-friendly order) ------
+    order = jnp.argsort(cls, stable=True)
+    cls_sorted = cls[order]
+    sizes = jnp.bincount(cls, length=n)                       # (n,)
+    padded_sizes = (sizes + block_t - 1) // block_t * block_t
+    padded_off = jnp.concatenate([jnp.zeros(1, sizes.dtype),
+                                  jnp.cumsum(padded_sizes)])  # (n+1,)
+    start = jnp.concatenate([jnp.zeros(1, sizes.dtype), jnp.cumsum(sizes)])
+    rank = jnp.arange(t) - start[cls_sorted]                  # rank within class
+    pos = padded_off[cls_sorted] + rank                       # padded position
+
+    xp = jnp.zeros((t_pad, d_in_p), x.dtype).at[pos, :d_in].set(x[order])
+
+    # --- per-tile class ------------------------------------------------------
+    tile_starts = jnp.arange(t_pad // block_t) * block_t
+    tile_cls = jnp.clip(
+        jnp.searchsorted(padded_off[1:], tile_starts, side="right"), 0, n - 1
+    ).astype(jnp.int32)
+
+    w1p = jnp.pad(w1, ((0, 0), (0, d_in_p - d_in), (0, d_h_p - d_h)))
+    b1p = jnp.pad(b1, ((0, 0), (0, d_h_p - d_h)))[:, None, :]
+    w2p = jnp.pad(w2, ((0, 0), (0, d_h_p - d_h), (0, d_out_p - d_out)))
+    b2p = jnp.pad(b2, ((0, 0), (0, d_out_p - d_out)))[:, None, :]
+
+    yp = switched_mlp.switched_mlp(xp, tile_cls, w1p, b1p, w2p, b2p,
+                                   block_t=block_t, interpret=interpret)
+    # --- scatter back to original order -------------------------------------
+    y_sorted = yp[pos, :d_out]
+    return jnp.zeros((t, d_out), x.dtype).at[order].set(y_sorted)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels must match (assert_allclose in
+tests/test_kernels.py).  Shapes are the UNPADDED logical shapes; the ops.py
+wrappers are responsible for padding/alignment before calling the kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_forward_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                    w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Fused 2-layer MLP: tanh(x @ w1 + b1) @ w2 + b2.
+
+    x: (T, d_in); w1: (d_in, d_h); w2: (d_h, d_out).
+    Accumulation is f32 regardless of input dtype (MXU semantics).
+    """
+    h = jnp.tanh(jnp.dot(x.astype(jnp.float32), w1.astype(jnp.float32))
+                 + b1.astype(jnp.float32))
+    y = jnp.dot(h, w2.astype(jnp.float32)) + b2.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def switched_mlp_ref(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
+                     w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Per-row approximator selection (the MCMA weight switch).
+
+    x: (T, d_in); cls: (T,) int32 in [0, n_approx);
+    w1: (n, d_in, d_h); b1: (n, d_h); w2: (n, d_h, d_out); b2: (n, d_out).
+    Row t is evaluated under approximator cls[t]'s weights.
+    """
+    w1t = w1[cls]                      # (T, d_in, d_h) gather
+    b1t = b1[cls]
+    w2t = w2[cls]
+    b2t = b2[cls]
+    h = jnp.tanh(jnp.einsum("ti,tih->th", x.astype(jnp.float32),
+                            w1t.astype(jnp.float32)) + b1t.astype(jnp.float32))
+    y = jnp.einsum("th,tho->to", h, w2t.astype(jnp.float32)) + b2t.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def slstm_scan_ref(xg, wh, h0, c0, n0, m0, clamp=8.0):
+    """Oracle for the sLSTM recurrence kernel (kernels/slstm_scan.py).
+
+    xg: (S, B, H, 4*hd) f32 gate pre-activations (order [z|i|f|o] per head);
+    wh: (H, hd, 4*hd); states: (B, H, hd) f32.
+    """
+    s, b, h, hd4 = xg.shape
+    hd = hd4 // 4
+
+    def cell(carry, xg_t):
+        hp, cp, np_, mp = carry
+        rec = jnp.einsum("bhi,hio->bho", hp, wh.astype(jnp.float32))
+        g = xg_t + rec
+        gz, gi, gf, go = (g[..., :hd], g[..., hd:2 * hd],
+                          g[..., 2 * hd:3 * hd], g[..., 3 * hd:])
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        log_f = jax.nn.log_sigmoid(gf)
+        i_pre = jnp.minimum(gi, clamp)
+        m = jnp.maximum(log_f + mp, i_pre)
+        i_s = jnp.exp(i_pre - m)
+        f_s = jnp.exp(log_f + mp - m)
+        c = f_s * cp + i_s * z
+        n = f_s * np_ + i_s
+        hn = o * c / jnp.maximum(n, 1e-6)
+        return (hn, c, n, m), hn
+
+    (hf, cf, nf, mf), ys = jax.lax.scan(cell, (h0, c0, n0, m0), xg)
+    return ys, (hf, cf, nf, mf)

@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: the sLSTM recurrence with VMEM-resident state.
+
+The sLSTM is truly sequential (h_{t-1} feeds the gates through a
+block-diagonal recurrent matmul), so XLA lowers it to a 4096-iteration
+while loop whose tiny (B, H, hd) carries and ~30 per-step fusions bounce
+through HBM every step — measured as the dominant HBM term of the
+xlstm-1.3b train cell (EXPERIMENTS.md §Perf A).
+
+This kernel runs the WHOLE time loop as a sequential Pallas grid:
+  * grid = (S,); TPU executes grid steps in order on one core, so VMEM
+    scratch persists across steps — the recurrent state (h, c, n, m) lives
+    in VMEM for the entire sequence;
+  * per step the kernel streams one xg block (the input-side gate
+    pre-activations, precomputed as one big matmul OUTSIDE the kernel) and
+    writes one output block — HBM traffic collapses to one read + one
+    write of the sequence;
+  * the recurrent weights (H, hd, 4*hd) stay resident (index_map -> 0).
+
+VMEM budget (xlstm-1.3b: B_tile=8, H=4, hd=512, bf16 weights):
+  wh 8.4 MiB + xg block 0.26 MiB + 4 state scratches 0.26 MiB + out block
+  ~0.07 MiB  ==  ~9 MiB  (< 16 MiB/core v5e VMEM).
+
+Stabilized cell (matches models/xlstm.py::_slstm_cell):
+  z = tanh(gz)   o = sigmoid(go)
+  m' = max(log_sigmoid(gf) + m, min(gi, CLAMP))
+  c' = exp(log_sigmoid(gf) + m - m') c + exp(min(gi, CLAMP) - m') z
+  n' = exp(log_sigmoid(gf) + m - m') n + exp(min(gi, CLAMP) - m')
+  h' = o * c' / max(n', 1e-6)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+I_CLAMP = 8.0
+
+
+def _slstm_kernel(xg_ref, wh_ref, h0_ref, c0_ref, n0_ref, m0_ref,
+                  y_ref, hf_ref, cf_ref, nf_ref, mf_ref,
+                  h_scr, c_scr, n_scr, m_scr):
+    t = pl.program_id(0)
+    s = pl.num_programs(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+        c_scr[...] = c0_ref[...]
+        n_scr[...] = n0_ref[...]
+        m_scr[...] = m0_ref[...]
+
+    h = h_scr[...]                                   # (B, H, hd) f32
+    hd = h.shape[-1]
+    # block-diagonal recurrent matmul, f32 accumulation on the MXU
+    rec = jax.lax.dot_general(
+        h.astype(wh_ref.dtype), wh_ref[...],
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32)          # (H, B, 4*hd)
+    rec = rec.transpose(1, 0, 2)                     # (B, H, 4*hd)
+    g = xg_ref[0] + rec                              # (B, H, 4*hd) f32
+
+    gz, gi, gf, go = (g[..., :hd], g[..., hd:2 * hd],
+                      g[..., 2 * hd:3 * hd], g[..., 3 * hd:])
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    log_f = jax.nn.log_sigmoid(gf)
+    i_pre = jnp.minimum(gi, I_CLAMP)
+    m = m_scr[...]
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c = f_s * c_scr[...] + i_s * z
+    n = f_s * n_scr[...] + i_s
+    h_new = o * c / jnp.maximum(n, 1e-6)
+
+    y_ref[0] = h_new.astype(y_ref.dtype)
+    h_scr[...] = h_new
+    c_scr[...] = c
+    n_scr[...] = n
+    m_scr[...] = m_new
+
+    @pl.when(t == s - 1)
+    def _final():
+        hf_ref[...] = h_new
+        cf_ref[...] = c
+        nf_ref[...] = n
+        mf_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slstm_scan(xg: jax.Array, wh: jax.Array, h0, c0, n0, m0, *,
+               interpret: bool = False):
+    """Run the sLSTM over a sequence.
+
+    xg: (S, B, H, 4*hd) f32 — input-side gate pre-activations (incl. bias);
+    wh: (H, hd, 4*hd) recurrent weights; h0/c0/n0/m0: (B, H, hd) f32.
+    Returns (ys (S, B, H, hd) f32, (hf, cf, nf, mf)).
+    """
+    s, b, h, hd4 = xg.shape
+    hd = hd4 // 4
+    state_shape = jax.ShapeDtypeStruct((b, h, hd), jnp.float32)
+    out_shape = (jax.ShapeDtypeStruct((s, b, h, hd), jnp.float32),
+                 state_shape, state_shape, state_shape, state_shape)
+    grid = (s,)
+    res = pl.pallas_call(
+        _slstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b, h, hd4), lambda t: (t, 0, 0, 0)),
+            pl.BlockSpec((h, hd, hd4), lambda t: (0, 0, 0)),   # resident
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, b, h, hd), lambda t: (t, 0, 0, 0)),
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+            pl.BlockSpec((b, h, hd), lambda t: (0, 0, 0)),
+        ),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((b, h, hd), jnp.float32)
+                        for _ in range(4)],
+        interpret=interpret,
+    )(xg, wh, h0, c0, n0, m0)
+    ys, hf, cf, nf, mf = res
+    return ys, (hf, cf, nf, mf)
+
+
+# ---------------------------------------------------------------------------
+# Trainable wrapper: Pallas forward, reference-recompute backward.
+# Pallas kernels carry no autodiff rules; the standard recipe is a
+# custom_vjp whose backward re-runs the (differentiable) reference scan and
+# pulls cotangents through it — forward gets the VMEM win, backward costs
+# what the XLA path always cost (recompute included, like remat).
+# ---------------------------------------------------------------------------
+
+import functools as _functools
+
+from repro.kernels import ref as _ref
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def slstm_scan_trainable(xg, wh, h0, c0, n0, m0, interpret=False):
+    return slstm_scan(xg, wh, h0, c0, n0, m0, interpret=interpret)
+
+
+def _fwd(xg, wh, h0, c0, n0, m0, interpret):
+    out = slstm_scan(xg, wh, h0, c0, n0, m0, interpret=interpret)
+    return out, (xg, wh, h0, c0, n0, m0)
+
+
+def _bwd(interpret, res, cot):
+    _, vjp = jax.vjp(lambda *a: _ref.slstm_scan_ref(*a), *res)
+    return vjp(cot)
+
+
+slstm_scan_trainable.defvjp(_fwd, _bwd)

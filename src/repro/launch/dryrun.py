@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count on first init.  Everything below is ordinary code.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline inputs from the compiled
+artifact (no device allocation — inputs are ShapeDtypeStructs).
+
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --mesh multi
+    python -m repro.launch.dryrun --all            # sweep, one subprocess per cell
+
+Per cell this writes runs/dryrun/<arch>__<shape>__<mesh>[__tag].json with:
+  memory_analysis   (per-chip bytes: args/outputs/temps/alias)
+  cost_analysis     (per-chip HLO flops + bytes accessed)
+  collectives       (wire-bytes per chip by op kind, ring cost model,
+                     pod-crossing bytes counted separately)
+  model_flops       (6*N*D train / 2*N*D forward, N = active params)
+  timings           (lower/compile wall seconds)
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "runs", "dryrun")
+
+def _count_params(tree) -> int:
+    import jax
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "size"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             approx: bool = False, act_shard: str = "",
+             tag: str = "") -> dict:
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config, input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import init_cache
+    from repro.runtime import steps as S
+    from repro.sharding import activations as A
+    from repro.sharding import rules as R
+
+    cfg = get_config(arch)
+    if approx:
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, enable=True))
+    act_shard = act_shard or cfg.act_shard
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    pod_boundary = 256 if mesh_kind == "multi" else None
+    specs = input_specs(cfg, shape)
+
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "chips": int(n_chips), "approx": approx, "act_shard": act_shard,
+              "ok": False}
+
+    ns = lambda spec: jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    dp = ("pod", "data") if mesh_kind == "multi" else ("data",)
+    act_spec = {"dp": P(dp, None, None), "sp": P(dp, "model", None),
+                "fp": P(dp, None, "model"), "none": None}[act_shard]
+
+    t0 = time.time()
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: S.init_train_state(jax.random.PRNGKey(0), cfg))
+        state_specs, report = R.state_pspecs(mesh, state_shapes)
+        batch_specs = {k: R.batch_pspec(mesh, v) for k, v in specs.items()}
+        step = S.make_train_step(cfg, grad_accum=cfg.grad_accum)
+        jitted = jax.jit(step,
+                         in_shardings=(ns(state_specs), ns(batch_specs)),
+                         out_shardings=(ns(state_specs), None),
+                         donate_argnums=(0,))
+        args = (state_shapes, specs)
+        n_params = _count_params(state_shapes["params"])
+        tokens = shape.global_batch * shape.seq_len
+        flops_mult = 6 * tokens
+    elif shape.kind == "prefill":
+        params_shapes = jax.eval_shape(
+            lambda: __import__("repro.models.model", fromlist=["init_model"])
+            .init_model(jax.random.PRNGKey(0), cfg))
+        param_specs, report = R.param_pspecs(mesh, params_shapes)
+        batch_specs = {k: R.batch_pspec(mesh, v) for k, v in specs.items()}
+        step = S.make_prefill_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(ns(param_specs), ns(batch_specs)),
+                         out_shardings=None)
+        args = (params_shapes, specs)
+        n_params = _count_params(params_shapes)
+        flops_mult = 2 * shape.global_batch * shape.seq_len
+    else:  # decode
+        from repro.models.model import init_model
+        params_shapes = jax.eval_shape(
+            lambda: init_model(jax.random.PRNGKey(0), cfg))
+        param_specs, report = R.param_pspecs(mesh, params_shapes)
+        cache_shapes = specs["cache"]
+        cache_specs = R.cache_pspecs(mesh, cache_shapes)
+        in_spec = R.batch_pspec(mesh, specs["inputs"])
+        step = S.make_decode_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(ns(param_specs), ns(cache_specs),
+                                       NamedSharding(mesh, in_spec)),
+                         out_shardings=(None, ns(cache_specs)),
+                         donate_argnums=(1,))
+        args = (params_shapes, cache_shapes, specs["inputs"])
+        n_params = _count_params(params_shapes)
+        flops_mult = 2 * shape.global_batch
+
+    # MoE: only the routed experts' FLOPs are "useful"
+    if cfg.moe.n_experts:
+        dense_ffn = cfg.n_layers * (3 if cfg.gated_ffn else 2) \
+            * cfg.d_model * cfg.d_ff
+        n_active = n_params - (cfg.moe.n_experts - cfg.moe.top_k) * dense_ffn
+    else:
+        n_active = n_params
+    result["n_params"] = int(n_params)
+    result["n_active"] = int(n_active)
+    result["model_flops"] = float(flops_mult) * n_active
+    result["sharding_fallbacks"] = report.fallbacks
+
+    try:
+        with mesh, A.activation_sharding(act_spec):
+            lowered = jitted.lower(*args)
+            result["t_lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            result["t_compile_s"] = round(time.time() - t1, 1)
+    except Exception as e:  # a failed cell is a bug — record and surface
+        result["error"] = f"{type(e).__name__}: {e}"[:2000]
+        return result
+
+    ma = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_bytes": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                       + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+    result["fits_16g"] = result["memory"]["peak_bytes"] <= 16 * 1024 ** 3
+    # analytic HBM-traffic floor: every argument read once, output written
+    # once, temp written+read once.  The walker bytes above are the upper
+    # bound (CPU fusion granularity); true TPU traffic lies between.
+    result["bytes_floor_per_chip"] = float(
+        ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + 2 * ma.temp_size_in_bytes)
+    ca = compiled.cost_analysis() or {}
+    # raw cost_analysis kept for reference; the roofline uses the
+    # trip-count-aware walker (cost_analysis counts while bodies ONCE)
+    result["cost_analysis_raw"] = {
+        "flops_per_chip": float(ca.get("flops", -1.0)),
+        "bytes_per_chip": float(ca.get("bytes accessed", -1.0))}
+    from repro.launch import hlo_cost
+    hc = hlo_cost.analyze(compiled.as_text(),
+                          pod_size=256 if pod_boundary else None)
+    result["cost"] = {"flops_per_chip": hc.flops, "bytes_per_chip": hc.bytes}
+    result["collectives"] = {
+        "wire_bytes_per_chip": hc.wire_bytes, "dci_bytes_per_chip": hc.dci_bytes,
+        "by_kind": hc.coll_by_kind, "counts": hc.coll_counts,
+        "n_while": hc.n_while, "max_trip": hc.max_trip}
+    result["ok"] = True
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s link
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+DCI_BW = 25e9  # cross-pod per-chip share (DESIGN.md §5)
+
+
+def roofline_terms(cell: dict) -> dict:
+    c = cell["cost"]
+    coll = cell["collectives"]
+    t_compute = c["flops_per_chip"] / PEAK_FLOPS
+    t_memory = c["bytes_per_chip"] / HBM_BW
+    t_coll = (coll["wire_bytes_per_chip"] - coll["dci_bytes_per_chip"]) / LINK_BW \
+        + coll["dci_bytes_per_chip"] / DCI_BW
+    dom = max((("compute", t_compute), ("memory", t_memory),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    total_flops = c["flops_per_chip"] * cell["chips"]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "bottleneck": dom,
+            "useful_flops_ratio": cell["model_flops"] / max(total_flops, 1.0),
+            "roofline_frac": t_compute / max(t_compute, t_memory, t_coll, 1e-30)}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _cell_path(out_dir, arch, shape, mesh, tag):
+    name = f"{arch}__{shape}__{mesh}" + (f"__{tag}" if tag else "")
+    return os.path.join(out_dir, name + ".json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--approx", action="store_true",
+                    help="enable the ApproxFFN (MCMA) layer")
+    ap.add_argument("--act-shard", choices=["", "dp", "sp", "fp", "none"], default="")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every cell in fresh subprocesses")
+    ap.add_argument("--mesh-all", action="store_true",
+                    help="with --all: both meshes (default: single only)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        from repro.configs.registry import ARCH_IDS, cells
+        meshes = ["single", "multi"] if args.mesh_all else ["single"]
+        todo = [(a, sh.name, m) for a in ARCH_IDS for sh in cells(a)
+                for m in meshes]
+        done = failed = 0
+        for a, s, m in todo:
+            path = _cell_path(args.out, a, s, m, args.tag)
+            if os.path.exists(path) and not args.force:
+                print(f"skip {a} {s} {m} (exists)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                   "--shape", s, "--mesh", m, "--out", args.out]
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            if args.act_shard:
+                cmd += ["--act-shard", args.act_shard]
+            print(f"[{done + failed + 1}/{len(todo)}] {a} {s} {m} ...", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            ok = False
+            if os.path.exists(path):
+                ok = json.load(open(path)).get("ok", False)
+            done += ok
+            failed += not ok
+            if not ok:
+                print(r.stdout[-1500:], r.stderr[-1500:], flush=True)
+        print(f"sweep: {done} ok, {failed} failed")
+        return 1 if failed else 0
+
+    cell = run_cell(args.arch, args.shape, args.mesh, approx=args.approx,
+                    act_shard=args.act_shard, tag=args.tag)
+    if cell["ok"]:
+        cell["roofline"] = roofline_terms(cell)
+    path = _cell_path(args.out, args.arch, args.shape, args.mesh, args.tag)
+    with open(path, "w") as f:
+        json.dump(cell, f, indent=1)
+    print(json.dumps(cell, indent=1))
+    return 0 if cell["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

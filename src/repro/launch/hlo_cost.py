@@ -1,0 +1,285 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a lax.scan
+over 80 layers contributes 1/80th of its true FLOPs/bytes/collective
+traffic.  Since the whole framework stacks layers with scan (deliberately,
+for O(1)-in-depth compile time), we re-derive the three roofline inputs by
+walking the HLO text and multiplying through ``while`` ops using the
+``known_trip_count`` backend config XLA attaches after loop analysis.
+
+Models (documented assumptions, see EXPERIMENTS.md §Roofline):
+* FLOPs: dot ops only (2 * prod(result dims) * prod(contracting dims));
+  elementwise/VPU work is ignored — the MXU term dominates on every cell.
+* HBM bytes: for each materializing op (fusion, dot, copy, collectives,
+  dynamic-(update-)slice, gather/scatter/sort/reduce/broadcast/...) count
+  result + operand bytes once.  Post-optimization HLO keeps elementwise
+  chains inside fusions, so top-level ops approximate buffer traffic.
+* Collective wire bytes per chip (ring algorithms):
+    all-reduce 2(k-1)/k * n   all-gather (k-1)/k * n (n = gathered size)
+    reduce-scatter (k-1) * n (n = shard)   all-to-all (k-1)/k * n
+    collective-permute n
+  Groups spanning the pod boundary (device id >= pod_size) are counted
+  separately (DCI vs ICI bandwidth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w]+\[[\d,]*\](?:\{[^}]*\})?)"
+    r"\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"(\d+)"')
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CALL_RE = re.compile(r"(?:body|calls|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id", "while",
+               "conditional", "call", "custom-call"}
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rtype: str
+    op: str
+    rest: str          # operand list + attrs (raw tail of the line)
+
+    def operands(self):
+        # operand refs up to the closing paren of the operand list
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return re.findall(r"%([\w.\-]+)", self.rest[:i])
+        return re.findall(r"%([\w.\-]+)", self.rest)
+
+    @property
+    def attrs(self) -> str:
+        return self.rest
+
+
+_OP_RE = re.compile(r"([\w\-]+)\(")
+
+
+def _parse_instr(line: str) -> Instr | None:
+    """Manual parse — regexes break on tuple types with /*index=N*/ comments."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):                   # tuple type: balanced scan
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        rtype, rest2 = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest2 = rest[:sp], rest[sp + 1:].lstrip()
+    m = _OP_RE.match(rest2)
+    if not m:
+        return None
+    return Instr(name, rtype, m.group(1), rest2[m.end():])
+
+
+def parse_module(hlo: str):
+    comps: dict[str, list[Instr]] = {}
+    types: dict[str, str] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY") or (line.startswith("%") and line.rstrip().endswith("{")):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins:
+            comps[cur].append(ins)
+            types.setdefault(ins.name, ins.rtype)
+    return comps, types, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    dci_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.wire_bytes += other.wire_bytes
+        self.dci_bytes += other.dci_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        self.n_while += other.n_while
+        self.max_trip = max(self.max_trip, other.max_trip)
+
+
+def _dot_flops(ins: Instr, types: dict) -> float:
+    _, rdims = _shape_dims(ins.rtype)
+    ops = ins.operands()
+    if not ops:
+        return 0.0
+    lhs_type = types.get(ops[0], "")
+    _, ldims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contract = 1
+    if m and ldims:
+        for d in m.group(1).split(","):
+            if d:
+                contract *= ldims[int(d)]
+    rsize = 1
+    for d in rdims:
+        rsize *= d
+    return 2.0 * rsize * contract
+
+
+def _collective(ins: Instr, pod_size: int | None):
+    nbytes = _type_bytes(ins.rtype)
+    kind = ins.op.replace("-start", "")
+    k = 1
+    crosses = False
+    gm = _GROUPS_LIST_RE.search(ins.rest)
+    if gm:
+        ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+        k = len(ids)
+        if pod_size is not None and ids:
+            crosses = min(ids) < pod_size <= max(ids)
+    else:
+        gm = _GROUPS_IOTA_RE.search(ins.rest)
+        if gm:
+            k = int(gm.group(2))
+            if pod_size is not None:
+                # iota groups [G,k]<=[dims]T(perm): a group crosses pods iff
+                # its device stride reaches across the boundary; conservative:
+                # crosses when the flattened span exceeds one pod
+                crosses = int(gm.group(1)) * k > pod_size and k > 1
+    if k <= 1:
+        return kind, 0.0, False
+    if kind == "all-reduce":
+        w = 2.0 * (k - 1) / k * nbytes
+    elif kind == "all-gather":
+        w = (k - 1) / k * nbytes
+    elif kind == "reduce-scatter":
+        w = float(k - 1) * nbytes
+    elif kind == "all-to-all":
+        w = (k - 1) / k * nbytes
+    else:  # collective-permute
+        w = float(nbytes)
+    return kind, w, crosses
+
+
+def analyze(hlo: str, pod_size: int | None = None) -> Cost:
+    comps, types, entry = parse_module(hlo)
+    memo_guard: set = set()
+
+    def walk(comp: str, mult: float, in_fusion: bool = False) -> Cost:
+        cost = Cost()
+        if comp not in comps or comp in memo_guard:
+            return cost
+        memo_guard.add(comp)
+        for ins in comps[comp]:
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.rest)
+                trip = int(tm.group(1)) if tm else 1
+                cost.n_while += 1
+                cost.max_trip = max(cost.max_trip, trip)
+                bm = _CALL_RE.search(ins.rest)
+                if bm:
+                    cost.add(walk(bm.group(1), mult * trip))
+                continue
+            if ins.op in ("fusion", "call", "conditional", "map"):
+                bm = _CALL_RE.search(ins.rest)
+                if bm:
+                    # inside a fusion only FLOPs count — buffer traffic is
+                    # the fusion op's own operands/result (counted below)
+                    cost.add(walk(bm.group(1), mult,
+                                  in_fusion or ins.op == "fusion"))
+            if ins.op == "dot":
+                cost.flops += _dot_flops(ins, types) * mult
+            if ins.op.replace("-start", "") in _COLLECTIVES:
+                kind, w, crosses = _collective(ins, pod_size)
+                cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0.0) + w * mult
+                cost.coll_counts[kind] = cost.coll_counts.get(kind, 0) + 1
+                cost.wire_bytes += w * mult
+                if crosses:
+                    cost.dci_bytes += w * mult
+            if (not in_fusion and ins.op not in _SKIP_BYTES
+                    and not ins.op.endswith("-done")):
+                b = _type_bytes(ins.rtype)
+                for o in ins.operands():
+                    b += _type_bytes(types.get(o, ""))
+                cost.bytes += b * mult
+        memo_guard.discard(comp)
+        return cost
+
+    if entry is None:
+        return Cost()
+    return walk(entry, 1.0)

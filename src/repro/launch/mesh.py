@@ -1,0 +1,25 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state.
+
+Single pod: (16, 16) ("data", "model") = 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips; the leading
+"pod" axis is pure data-parallelism whose collectives cross the
+data-center interconnect (gradient all-reduce only — see
+optim/compression.py for the int8 cross-pod variant).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,253 @@
+"""ApproxFFN — the paper's MCMA generalized to a first-class LM layer.
+
+Semantics (DESIGN.md §4): the exact FFN is the target function ("CPU"
+path); ``n_approx`` small identical-topology tanh MLPs are the
+approximators; an (n+1)-way router is the multiclass classifier (class 0 =
+exact).  Co-training follows the paper's competitive scheme: per-token
+relative L2 error of each approximator against the exact FFN output defines
+the label (argmin error if under the bound, else class 0), the router trains
+on those labels (xent) and each approximator distills on its territory.
+
+Two execution modes, both shape-static:
+
+* ``train``: exact FFN for every token (teacher) + all approximators on all
+  tokens (errors/labels need them anyway).  Output = exact FFN (training is
+  never approximated); aux losses carry the co-training signal.
+* ``serve``: MoE-style capacity dispatch.  Tokens are routed by the
+  router's argmax; class 0 tokens go through the exact FFN (capacity
+  ``exact_frac``·T), classes 1..n through their approximator (capacity
+  ``invoke_frac``·T each).  Over-capacity tokens contribute zero (residual
+  carries them) — the GShard convention.  FLOP savings vs a dense FFN =
+  1 - exact_frac (approximator FLOPs are ~d_hidden/d_ff of the FFN's).
+
+The serve-mode grouped approximator matmul is exactly the access pattern of
+the Pallas ``switched_mlp`` kernel (kernels/switched_mlp.py): rows sorted by
+class, per-tile weight switch via scalar prefetch.  The XLA path here is the
+portable fallback; the kernel is used by ops.switched_apply for 2D token
+batches on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ffn_fwd, init_ffn
+
+
+def init_approx_ffn(key, cfg: ModelConfig):
+    d, a = cfg.d_model, cfg.approx
+    ks = jax.random.split(key, 4)
+    s_in, s_h = d ** -0.5, a.d_hidden ** -0.5
+    p = {"ffn": init_ffn(ks[0], cfg),
+         "router": jax.random.normal(ks[1], (d, a.n_approx + 1), cfg.pdtype) * s_in,
+         # stacked identical-topology approximators (paper §III-D requirement)
+         "a_w1": jax.random.normal(ks[2], (a.n_approx, d, a.d_hidden), cfg.pdtype) * s_in,
+         "a_b1": jnp.zeros((a.n_approx, a.d_hidden), cfg.pdtype),
+         "a_w2": jax.random.normal(ks[3], (a.n_approx, a.d_hidden, d), cfg.pdtype) * s_h,
+         "a_b2": jnp.zeros((a.n_approx, d), cfg.pdtype)}
+    return p
+
+
+def _apply_all_approx(p, x):
+    """All approximators on all tokens.  x: (T, d) -> (n, T, d)."""
+    h = jnp.einsum("td,ndh->nth", x, p["a_w1"].astype(x.dtype))
+    h = jnp.tanh(h + p["a_b1"][:, None, :].astype(x.dtype))
+    y = jnp.einsum("nth,nhd->ntd", h, p["a_w2"].astype(x.dtype))
+    return y + p["a_b2"][:, None, :].astype(x.dtype)
+
+
+def _rel_err(y_hat, y, eps=1e-6):
+    """Per-token relative L2 error (competitive-scheme label signal)."""
+    num = jnp.linalg.norm((y_hat - y).astype(jnp.float32), axis=-1)
+    den = jnp.linalg.norm(y.astype(jnp.float32), axis=-1)
+    return num / jnp.maximum(den, eps)
+
+
+def approx_ffn_train(cfg: ModelConfig, p, x: jax.Array):
+    """Training path.  x: (B, S, d) -> (exact FFN out, aux dict).
+
+    aux = {"loss": distill + router xent (weighted), "invocation": fraction
+    of tokens whose best approximator is under the bound}.
+    """
+    a = cfg.approx
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    exact = ffn_fwd(cfg, p["ffn"], xt)                      # (T, d) teacher
+    approx = _apply_all_approx(p, xt)                       # (n, T, d)
+    errs = jax.vmap(lambda yh: _rel_err(yh, exact))(approx)  # (n, T)
+
+    # competitive labels: argmin error if under bound, else 0 (exact)
+    best = jnp.argmin(errs, axis=0)
+    safe = errs.min(0) <= a.error_bound
+    labels = jnp.where(safe, best + 1, 0)                   # 0 = exact path
+
+    logits = jnp.dot(xt, p["router"].astype(xt.dtype)).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, -1)
+    router_loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+    # distillation: each approximator fits its territory (stop-grad teacher)
+    tgt = jax.lax.stop_gradient(exact.astype(jnp.float32))
+    own = jax.nn.one_hot(labels - 1, a.n_approx, axis=0) * safe  # (n, T)
+    sq = jnp.sum((approx.astype(jnp.float32) - tgt[None]) ** 2, -1)  # (n, T)
+    # territory tokens at weight 1; all tokens at small weight (exploration)
+    w = own + 0.05
+    distill = jnp.sum(sq * w) / jnp.maximum(jnp.sum(w), 1.0) / d
+
+    aux = {"loss": a.router_weight * router_loss + a.distill_weight * distill,
+           "invocation": jnp.mean(safe.astype(jnp.float32)),
+           "router_acc": jnp.mean((jnp.argmax(logits, -1) == labels)
+                                  .astype(jnp.float32))}
+    return exact.reshape(b, s, d), aux
+
+
+def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
+    """Serving path with capacity dispatch.  x: (B, S, d) -> (out, aux).
+
+    Exact FFN runs on ``exact_frac``·T tokens only — the paper's invocation
+    gain realized as a FLOP reduction.  invoke capacity per approximator is
+    sized for a balanced dispatch with slack.
+
+    Dispatch is GROUPED over the data shards (same lesson as the MoE
+    dispatch, §Perf B/C: global cumsum ranking across a token-sharded dim
+    forces the partitioner to replicate tokens).  Each group ranks and
+    gathers only its own tokens — vmapped, group dim = batch-shard dim —
+    so the whole dispatch stays local per data shard.
+    """
+    from repro.sharding.activations import manual_dp_context
+    a = cfg.approx
+    b, s, d = x.shape
+    t = b * s
+    mesh, dp = manual_dp_context()
+    if mesh is not None and "model" in mesh.axis_names:
+        import numpy as _np
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        g = int(_np.prod([sizes[ax] for ax in dp]))
+        if b % g == 0 and cfg.d_ff % sizes["model"] == 0:
+            return _approx_serve_manual(cfg, p, x, mesh, dp)
+    groups = 1
+    tg = t // groups
+    xt = x.reshape(groups, tg, d)
+    logits = jnp.einsum("gtd,dc->gtc", xt,
+                        p["router"].astype(x.dtype)).astype(jnp.float32)
+    cls = jnp.argmax(logits, -1)                            # (G, Tg) 0..n
+
+    exact_cap = max(int(tg * a.exact_frac), 1)
+    app_cap = max(int(tg * a.invoke_frac), 1)
+
+    def group_dispatch(xg, cg):
+        out = jnp.zeros((tg, d), x.dtype)
+
+        def path_out(mask, cap, fn):
+            """Gather <=cap tokens where mask, apply fn, scatter back."""
+            pos = jnp.cumsum(mask.astype(jnp.int32)) - 1       # rank in class
+            keep = mask & (pos < cap)
+            idx = jnp.where(keep, pos, cap)                    # cap = trash
+            buf = jnp.zeros((cap + 1, d), x.dtype).at[idx].set(
+                xg * keep[:, None])
+            y = fn(buf[:cap])
+            y = jnp.concatenate([y, jnp.zeros((1, d), x.dtype)], 0)
+            return y[jnp.where(keep, pos, cap)] * keep[:, None]
+
+        out = out + path_out(cg == 0, exact_cap,
+                             lambda xb: ffn_fwd(cfg, p["ffn"], xb))
+        for i in range(a.n_approx):
+            def approx_i(xb, i=i):
+                h = jnp.tanh(jnp.dot(xb, p["a_w1"][i].astype(xb.dtype))
+                             + p["a_b1"][i].astype(xb.dtype))
+                return jnp.dot(h, p["a_w2"][i].astype(xb.dtype)) \
+                    + p["a_b2"][i].astype(xb.dtype)
+            out = out + path_out(cg == i + 1, app_cap, approx_i)
+        return out
+
+    out = jax.vmap(group_dispatch)(xt, cls)
+
+    aux = {"loss": jnp.zeros((), jnp.float32),
+           "invocation": jnp.mean((cls > 0).astype(jnp.float32)),
+           "router_acc": jnp.zeros((), jnp.float32)}
+    return out.reshape(b, s, d), aux
+
+
+def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp):
+    """Fully-manual serve dispatch (shard_map over all axes): each data
+    shard ranks/gathers its own tokens (no cross-shard dispatch traffic);
+    the exact FFN runs Megatron-TP over "model" with one psum; the
+    approximators are replicated (tiny) and run locally.  Same lesson as
+    the manual MoE path (§Perf B/C): keep ranking math off the
+    partitioner's critical path.
+    """
+    from jax.sharding import PartitionSpec as P
+    a = cfg.approx
+    b, s, d = x.shape
+    axes = tuple(dp) + ("model",)
+    ffn_specs = {"w_in": P(dp, "model"), "w_out": P("model", dp)}
+    if "w_gate" in p["ffn"]:
+        ffn_specs["w_gate"] = P(dp, "model")
+    w_specs = {"ffn": ffn_specs, "router": P(None, None),
+               "a_w1": P(None, None, None), "a_b1": P(None, None),
+               "a_w2": P(None, None, None), "a_b2": P(None, None)}
+
+    def local(p_loc, x_loc):
+        bl, sl, _ = x_loc.shape
+        tl = bl * sl
+        xt = x_loc.reshape(tl, d)
+        w_in = jax.lax.all_gather(p_loc["ffn"]["w_in"], dp, axis=0, tiled=True)
+        w_out = jax.lax.all_gather(p_loc["ffn"]["w_out"], dp, axis=1, tiled=True)
+        w_gate = (jax.lax.all_gather(p_loc["ffn"]["w_gate"], dp, axis=0,
+                                     tiled=True)
+                  if "w_gate" in p_loc["ffn"] else None)
+        logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype))
+        cls = jnp.argmax(logits.astype(jnp.float32), -1)
+
+        exact_cap = max(int(tl * a.exact_frac), 1)
+        app_cap = max(int(tl * a.invoke_frac), 1)
+
+        def gather_class(mask, cap):
+            pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+            keep = mask & (pos < cap)
+            idx = jnp.where(keep, pos, cap)
+            buf = jnp.zeros((cap + 1, d), xt.dtype).at[idx].set(
+                xt * keep[:, None])
+            return buf[:cap], keep, pos
+
+        def scatter_back(y, keep, pos, cap):
+            y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], 0)
+            return y[jnp.where(keep, pos, cap)] * keep[:, None]
+
+        # exact path: Megatron-TP (f sharded over model), one psum
+        xb, keep0, pos0 = gather_class(cls == 0, exact_cap)
+        h = jnp.dot(xb, w_in.astype(xb.dtype))
+        if w_gate is not None:
+            h = jax.nn.silu(jnp.dot(xb, w_gate.astype(xb.dtype))) * h
+        else:
+            h = jax.nn.silu(h)
+        y_exact = jax.lax.psum(jnp.dot(h, w_out.astype(h.dtype)), "model")
+        out = scatter_back(y_exact, keep0, pos0, exact_cap)
+
+        # approximators: replicated weights, fully local
+        for i in range(a.n_approx):
+            xb, keep, pos = gather_class(cls == i + 1, app_cap)
+            hh = jnp.tanh(jnp.dot(xb, p_loc["a_w1"][i].astype(xb.dtype))
+                          + p_loc["a_b1"][i].astype(xb.dtype))
+            yy = jnp.dot(hh, p_loc["a_w2"][i].astype(xb.dtype)) \
+                + p_loc["a_b2"][i].astype(xb.dtype)
+            out = out + scatter_back(yy, keep, pos, app_cap)
+
+        inv = jax.lax.pmean(jnp.mean((cls > 0).astype(jnp.float32)), axes)
+        return out.reshape(bl, sl, d), inv
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(w_specs, P(dp, None, None)),
+                       out_specs=(P(dp, None, None), P()),
+                       axis_names=frozenset(axes), check_vma=False)
+    out, inv = fn({**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
+                                        "a_b2")}, "ffn": p["ffn"]}, x)
+    aux = {"loss": jnp.zeros((), jnp.float32), "invocation": inv,
+           "router_acc": jnp.zeros((), jnp.float32)}
+    return out, aux
+
+
+def approx_ffn_fwd(cfg: ModelConfig, p, x: jax.Array, *, serve: bool = False):
+    if serve:
+        return approx_ffn_serve(cfg, p, x)
+    return approx_ffn_train(cfg, p, x)

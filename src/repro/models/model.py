@@ -1,0 +1,420 @@
+"""Model assembly: every assigned architecture family as one functional LM.
+
+Families and their block layouts:
+  dense / audio / vlm : N x (attn + FFN)            [scan over layers]
+  moe                 : N x (attn + MoE-FFN)        [scan over layers]
+  ssm (xLSTM)         : G x ((k-1) mLSTM + 1 sLSTM) [scan over groups, inner
+                        scan over the mLSTM run]    (k = ssm.slstm_every)
+  hybrid (zamba2)     : G x (k mamba2 + SHARED attn/FFN block)  (k =
+                        attn_every; the shared block's params are one set
+                        applied at every group boundary — Zamba2's design)
+
+All stacking uses lax.scan over stacked param pytrees so compile time is
+O(1) in depth; ``cfg.remat`` wraps block bodies in jax.checkpoint.
+
+Steps (the units the dry-run lowers):
+  train_step   (state, batch)  -> (state, metrics)  — fwd + bwd + optimizer
+  prefill_step (params, batch) -> (last_logits, cache)
+  decode_step  (params, cache, tokens) -> (logits, cache)
+
+Inputs are tokens (B, S) int32, or precomputed embeddings (B, S, d) for
+``input_mode="embeddings"`` (audio/vlm stubs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2, moe, xlstm
+from repro.models.approx_ffn import approx_ffn_fwd, init_approx_ffn
+from repro.sharding.activations import constrain
+
+
+# ---------------------------------------------------------------------------
+# Per-family block init/apply
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.init_norm(cfg, cfg.d_model), "attn": L.init_attn(k1, cfg),
+         "ln2": L.init_norm(cfg, cfg.d_model)}
+    if cfg.moe.n_experts:
+        p["moe"] = moe.init_moe(k2, cfg)
+    elif cfg.approx.enable:
+        p["approx"] = init_approx_ffn(k3, cfg)
+    else:
+        p["ffn"] = L.init_ffn(k4, cfg)
+    return p
+
+
+def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False):
+    """One transformer block.  Returns (x, new_cache, aux_loss, aux_metrics)."""
+    h, new_cache = L.attention_fwd(cfg, p["attn"], L.norm_fwd(cfg, p["ln1"], x),
+                                   positions, cache)
+    aux = jnp.zeros((), jnp.float32)
+    metrics = {}
+    if cfg.parallel_block:
+        # stablelm-2 style: FFN in parallel with attention, one residual
+        f = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln1"], x), serve)
+        f, aux, metrics = f
+        x = x + h + f
+    else:
+        x = x + h
+        f, aux, metrics = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln2"], x), serve)
+        x = x + f
+    return x, new_cache, aux, metrics
+
+
+def _ffn_part(cfg: ModelConfig, p, xn, serve):
+    if cfg.moe.n_experts:
+        y, aux = moe.moe_fwd(cfg, p["moe"], xn)
+        return y, aux, {}
+    if cfg.approx.enable:
+        y, a = approx_ffn_fwd(cfg, p["approx"], xn, serve=serve)
+        return y, a["loss"], {"invocation": a["invocation"],
+                              "router_acc": a["router_acc"]}
+    return L.ffn_fwd(cfg, p["ffn"], xn), jnp.zeros((), jnp.float32), {}
+
+
+# ---- xLSTM ---------------------------------------------------------------
+
+def _init_mlstm_block(key, cfg):
+    return {"ln": L.init_norm(cfg, cfg.d_model), "core": xlstm.init_mlstm(key, cfg)}
+
+
+def _init_slstm_block(key, cfg):
+    return {"ln": L.init_norm(cfg, cfg.d_model), "core": xlstm.init_slstm(key, cfg)}
+
+
+def _mlstm_block(cfg, p, x, state):
+    y, st = xlstm.mlstm_fwd(cfg, p["core"], L.norm_fwd(cfg, p["ln"], x), state)
+    return x + y, st
+
+
+def _slstm_block(cfg, p, x, state):
+    y, st = xlstm.slstm_fwd(cfg, p["core"], L.norm_fwd(cfg, p["ln"], x), state)
+    return x + y, st
+
+
+# ---- zamba2 hybrid ---------------------------------------------------------
+
+def _init_mamba_block(key, cfg):
+    return {"ln": L.init_norm(cfg, cfg.d_model), "core": mamba2.init_mamba(key, cfg)}
+
+
+def _mamba_block(cfg, p, x, state):
+    y, st = mamba2.mamba_fwd(cfg, p["core"], L.norm_fwd(cfg, p["ln"], x), state)
+    return x + y, st
+
+
+# ---------------------------------------------------------------------------
+# Model topology descriptors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """How layers group into scan stacks for a family."""
+
+    kind: str            # "uniform" | "xlstm" | "hybrid"
+    n_groups: int = 0
+    per_group: int = 0   # inner homogeneous run length
+
+
+def topology(cfg: ModelConfig) -> Topology:
+    if cfg.family == "ssm":
+        k = cfg.ssm.slstm_every
+        assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+        return Topology("xlstm", cfg.n_layers // k, k - 1)
+    if cfg.family == "hybrid":
+        k = cfg.attn_every or 6
+        assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+        return Topology("hybrid", cfg.n_layers // k, k)
+    return Topology("uniform", cfg.n_layers, 1)
+
+
+def _stack_init(key, n, init_fn):
+    """Init n copies of a block with stacked leaves (leading dim n)."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_model(key: jax.Array, cfg: ModelConfig):
+    topo = topology(cfg)
+    ke, kb, ks = jax.random.split(key, 3)
+    params: dict[str, Any] = {"embed": L.init_embed(ke, cfg),
+                              "ln_f": L.init_norm(cfg, cfg.d_model)}
+    if topo.kind == "uniform":
+        params["blocks"] = _stack_init(kb, topo.n_groups,
+                                       lambda k: _init_dense_block(k, cfg))
+    elif topo.kind == "xlstm":
+        km, ksl = jax.random.split(kb)
+        params["mlstm"] = _stack_init(
+            km, topo.n_groups * topo.per_group,
+            lambda k: _init_mlstm_block(k, cfg))
+        params["mlstm"] = jax.tree.map(
+            lambda a: a.reshape(topo.n_groups, topo.per_group, *a.shape[1:]),
+            params["mlstm"])
+        params["slstm"] = _stack_init(ksl, topo.n_groups,
+                                      lambda k: _init_slstm_block(k, cfg))
+    else:  # hybrid
+        km, ka = jax.random.split(kb)
+        params["mamba"] = _stack_init(
+            km, topo.n_groups * topo.per_group,
+            lambda k: _init_mamba_block(k, cfg))
+        params["mamba"] = jax.tree.map(
+            lambda a: a.reshape(topo.n_groups, topo.per_group, *a.shape[1:]),
+            params["mamba"])
+        # ONE shared attention+FFN block (Zamba2), applied per group
+        params["shared"] = _init_dense_block(ks, dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_experts=0)))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill): scan over stacked blocks
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward(cfg: ModelConfig, params, inputs: jax.Array, *,
+            collect_cache: bool = False, serve: bool = False):
+    """Full-sequence forward.  inputs: tokens (B, S) or embeds (B, S, d).
+
+    Returns (logits (B, S, V), cache-or-None, aux_loss, metrics).
+    """
+    topo = topology(cfg)
+    x = constrain(L.embed_fwd(cfg, params["embed"], inputs))
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+    metrics: dict[str, jax.Array] = {}
+    cache = None
+
+    if topo.kind == "uniform":
+        def body(x, blk):
+            x, kv, aux, m = _dense_block(cfg, blk, x, positions, None, serve=serve)
+            # K/V are scan outputs ONLY when prefill needs them — XLA does
+            # not reliably DCE unused (L, B, S, KV, hd) while-loop outputs
+            kvs = (kv["k"], kv["v"]) if collect_cache else ()
+            return constrain(x), (aux, m, kvs)
+        x, (auxs, ms, kvs) = jax.lax.scan(_maybe_remat(cfg, body), x,
+                                          params["blocks"])
+        aux_total = jnp.sum(auxs)
+        metrics = {k: jnp.mean(v) for k, v in ms.items()}
+        if collect_cache:
+            ks, vs = kvs
+            if cfg.sliding_window:
+                w = min(s, cfg.sliding_window)
+                assert s % w == 0, "ring-buffer alignment needs S % window == 0"
+                ks, vs = ks[:, :, -w:], vs[:, :, -w:]
+            cache = {"k": ks, "v": vs, "pos": jnp.full((b,), s, jnp.int32)}
+
+    elif topo.kind == "xlstm":
+        def group(x, grp):
+            mblks, sblk = grp
+
+            def inner(x, blk):
+                x, st = _mlstm_block(cfg, blk, x, None)
+                return constrain(x), st
+            x, msts = jax.lax.scan(_maybe_remat(cfg, inner), x, mblks)
+            x, sst = _slstm_block(cfg, sblk, x, None)
+            return constrain(x), (msts, sst)
+        x, (mstates, sstates) = jax.lax.scan(
+            _maybe_remat(cfg, group), x, (params["mlstm"], params["slstm"]))
+        if collect_cache:
+            cache = {"mlstm": mstates, "slstm": sstates,
+                     "pos": jnp.full((b,), s, jnp.int32)}
+
+    else:  # hybrid
+        shared = params["shared"]
+
+        def group(x, mblks):
+            def inner(x, blk):
+                x, st = _mamba_block(cfg, blk, x, None)
+                return constrain(x), st
+            x, msts = jax.lax.scan(_maybe_remat(cfg, inner), x, mblks)
+            x, kv, aux, _ = _dense_block(cfg, shared, x, positions, None,
+                                         serve=serve)
+            kvs = (kv["k"], kv["v"]) if collect_cache else ()
+            return constrain(x), (msts, aux, kvs)
+        x, (mstates, auxs, kvs) = jax.lax.scan(_maybe_remat(cfg, group), x,
+                                               params["mamba"])
+        aux_total = jnp.sum(auxs)
+        if collect_cache:
+            ks, vs = kvs
+            cache = {"mamba": mstates, "k": ks, "v": vs,
+                     "pos": jnp.full((b,), s, jnp.int32)}
+
+    x = L.norm_fwd(cfg, params["ln_f"], x)
+    logits = L.unembed_fwd(cfg, params["embed"], x)
+    return logits, cache, aux_total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, cache update)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Empty decode cache sized for ``max_len`` context."""
+    topo = topology(cfg)
+    if topo.kind == "uniform":
+        c = L.init_attn_cache(cfg, batch, max_len)
+        stack = lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape))
+        return {"k": stack(c["k"]), "v": stack(c["v"]),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+    if topo.kind == "xlstm":
+        m = xlstm.init_mlstm_state(cfg, batch)
+        sl = xlstm.init_slstm_state(cfg, batch)
+        st = lambda a, n: jnp.broadcast_to(a, n + a.shape)
+        return {"mlstm": jax.tree.map(
+                    lambda a: st(a, (topo.n_groups, topo.per_group)), m),
+                "slstm": jax.tree.map(lambda a: st(a, (topo.n_groups,)), sl),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+    # hybrid
+    ms = mamba2.init_mamba_state(cfg, batch)
+    ac = L.init_attn_cache(cfg, batch, max_len)
+    st = lambda a, n: jnp.broadcast_to(a, n + a.shape)
+    return {"mamba": jax.tree.map(
+                lambda a: st(a, (topo.n_groups, topo.per_group)), ms),
+            "k": st(ac["k"], (topo.n_groups,)), "v": st(ac["v"], (topo.n_groups,)),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def reset_slot(cfg: ModelConfig, cache, fresh, slot: int):
+    """Reset one batch slot of a decode cache to ``fresh`` (a cache from
+    init_cache): continuous batching admits a new request into a freed
+    slot.  Batch-dim position per leaf: k/v (L, B, ...) -> 1; mlstm/mamba
+    states (G, P, B, ...) -> 2; slstm states (G, B, ...) -> 1; pos -> 0."""
+    def bdim(path):
+        head = path[0]
+        if head in ("k", "v"):
+            return 1
+        if head in ("mlstm", "mamba"):
+            return 2
+        if head == "slstm":
+            return 1
+        return 0  # pos
+
+    def walk(path, c, f):
+        if isinstance(c, dict):
+            return {k: walk(path + (k,), c[k], f[k]) for k in c}
+        d = bdim(path)
+        idx = tuple([slice(None)] * d + [slot])
+        return c.at[idx].set(f[idx])
+    return walk((), cache, fresh)
+
+
+def pad_cache(cfg: ModelConfig, cache, max_len: int):
+    """Grow a prefill-built cache's KV length to ``max_len`` (decode room).
+    No-op for pure-SSM caches and ring buffers (fixed window)."""
+    if "k" not in cache or cfg.sliding_window:
+        return cache
+    pad = max_len - cache["k"].shape[2]
+    if pad <= 0:
+        return cache
+    grow = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return dict(cache, k=grow(cache["k"]), v=grow(cache["v"]))
+
+
+def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
+           serve: bool = True):
+    """One decode step.  inputs: tokens (B, 1) or embeds (B, 1, d).
+    Returns (logits (B, V), new_cache)."""
+    topo = topology(cfg)
+    x = L.embed_fwd(cfg, params["embed"], inputs)
+    pos = cache["pos"]                                   # (B,) per-slot
+    positions = pos[:, None]
+
+    if topo.kind == "uniform":
+        # The cache is CARRIED and updated in place (dynamic-update-slice
+        # inside the while loop aliases the donated input buffer) — passing
+        # it as scan xs/ys would materialize two extra (L, B, S, KV, hd)
+        # temporaries, which at 32k context is the whole HBM budget.
+        def body(carry, blk_i):
+            x, ck, cv = carry
+            blk, i = blk_i
+            lc = {"k": ck[i], "v": cv[i], "pos": pos}
+            x, nc, _, _ = _dense_block(cfg, blk, x, positions, lc, serve=serve)
+            ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)
+            return (x, ck, cv), None
+        (x, ks, vs), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["blocks"], jnp.arange(cfg.n_layers)))
+        new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+
+    elif topo.kind == "xlstm":
+        def group(x, grp):
+            mblks, msts, sblk, sst = grp
+
+            def inner(x, bs):
+                blk, st = bs
+                x, ns = _mlstm_block(cfg, blk, x, st)
+                return x, ns
+            x, nmsts = jax.lax.scan(inner, x, (mblks, msts))
+            x, nsst = _slstm_block(cfg, sblk, x, sst)
+            return x, (nmsts, nsst)
+        x, (nm, nsl) = jax.lax.scan(
+            group, x, (params["mlstm"], cache["mlstm"], params["slstm"],
+                       cache["slstm"]))
+        new_cache = {"mlstm": nm, "slstm": nsl, "pos": pos + 1}
+
+    else:  # hybrid
+        shared = params["shared"]
+        topo_g = topo.n_groups
+
+        def group(carry, grp):
+            x, ck, cv = carry
+            mblks, msts, gi = grp
+
+            def inner(x, bs):
+                blk, st = bs
+                x, ns = _mamba_block(cfg, blk, x, st)
+                return x, ns
+            x, nmsts = jax.lax.scan(inner, x, (mblks, msts))
+            lc = {"k": ck[gi], "v": cv[gi], "pos": pos}
+            x, nc, _, _ = _dense_block(cfg, shared, x, positions, lc, serve=serve)
+            ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], gi, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], gi, 0)
+            return (x, ck, cv), nmsts
+        (x, ks, vs), nm = jax.lax.scan(
+            group, (x, cache["k"], cache["v"]),
+            (params["mamba"], cache["mamba"], jnp.arange(topo_g)))
+        new_cache = {"mamba": nm, "k": ks, "v": vs, "pos": pos + 1}
+
+    x = L.norm_fwd(cfg, params["ln_f"], x)
+    logits = L.unembed_fwd(cfg, params["embed"], x)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, inputs, labels):
+    """Next-token cross-entropy (+ family aux losses).  labels: (B, S).
+
+    CE is computed as a one-hot contraction, not take_along_axis: a gather
+    over a vocab-sharded logits tensor forces the SPMD partitioner into
+    token replication ("involuntary full rematerialization"); the one-hot
+    einsum shards cleanly (tokens over data, vocab over model).
+    """
+    from repro.sharding.activations import constrain_logits, constrain_tokens
+    logits, _, aux, metrics = forward(cfg, params, inputs)
+    logits = constrain_logits(logits).astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, -1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), -1))
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=shifted.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", shifted, onehot)
+    nll = constrain_tokens(lse - picked)
+    loss = jnp.mean(nll)
+    metrics = dict(metrics, lm_loss=loss, aux_loss=aux)
+    return loss + aux, metrics

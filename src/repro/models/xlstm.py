@@ -1,0 +1,252 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan with block-diagonal recurrence).
+
+mLSTM recurrence (per head, stabilized in f32):
+    C_t = f_t * C_{t-1} + i_t * v_t k_t^T        C: (hd_v, hd_qk)
+    n_t = f_t * n_{t-1} + i_t * k_t              n: (hd_qk,)
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with f_t = sigmoid(f~_t) (log-space cumulative products) and
+i_t = exp(min(i~_t, CLAMP)).  Training/prefill uses the chunkwise algorithm
+(mamba2-style: within-chunk quadratic term + cross-chunk state scan) so the
+sequential depth is S / chunk; decode is the O(1) update.
+
+sLSTM cannot be parallelized over time (recurrent h_{t-1} feeds the gates) —
+one lax.scan over the sequence, exactly as the xLSTM paper states.  Heads
+use block-diagonal recurrent matrices.
+
+Deviations from the official xLSTM code (noted in DESIGN.md): no causal
+conv1d front, qk dim = d_in/2 (parameter budget), sigmoid forget gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+I_CLAMP = 8.0  # clamp on the exponential input gate pre-activation
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm.expand * d          # value / gate width
+    d_qk = d_in // 2                   # query/key width
+    h = cfg.n_heads
+    return d, d_in, d_qk, h, d_in // h, d_qk // h
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d, d_in, d_qk, h, hd_v, hd_qk = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_q": jax.random.normal(ks[0], (d, d_qk), cfg.pdtype) * s,
+        "w_k": jax.random.normal(ks[1], (d, d_qk), cfg.pdtype) * s,
+        "w_v": jax.random.normal(ks[2], (d, d_in), cfg.pdtype) * s,
+        "w_z": jax.random.normal(ks[3], (d, d_in), cfg.pdtype) * s,   # output gate branch
+        "w_if": jax.random.normal(ks[4], (d, 2 * h), cfg.pdtype) * s, # i~, f~ per head
+        # forget-gate bias >0 (remember by default), input-gate bias <0
+        "b_if": jnp.concatenate([jnp.full((h,), -2.0), jnp.full((h,), 3.0)]).astype(cfg.pdtype),
+        "w_out": jax.random.normal(ks[5], (d_in, d), cfg.pdtype) * d_in ** -0.5,
+        "norm_scale": jnp.ones((d_in,), cfg.pdtype),
+    }
+
+
+def _mlstm_gates(cfg: ModelConfig, p, x):
+    """Returns q, k, v (headed), log_f, log_i — all f32 except qkv."""
+    d, d_in, d_qk, h, hd_v, hd_qk = mlstm_dims(cfg)
+    b, s, _ = x.shape
+    q = jnp.dot(x, p["w_q"].astype(x.dtype)).reshape(b, s, h, hd_qk)
+    k = jnp.dot(x, p["w_k"].astype(x.dtype)).reshape(b, s, h, hd_qk) * hd_qk ** -0.5
+    v = jnp.dot(x, p["w_v"].astype(x.dtype)).reshape(b, s, h, hd_v)
+    gates = jnp.dot(x, p["w_if"].astype(x.dtype)).astype(jnp.float32) \
+        + p["b_if"].astype(jnp.float32)
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    log_i = jnp.minimum(i_pre, I_CLAMP)                  # (B, S, H)
+    log_f = jax.nn.log_sigmoid(f_pre)                    # (B, S, H), <= 0
+    return q, k, v, log_f, log_i
+
+
+def _gated_rmsnorm(x, z, scale):
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (xf * r).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def mlstm_fwd(cfg: ModelConfig, p, x: jax.Array, state: dict | None = None):
+    """x: (B, S, d) -> (y, new_state).  state: {"c": (B,H,hdv,hdqk),
+    "n": (B,H,hdqk)}; decode path when S == 1 and state is given."""
+    b, s, d = x.shape
+    _, d_in, d_qk, h, hd_v, hd_qk = mlstm_dims(cfg)
+    q, k, v, log_f, log_i = _mlstm_gates(cfg, p, x)
+    z = jnp.dot(x, p["w_z"].astype(x.dtype))
+
+    if state is not None and s == 1:
+        c, n = state["c"], state["n"]
+        f = jnp.exp(log_f[:, 0]).astype(jnp.float32)     # (B, H)
+        i = jnp.exp(log_i[:, 0]).astype(jnp.float32)
+        vk = jnp.einsum("bhv,bhk->bhvk", v[:, 0].astype(jnp.float32),
+                        k[:, 0].astype(jnp.float32))
+        c = c * f[..., None, None] + vk * i[..., None, None]
+        n = n * f[..., None] + k[:, 0].astype(jnp.float32) * i[..., None]
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", c, qf)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+        y = num / jnp.maximum(den, 1.0)[..., None]
+        y = y.reshape(b, 1, d_in).astype(x.dtype)
+        y = _gated_rmsnorm(y, z, p["norm_scale"])
+        return jnp.dot(y, p["w_out"].astype(x.dtype)), {"c": c, "n": n}
+
+    # ----- chunkwise parallel (train / prefill) ------------------------------
+    ck = min(cfg.ssm.chunk, s)
+    assert s % ck == 0, (s, ck)
+    nc = s // ck
+    rs = lambda t: t.reshape(b, nc, ck, *t.shape[2:]).swapaxes(0, 1)
+    q_c, k_c, v_c, lf_c, li_c = map(rs, (q, k, v, log_f, log_i))
+
+    def chunk_step(carry, inp):
+        c_st, n_st = carry                                # (B,H,hdv,hdqk), (B,H,hdqk)
+        qc, kc, vc, lfc, lic = inp
+        cum = jnp.cumsum(lfc, axis=1)                     # inclusive, (B, ck, H)
+        total = cum[:, -1]
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        # incoming-state contribution: decay_in[t] = exp(cum_t)
+        decay_in = jnp.exp(cum)                           # (B, ck, H)
+        num_st = jnp.einsum("blhk,bhvk->blhv", qf, c_st) * decay_in[..., None]
+        den_st = jnp.einsum("blhk,bhk->blh", qf, n_st) * decay_in
+        # within-chunk "attention": D[t,u] = exp(cum_t - cum_u + log_i_u), u <= t
+        rel = cum[:, :, None, :] - cum[:, None, :, :] + lic[:, None, :, :]
+        mask = jnp.tril(jnp.ones((ck, ck), bool))
+        # mask BEFORE exp (0 * inf cotangent trap — see mamba2.py)
+        rel = jnp.where(mask[None, :, :, None], rel, -1e30)
+        dmat = jnp.exp(rel)                               # (B, l, u, H)
+        scores = jnp.einsum("blhk,buhk->blhu", qf, kf)
+        w = scores * dmat.swapaxes(2, 3)                  # (B, l, H, u)
+        num_in = jnp.einsum("blhu,buhv->blhv", w, vf)
+        # den_in[t] = sum_u D[t,u] (q_t . k_u) = row-sum of the weighted scores
+        den_in = jnp.sum(w, axis=-1)
+        num = num_st + num_in
+        den = jnp.abs(den_st + den_in)
+        y = num / jnp.maximum(den, 1.0)[..., None]        # (B, ck, H, hdv)
+        # state update: c' = exp(total) c + sum_u exp(total - cum_u + li_u) v_u k_u^T
+        # Fold the decay into v and contract u DIRECTLY — materializing the
+        # (B, ck, H, hd_v, hd_qk) outer product first costs ~GBs of HBM
+        # traffic per chunk (§Perf A.1); the fused form writes only the
+        # (B, H, hd_v, hd_qk) result.
+        carry_decay = jnp.exp(total[:, None] - cum + lic) # (B, ck, H)
+        vz = vf * carry_decay[..., None]
+        c_new = c_st * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "buhv,buhk->bhvk", vz, kf)
+        n_new = n_st * jnp.exp(total)[..., None] + jnp.einsum(
+            "buh,buhk->bhk", carry_decay, kf)
+        return (c_new, n_new), y
+
+    c0 = (state["c"] if state is not None
+          else jnp.zeros((b, h, hd_v, hd_qk), jnp.float32))
+    n0 = (state["n"] if state is not None
+          else jnp.zeros((b, h, hd_qk), jnp.float32))
+    step_fn = jax.checkpoint(chunk_step) if cfg.remat else chunk_step
+    (c_f, n_f), y_c = jax.lax.scan(step_fn, (c0, n0), (q_c, k_c, v_c, lf_c, li_c))
+    y = y_c.swapaxes(0, 1).reshape(b, s, d_in).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return jnp.dot(y, p["w_out"].astype(x.dtype)), {"c": c_f, "n": n_f}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    _, d_in, d_qk, h, hd_v, hd_qk = mlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, h, hd_v, hd_qk), jnp.float32),
+            "n": jnp.zeros((batch, h, hd_qk), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    return d, h, d // h
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d, h, hd = slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    d_up = (4 * d // 3 + 127) // 128 * 128              # post-FFN at ratio 4/3
+    return {
+        # input projections for gates z, i, f, o (fused)
+        "w_x": jax.random.normal(ks[0], (d, 4 * d), cfg.pdtype) * s,
+        # block-diagonal recurrent weights, per head: (H, hd, 4*hd)
+        "w_h": jax.random.normal(ks[1], (h, hd, 4 * hd), cfg.pdtype) * hd ** -0.5,
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), -2.0),
+                              jnp.full((d,), 3.0), jnp.zeros((d,))]).astype(cfg.pdtype),
+        "w_up": jax.random.normal(ks[2], (d, 2 * d_up), cfg.pdtype) * s,
+        "w_down": jax.random.normal(ks[3], (d_up, d), cfg.pdtype) * d_up ** -0.5,
+    }
+
+
+def _slstm_cell(cfg: ModelConfig, p, xg, hprev, cprev, nprev, mprev):
+    """One sLSTM step.  xg: (B, H, 4, hd) precomputed input-gate
+    contributions (pre-transposed OUTSIDE the scan — §Perf A.2: per-step
+    transposes were ~1/3 of the sequential loop's HBM traffic);
+    hprev: (B, H, hd).  Returns (h, c, n, m) all (B, H, hd)."""
+    d, h, hd = slstm_dims(cfg)
+    b = xg.shape[0]
+    rec = jnp.einsum("bhi,hio->bho", hprev, p["w_h"].astype(hprev.dtype))
+    rec = rec.reshape(b, h, 4, hd)                       # (B, H, 4, hd)
+    g = (xg + rec).astype(jnp.float32)
+    zt = jnp.tanh(g[:, :, 0])
+    i_pre = jnp.minimum(g[:, :, 1], I_CLAMP)
+    f_pre = g[:, :, 2]
+    ot = jax.nn.sigmoid(g[:, :, 3])
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m = jnp.maximum(log_f + mprev, i_pre)                # stabilizer, (B,H,hd)
+    i_s = jnp.exp(i_pre - m)
+    f_s = jnp.exp(log_f + mprev - m)
+    c = f_s * cprev + i_s * zt
+    n = f_s * nprev + i_s
+    hnew = ot * c / jnp.maximum(n, 1e-6)
+    return hnew, c, n, m
+
+
+def slstm_fwd(cfg: ModelConfig, p, x: jax.Array, state: dict | None = None):
+    """x: (B, S, d) -> (y, new_state); sequential lax.scan over time."""
+    b, s, d = x.shape
+    _, h, hd = slstm_dims(cfg)
+    xg = jnp.dot(x, p["w_x"].astype(x.dtype)) + p["b"].astype(x.dtype)  # (B,S,4d)
+    # pre-transpose to the cell's (B, H, 4, hd) layout once, outside the
+    # sequential scan (§Perf A.2)
+    xg = xg.reshape(b, s, 4, h, hd).transpose(0, 1, 3, 2, 4)  # (B,S,H,4,hd)
+
+    if state is None:
+        z = jnp.zeros((b, h, hd), jnp.float32)
+        st = (z, z, z, jnp.full((b, h, hd), -1e30, jnp.float32))
+    else:
+        st = (state["h"], state["c"], state["n"], state["m"])
+
+    def step(carry, xg_t):
+        hp, cp, np_, mp = carry
+        hn, cn, nn, mn = _slstm_cell(cfg, p, xg_t, hp.astype(x.dtype), cp, np_, mp)
+        return (hn.astype(jnp.float32), cn, nn, mn), hn.astype(x.dtype)
+
+    # checkpoint per-step: backward keeps only the (h, c, n, m) carries,
+    # not the gate pre-activations (the truly-sequential minimal state)
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    (hf, cf, nf, mf), ys = jax.lax.scan(step_fn, st, xg.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    # post up/down FFN (GeGLU at ratio ~4/3, per the sLSTM block design)
+    up = jnp.dot(y, p["w_up"].astype(x.dtype))
+    u, g = jnp.split(up, 2, axis=-1)
+    y = jnp.dot(u * jax.nn.gelu(g), p["w_down"].astype(x.dtype))
+    return y, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d, h, hd = slstm_dims(cfg)
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, h, hd), -1e30, jnp.float32)}

@@ -1,0 +1,62 @@
+"""int8 error-feedback gradient compression for the cross-pod axis.
+
+The multi-pod mesh's "pod" axis carries ONLY the data-parallel gradient
+all-reduce, over the slow data-center interconnect.  Ring all-reduce in
+f32 moves ~2 x 4 bytes/param across DCI; with 2 pods, an int8
+all-gather + local mean moves 1 byte/param gathered once — an 8x wire-byte
+reduction measured in the dry-run (§Perf, collective-bound cell).
+
+Scheme (error feedback a la 1-bit SGD / EF-SGD):
+    e     <- residual carried from last step (f32, grad-shaped)
+    g'    = g + e
+    q     = round(g' / scale) clipped to int8, scale = max|g'| / 127
+    e'    = g' - q * scale                      (new residual)
+    g_out = mean over pods of dequantized q     (via all_gather on int8)
+
+Implemented with shard_map over the "pod" axis only — inside the mapped
+function every other axis is still visible to GSPMD, so the model's TP/DP
+sharding is untouched.  Convergence: error feedback keeps the quantization
+noise unbiased over steps; tests assert compressed-SGD reaches the
+uncompressed loss on a quadratic within 1%.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(g: jax.Array):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_int8_allreduce_tree(grads, err, axis_name: str = "pod"):
+    """Per-leaf int8 error-feedback mean over ``axis_name``.
+
+    Must be called INSIDE a shard_map over ``axis_name``.  Returns
+    (mean_grads, new_err) with the same pytree structure.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        new_e = g32 - q.astype(jnp.float32) * scale
+        # all_gather int8 (1 byte/param on the wire) + local mean
+        qs = jax.lax.all_gather(q, axis_name)                  # (n_pods, ...)
+        ss = jax.lax.all_gather(scale, axis_name)
+        mean = jnp.mean(qs.astype(jnp.float32)
+                        * ss.reshape((-1,) + (1,) * g.ndim), axis=0)
+        return mean.astype(g.dtype), new_e
+    out = jax.tree.map(one, grads, err)
+    mean = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_err
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,85 @@
+"""Optimizers (no optax in this environment): AdamW for the LM framework,
+RMSprop for the paper-faithful pipeline, plus grad clipping and schedules.
+
+Optimizer moments are f32 regardless of param dtype (bf16 training keeps
+master statistics in f32; params themselves stay bf16 with f32 update
+math — standard mixed-precision practice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _f32_like(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    return {"m": _f32_like(params), "v": _f32_like(params)}
+
+
+def adamw_update(params, grads, opt, step, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params, {"m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# RMSprop (paper setup)
+# ---------------------------------------------------------------------------
+
+def rmsprop_init(params):
+    return {"ms": _f32_like(params)}
+
+
+def rmsprop_update(params, grads, opt, *, lr, decay=0.9, eps=1e-8):
+    ms = jax.tree.map(lambda m, g: decay * m + (1 - decay)
+                      * g.astype(jnp.float32) ** 2, opt["ms"], grads)
+    params = jax.tree.map(
+        lambda p, g, m: (p.astype(jnp.float32)
+                         - lr * g.astype(jnp.float32) / (jnp.sqrt(m) + eps)
+                         ).astype(p.dtype), params, grads, ms)
+    return params, {"ms": ms}
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def cosine_schedule(step, *, base_lr, warmup, total):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

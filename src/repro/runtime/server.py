@@ -1,0 +1,114 @@
+"""Batched decode server loop (the inference-side driver).
+
+Continuous-batching-lite: a fixed-size slot table (``batch`` concurrent
+sequences); finished sequences (EOS or max_len) free their slot, queued
+requests fill freed slots each tick; one jitted decode step advances every
+active slot per tick.  Prefill for an incoming request runs through the
+same decode step token-by-token when no prefill step is compiled (small
+models), or via prefill_step when one is.
+
+This is deliberately the same decode_step the dry-run lowers — the serving
+path at scale IS the lowered cell, just driven by this loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.runtime import steps as steps_lib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeServer:
+    def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
+                 max_len: int = 512, eos: int | None = None, greedy=True,
+                 seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len, self.eos = batch, max_len, eos
+        self.decode = jax.jit(steps_lib.make_decode_step(cfg),
+                              donate_argnums=(1,))
+        self.cache = M.init_cache(cfg, batch, max_len)
+        self.slots: list[Request | None] = [None] * batch
+        self.queue: list[Request] = []
+        self.remaining_prompt: list[np.ndarray] = [np.zeros((0,), np.int32)] * batch
+        self.key = jax.random.PRNGKey(seed)
+        self.greedy = greedy
+        self.ticks = 0
+        self._fresh = None  # lazily-built pristine cache for slot resets
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self.remaining_prompt[i] = np.asarray(req.prompt, np.int32)
+                if self._fresh is None:
+                    self._fresh = M.init_cache(self.cfg, self.batch, self.max_len)
+                self.cache = M.reset_slot(self.cfg, self.cache, self._fresh, i)
+
+    def _gather_tokens(self) -> np.ndarray:
+        toks = np.zeros((self.batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.remaining_prompt[i].size:       # prompt-feeding phase
+                toks[i, 0] = self.remaining_prompt[i][0]
+                self.remaining_prompt[i] = self.remaining_prompt[i][1:]
+            elif req.out:
+                toks[i, 0] = req.out[-1]
+            else:
+                toks[i, 0] = req.prompt[-1]
+        return toks
+
+    def tick(self):
+        """One decode step for all active slots."""
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return False
+        toks = self._gather_tokens()
+        logits, self.cache = self.decode(self.params, self.cache,
+                                         jnp.asarray(toks))
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits, -1))
+        else:
+            self.key, k = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(k, logits))
+        pos = np.asarray(self.cache["pos"])           # (B,) per-slot
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.remaining_prompt[i].size:
+                continue                              # still consuming prompt
+            req.out.append(int(nxt[i]))
+            if (self.eos is not None and req.out[-1] == self.eos) \
+                    or len(req.out) >= req.max_new \
+                    or int(pos[i]) >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+        self.ticks += 1
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        t0 = time.time()
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.ticks < max_ticks:
+            self.tick()
+        return {"ticks": self.ticks, "wall_s": time.time() - t0}

@@ -1,0 +1,83 @@
+"""Step functions — the compilation units of the whole system.
+
+``make_train_step(cfg)``   -> (state, batch) -> (state, metrics)
+``make_prefill_step(cfg)`` -> (params, batch) -> (last_logits, cache)
+``make_decode_step(cfg)``  -> (params, cache, inputs) -> (logits, cache)
+
+train_step = microbatched fwd+bwd (lax.scan gradient accumulation when
+cfg-level ``grad_accum > 1``) + global-norm clip + cosine LR + AdamW.
+All functions are pure and jit-friendly; sharding is applied by the caller
+(launch/dryrun.py, runtime/trainer.py) via in_shardings/out_shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+
+
+def init_train_state(key, cfg: ModelConfig):
+    params = M.init_model(key, cfg)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, *, grad_accum: int = 1,
+                    base_lr: float = 3e-4, warmup: int = 200,
+                    total_steps: int = 10_000, max_grad_norm: float = 1.0):
+    """Returns train_step(state, batch)->(state, metrics).  ``batch`` =
+    {"inputs": (B, S)[, d], "labels": (B, S)}; B must divide by grad_accum."""
+
+    def loss_fn(params, inputs, labels):
+        return M.lm_loss(cfg, params, inputs, labels)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch["inputs"], batch["labels"])
+        else:
+            # microbatch accumulation: scan over grad_accum slices of B
+            def mb(carry, sl):
+                acc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, sl["inputs"], sl["labels"])
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+            slices = jax.tree.map(
+                lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum,
+                                    *a.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(mb, (zeros, 0.0), slices)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss, metrics = lsum / grad_accum, {}
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_schedule(state["step"], base_lr=base_lr, warmup=warmup,
+                             total=total_steps)
+        params, opt = adamw_update(params, grads, state["opt"], state["step"],
+                                   lr=lr)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache, _, _ = M.forward(cfg, params, batch["inputs"],
+                                        collect_cache=True, serve=True)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, inputs):
+        return M.decode(cfg, params, cache, inputs, serve=True)
+    return decode_step

@@ -1,0 +1,132 @@
+"""Trainer: the orchestration loop a real cluster job runs.
+
+Responsibilities:
+  * jit the train step with mesh shardings (or run unsharded on one device);
+  * deterministic data via data.pipeline.batch_at(step) — restart replays
+    nothing;
+  * checkpoint every ``ckpt_every`` steps (atomic, keep-k) and AUTO-RESTORE
+    the latest checkpoint at startup — a preempted/failed job needs no
+    external coordination to resume;
+  * fault injection hook (``fail_at``) to exercise the restart path in
+    tests exactly as a preemption would;
+  * straggler monitor: EWMA of step wall-time, flags outliers (on real
+    clusters this feeds the controller that respawns slow hosts; here it
+    is recorded in metrics).
+
+Synchronous SPMD fault model (DESIGN.md §5): node loss = job restart from
+the newest checkpoint; elasticity = checkpoints are mesh-agnostic so the
+restarted job may use a different device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as ckpt_lib
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM
+from repro.runtime import steps as steps_lib
+from repro.sharding import rules as R
+
+
+class PreemptionError(RuntimeError):
+    """Injected fault (simulated SIGTERM mid-run)."""
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.2
+    threshold: float = 2.5
+    ewma: float = 0.0
+    slow_steps: int = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.ewma == 0.0:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        self.slow_steps += slow
+        return slow
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = ""
+    keep_k: int = 3
+    base_lr: float = 3e-4
+    warmup: int = 20
+    grad_accum: int = 1
+    log_every: int = 10
+    fail_at: int | None = None        # fault injection (tests)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig, ds: SyntheticLM,
+                 mesh=None, seed: int = 0):
+        self.cfg, self.tc, self.ds, self.mesh = cfg, tc, ds, mesh
+        self.monitor = StragglerMonitor()
+        self.history: list[dict] = []
+        step_fn = steps_lib.make_train_step(
+            cfg, grad_accum=tc.grad_accum, base_lr=tc.base_lr,
+            warmup=tc.warmup, total_steps=tc.total_steps)
+
+        state = steps_lib.init_train_state(jax.random.PRNGKey(seed), cfg)
+        if mesh is not None:
+            specs, _ = R.state_pspecs(mesh, state)
+            ns = jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                              is_leaf=lambda x: isinstance(x, P))
+            self.state_shardings = ns
+            state = jax.tree.map(lambda a, s: jax.device_put(a, s), state, ns)
+            self.step_fn = jax.jit(step_fn, in_shardings=(ns, None),
+                                   out_shardings=(ns, None),
+                                   donate_argnums=(0,))
+        else:
+            self.state_shardings = None
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        self.state = state
+        self.start_step = 0
+        # ---- auto-restore ---------------------------------------------------
+        if tc.ckpt_dir:
+            restored, at = ckpt_lib.restore(tc.ckpt_dir,
+                                            shardings=self.state_shardings)
+            if restored is not None:
+                if self.state_shardings is None:
+                    restored = jax.tree.map(jax.numpy.asarray, restored)
+                self.state = restored
+                self.start_step = int(at)
+
+    def run(self) -> dict:
+        t_start = time.time()
+        step = self.start_step
+        while step < self.tc.total_steps:
+            if self.tc.fail_at is not None and step == self.tc.fail_at:
+                raise PreemptionError(f"injected preemption at step {step}")
+            batch = self.ds.batch_at(step)
+            t0 = time.time()
+            self.state, metrics = self.step_fn(self.state, batch)
+            loss = float(metrics["loss"])           # blocks; honest step time
+            dt = time.time() - t0
+            slow = self.monitor.observe(dt)
+            step += 1
+            rec = {"step": step, "loss": loss, "dt": dt, "slow": slow,
+                   "grad_norm": float(metrics["grad_norm"])}
+            self.history.append(rec)
+            if step % self.tc.log_every == 0 or step == self.tc.total_steps:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"({dt:.2f}s{' SLOW' if slow else ''})", flush=True)
+            if self.tc.ckpt_dir and (step % self.tc.ckpt_every == 0
+                                     or step == self.tc.total_steps):
+                ckpt_lib.save(self.tc.ckpt_dir, step, self.state,
+                              keep_k=self.tc.keep_k)
+        return {"steps": step - self.start_step,
+                "final_loss": self.history[-1]["loss"] if self.history else None,
+                "wall_s": time.time() - t_start,
+                "slow_steps": self.monitor.slow_steps}

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_pspec, cache_pspecs, param_pspecs,
+                                  state_pspecs)
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "state_pspecs"]

@@ -1,0 +1,248 @@
+"""Declarative sharding rules: param/cache/batch pytrees -> PartitionSpecs.
+
+Scheme (DESIGN.md §5): the mesh has axes ("data", "model") — plus a leading
+pure-DP "pod" axis in the multi-pod mesh.  Parameters are tensor-parallel
+over "model" on their widest semantically-shardable dim and FSDP-sharded
+over "data" on a complementary dim.  Divisibility is checked per-dim; a dim
+that does not divide falls back to replication (recorded per rule so tests
+can assert what happened).
+
+Path-driven rules (matched on the param path suffix):
+  embed/tok        (V, d)        -> P(model, data)      vocab-parallel
+  embed/unembed    (d, V)        -> P(data, model)
+  attn wq/wk/wv    (d, H*hd)     -> P(data, model)      head-parallel
+  attn wo          (H*hd, d)     -> P(model, data)
+  ffn w_in/w_gate  (d, f)        -> P(data, model)      Megatron col
+  ffn w_out        (f, d)        -> P(model, data)      Megatron row
+  moe w_*          (E, d, f)     -> P(model, data, None) EP when E % |model|
+                                    else P(None, data, model) TP-in-expert
+  mamba/mlstm/slstm projections  -> widest dim over model
+  biases / norms / scalars       -> replicated
+Stacked-scan params have 1-2 leading layer dims -> prepended None.
+
+Caches: KV (L, B, S, kv, hd): batch over data when divisible, else
+sequence over data (context-parallel decode, the long_500k B=1 case);
+kv-heads over model when divisible, else hd over model.
+SSM states (..., B, H, P, N): H over model, B over data if divisible.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _dp_axes(mesh: Mesh):
+    """The data-parallel meta-axis: ("pod","data") multi-pod, else "data"."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([_axis_size(mesh, a) for a in _dp_axes(mesh)]))
+
+
+def _fits(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+class ShardingReport:
+    """Collects which rules applied / fell back (asserted in tests)."""
+
+    def __init__(self):
+        self.fallbacks: list[str] = []
+
+    def fallback(self, path: str, why: str):
+        self.fallbacks.append(f"{path}: {why}")
+
+
+def _spec2d(mesh, path, shape, lead, col_model: bool, report):
+    """Rule for a 2D matmul weight (possibly with leading stack dims).
+
+    col_model=True shards the LAST dim over model (column-parallel);
+    otherwise the first non-lead dim.  The complementary dim FSDPs over
+    data.  Falls back per-dim on divisibility.
+    """
+    md = _axis_size(mesh, "model")
+    dp = _dp_size(mesh)
+    rows, cols = shape[lead], shape[lead + 1]
+    if col_model:
+        model_dim, data_dim = cols, rows
+        spec = [None] * lead + [_dp_axes(mesh) if _fits(rows, dp) else None,
+                                "model" if _fits(cols, md) else None]
+    else:
+        model_dim, data_dim = rows, cols
+        spec = [None] * lead + ["model" if _fits(rows, md) else None,
+                                _dp_axes(mesh) if _fits(cols, dp) else None]
+    if not _fits(model_dim, md):
+        report.fallback(path, f"model dim {model_dim} % {md} != 0")
+    if not _fits(data_dim, dp):
+        report.fallback(path, f"data dim {data_dim} % {dp} != 0")
+    return P(*spec)
+
+
+# param-path suffixes that are column-parallel (last dim over model)
+_COL = ("wq", "wk", "wv", "w_in", "w_gate", "w_up", "w_x", "w_xz", "w_bc",
+        "w_q", "w_k", "w_v", "w_z", "unembed", "a_w1", "router", "w_if",
+        "w_dt")
+# row-parallel (first matmul dim over model)
+_ROW = ("wo", "w_out", "w_down", "a_w2", "tok")
+
+
+def _param_rule(mesh, path: str, arr, report) -> P:
+    name = path.split("/")[-1]
+    shape = arr.shape
+    nd = len(shape)
+    md = _axis_size(mesh, "model")
+    # Embedding tables: vocab-TP ONLY (no FSDP on the feature dim).  Sharding
+    # d over "data" here poisons the gather/unembed with token-replication
+    # ("involuntary full rematerialization" in the SPMD partitioner).
+    if name == "tok":
+        return P("model" if _fits(shape[0], md) else None, None)
+    if name == "unembed":
+        return P(None, "model" if _fits(shape[1], md) else None)
+    # ApproxFFN: approximators + router are tiny (n x d x d_hidden); TP
+    # sharding them only buys per-layer all-reduces of the (n, T, h)
+    # activations (§Perf C.2) — replicate instead.
+    if "approx/" in path and name in ("a_w1", "a_w2", "router"):
+        return P(*([None] * nd))
+    # count leading stack dims: params under blocks/ carry 1 (uniform) or 2
+    # (xlstm/hybrid inner) scan dims; detect by path prefix
+    lead = 0
+    if path.startswith(("blocks/", "mlstm/", "slstm/", "mamba/")):
+        lead = 2 if path.startswith(("mlstm/", "mamba/")) else 1
+    mat_nd = nd - lead
+
+    if mat_nd <= 1:
+        return P()  # biases, norms, scalars: replicated
+    if name in ("w_in", "w_gate", "w_out") and mat_nd == 3:
+        # MoE expert-stacked weights (E, d, f)/(E, f, d): EP over model
+        e = shape[lead]
+        md = _axis_size(mesh, "model")
+        if _fits(e, md):
+            return P(*([None] * lead), "model",
+                     _dp_axes(mesh) if _fits(shape[lead + 1], _dp_size(mesh)) else None,
+                     None)
+        report.fallback(path, f"EP: {e} experts % {md} != 0 -> TP-in-expert")
+        col = name != "w_out"
+        inner = _spec2d(mesh, path, shape, lead + 1, col, report)
+        return P(*([None] * (lead + 1)), *inner[lead + 1:])
+    if name in ("a_w1", "a_w2", "w_h") and mat_nd == 3:
+        # stacked approximators (n, d, h) / sLSTM per-head recurrent (H, hd, 4hd)
+        inner = _spec2d(mesh, path, shape, lead + 1, name != "a_w2", report)
+        return P(*([None] * (lead + 1)), *inner[lead + 1:])
+    if mat_nd == 2:
+        if name in _COL:
+            return _spec2d(mesh, path, shape, lead, True, report)
+        if name in _ROW:
+            return _spec2d(mesh, path, shape, lead, False, report)
+        # unknown 2D param: shard the larger dim over model if it divides
+        return _spec2d(mesh, path, shape, lead, shape[lead + 1] >= shape[lead],
+                       report)
+    report.fallback(path, f"no rule for ndim={nd}; replicated")
+    return P(*([None] * nd))
+
+
+def _tree_paths(tree) -> dict[str, Any]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def param_pspecs(mesh: Mesh, params) -> tuple[Any, ShardingReport]:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    report = ShardingReport()
+    flat = _tree_paths(params)
+    specs = {k: _param_rule(mesh, k, v, report) for k, v in flat.items()}
+
+    def rebuild(path_prefix, subtree):
+        if isinstance(subtree, dict):
+            return {k: rebuild(f"{path_prefix}{k}/", v) for k, v in subtree.items()}
+        if isinstance(subtree, (list, tuple)):
+            return type(subtree)(rebuild(f"{path_prefix}{i}/", v)
+                                 for i, v in enumerate(subtree))
+        return specs[path_prefix[:-1]]
+    return rebuild("", params), report
+
+
+def batch_pspec(mesh: Mesh, arr_or_spec) -> P:
+    """Inputs/labels: batch over the DP meta-axis; embeddings also feature-
+    sharded over model.  Falls back to sequence sharding when B is small
+    (long_500k decode with B=1)."""
+    shape = arr_or_spec.shape
+    dp = _dp_axes(mesh)
+    b = shape[0]
+    if _fits(b, _dp_size(mesh)):
+        spec = [dp] + [None] * (len(shape) - 1)
+    elif len(shape) >= 2 and _fits(shape[1], _dp_size(mesh)):
+        spec = [None, dp] + [None] * (len(shape) - 2)   # sequence-sharded
+    else:
+        spec = [None] * len(shape)
+    if len(shape) == 3 and _fits(shape[-1], _axis_size(mesh, "model")):
+        spec[-1] = "model"                               # stub embeddings
+    return P(*spec)
+
+
+def _cache_rule(mesh, path: str, arr) -> P:
+    name = path.split("/")[-1]
+    shape = arr.shape
+    md = _axis_size(mesh, "model")
+    dp = _dp_size(mesh)
+    dpa = _dp_axes(mesh)
+    if name == "pos" or len(shape) <= 1:
+        return P()
+    if name in ("k", "v"):
+        # (L, B, S, KV, hd) or (G, B, S, KV, hd)
+        l_, b, s, kv, hd = shape
+        spec = [None,
+                dpa if _fits(b, dp) else None,
+                None, None, None]
+        if spec[1] is None and _fits(s, dp):
+            spec[2] = dpa                                # context-parallel
+        if _fits(kv, md):
+            spec[3] = "model"
+        elif _fits(hd, md):
+            spec[4] = "model"
+        return P(*spec)
+    # SSM/mLSTM/sLSTM states: (..., B, H, ...) — find B = first dim that
+    # matches known batch position: states are (G[,k], B, H, ...)
+    lead = 2 if path.startswith(("mlstm/", "mamba/")) else 1
+    spec = [None] * len(shape)
+    if _fits(shape[lead], dp):
+        spec[lead] = dpa
+    if len(shape) > lead + 1 and _fits(shape[lead + 1], md):
+        spec[lead + 1] = "model"
+    return P(*spec)
+
+
+def cache_pspecs(mesh: Mesh, cache):
+    flat = _tree_paths(cache)
+    specs = {k: _cache_rule(mesh, k, v) for k, v in flat.items()}
+
+    def rebuild(prefix, subtree):
+        if isinstance(subtree, dict):
+            return {k: rebuild(f"{prefix}{k}/", v) for k, v in subtree.items()}
+        if isinstance(subtree, (list, tuple)):
+            return type(subtree)(rebuild(f"{prefix}{i}/", v)
+                                 for i, v in enumerate(subtree))
+        return specs[prefix[:-1]]
+    return rebuild("", cache)
+
+
+def state_pspecs(mesh: Mesh, state):
+    """TrainState {"params", "opt": {"m","v"}, "step"}: optimizer moments
+    shard exactly like their parameters (FSDP)."""
+    pspecs, report = param_pspecs(mesh, state["params"])
+    return {"params": pspecs,
+            "opt": jax.tree.map(lambda _: pspecs, state["opt"],
+                                is_leaf=lambda x: x is state["opt"]["m"]
+                                or x is state["opt"]["v"]),
+            "step": P()}, report

@@ -1,0 +1,175 @@
+"""Sharding rules + multi-device integration (8 fake CPU devices via a
+subprocess so the main test process keeps 1 device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.runtime import steps as S
+from repro.sharding import rules as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class FakeMesh:
+    """Duck-typed mesh: just axis names/sizes for the rule functions."""
+
+    def __init__(self, shape, names):
+        import numpy as np
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_every_leaf(arch):
+    cfg = get_config(arch)
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    shapes = jax.eval_shape(lambda: S.init_train_state(jax.random.PRNGKey(0), cfg))
+    specs, report = R.state_pspecs(mesh, shapes)
+    n_leaves = len(jax.tree.leaves(shapes,
+                                   is_leaf=lambda x: hasattr(x, "shape")))
+    n_specs = len(jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
+    assert n_leaves == n_specs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_model_dims_shard_over_16(arch):
+    """Every arch must expose enough TP parallelism for the 16-wide model
+    axis on its big matmuls (d_ff / heads / experts)."""
+    cfg = get_config(arch)
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    shapes = jax.eval_shape(lambda: S.init_train_state(jax.random.PRNGKey(0), cfg))
+    specs, report = R.state_pspecs(mesh, shapes)
+    flat = R._tree_paths(specs["params"])
+    big_unsharded = []
+    flat_shapes = R._tree_paths(shapes["params"])
+    for path, spec in flat.items():
+        shape = flat_shapes[path].shape
+        size = 1
+        for d in shape:
+            size *= d
+        if size >= (1 << 22) and all(s is None for s in spec):
+            big_unsharded.append((path, shape))
+    assert not big_unsharded, big_unsharded
+
+
+def test_divisibility_fallback_replicates():
+    cfg = get_config("olmo-1b")
+    mesh = FakeMesh((16, 24), ("data", "model"))  # 24 does not divide heads*hd
+    shapes = jax.eval_shape(lambda: S.init_train_state(jax.random.PRNGKey(0), cfg))
+    specs, report = R.state_pspecs(mesh, shapes)
+    # d_ff=8192 % 24 != 0 -> fallback recorded, spec still valid
+    assert any("w_in" in f or "w_out" in f or "wq" in f
+               for f in report.fallbacks)
+
+
+def test_batch_pspec_falls_back_to_sequence():
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    long_decode = jax.ShapeDtypeStruct((1, 524288), jax.numpy.int32)
+    spec = R.batch_pspec(mesh, long_decode)
+    # PartitionSpec normalizes 1-tuples to bare names
+    assert spec[0] is None and spec[1] in ("data", ("data",))
+
+
+_MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.registry import get_config, smoke_config
+    from repro.data.pipeline import SyntheticLM
+    from repro.runtime import steps as S
+    from repro.sharding import rules as R
+    from repro.sharding import activations as A
+
+    cfg = dataclasses.replace(smoke_config(get_config("internlm2-1.8b")),
+                              d_model=64, n_heads=4, n_kv_heads=2, vocab=256)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    state = S.init_train_state(jax.random.PRNGKey(0), cfg)
+    specs, _ = R.state_pspecs(mesh, state)
+    ns = jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    state_sharded = jax.tree.map(lambda a, s: jax.device_put(a, s), state, ns)
+    step = S.make_train_step(cfg)
+    batch = ds.batch_at(0)
+
+    # sharded step
+    with mesh, A.activation_sharding(P(("data",), None, None)):
+        f = jax.jit(step, in_shardings=(ns, None), out_shardings=(ns, None))
+        st2, m2 = f(state_sharded, batch)
+    # single-device reference
+    st1, m1 = jax.jit(step)(state, batch)
+    out = {"loss_sharded": float(m2["loss"]), "loss_single": float(m1["loss"])}
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(st1["params"]),
+                             jax.tree.leaves(st2["params"]))]
+    out["max_param_diff"] = max(diffs)
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_sharded_step_matches_single_device():
+    """SPMD partitioning must not change the math (8 fake devices)."""
+    r = subprocess.run([sys.executable, "-c", _MULTIDEV], capture_output=True,
+                       text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.split("RESULT")[1])
+    assert abs(out["loss_sharded"] - out["loss_single"]) < 1e-3
+    assert out["max_param_diff"] < 5e-2  # bf16-free f32 smoke tolerance
+
+
+_MOE_MANUAL = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.registry import get_config, smoke_config
+    from repro.models import moe as MOE
+    from repro.sharding import activations as A
+    from repro.sharding import rules as R
+
+    cfg = smoke_config(get_config("moonshot-v1-16b-a3b"))
+    # 4 experts over a model axis of 2 -> manual EP path (E % md == 0)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    p = MOE.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+
+    # single-device reference (local chunked path)
+    y_ref, aux_ref = MOE._moe_chunked(cfg, p, x)
+
+    # distributed manual path under mesh + activation context
+    pspecs, _ = R.param_pspecs(mesh, {"blocks": {"moe": p}})
+    ns = jax.tree.map(lambda q: NamedSharding(mesh, q), pspecs["blocks"]["moe"],
+                      is_leaf=lambda q: isinstance(q, P))
+    p_sh = jax.tree.map(lambda a, s: jax.device_put(a, s), p, ns)
+    xs = jax.device_put(x, NamedSharding(mesh, P(("data",), None, None)))
+    with mesh, A.activation_sharding(P(("data",), None, None)):
+        y, aux = jax.jit(lambda p_, x_: MOE.moe_fwd(cfg, p_, x_))(p_sh, xs)
+    dy = float(jnp.max(jnp.abs(y - y_ref)))
+    # capacity semantics differ (per data shard vs global) -> compare where
+    # both paths kept the token (no-drop tolerance via generous capacity)
+    out = {"max_diff": dy, "aux_ref": float(aux_ref), "aux": float(aux)}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_moe_manual_ep_matches_reference():
+    """Manual expert-parallel MoE == local path (8 fake devices)."""
+    r = subprocess.run([sys.executable, "-c", _MOE_MANUAL],
+                       capture_output=True, text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.split("RESULT")[1])
+    assert out["max_diff"] < 1e-4, out
+    assert abs(out["aux"] - out["aux_ref"]) < 1e-4, out
