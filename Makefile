@@ -1,0 +1,22 @@
+# Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
+# `test` uses whatever python is active — tests degrade gracefully when
+# `hypothesis` is absent (tests/_hypothesis_compat.py).
+
+PY ?= python
+
+.PHONY: test test-tier1 bench-quick bench-dispatch deps
+
+deps:
+	$(PY) -m pip install "jax[cpu]" pytest hypothesis
+
+test-tier1:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q
+
+bench-quick:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only kernels,dispatch
+
+bench-dispatch:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick

@@ -1,0 +1,119 @@
+"""Dispatch-engine microbench: XLA capacity dispatch vs the Pallas
+weight-switch engine (runtime/dispatch.py) across batch sizes and
+approximator counts.
+
+On CPU the Pallas backend runs in interpreter mode, so its wall-time
+column measures dispatch/plumbing overhead, not kernel speed (the kernel
+target is TPU v5e — rerun there with interpret off for real numbers).
+The XLA column IS a meaningful portable baseline, and both rows carry the
+invoke_stats the engine reports (invocation rate, dropped rows, executed
+vs useful rows) so the capacity/padding economics are visible per shape.
+
+    PYTHONPATH=src python -m benchmarks.bench_dispatch [--quick]
+
+Writes benchmarks/out/dispatch.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import dispatch as D
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+
+
+def _make_case(key, t, n, d, d_h, d_ff):
+    ks = jax.random.split(key, 7)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32) * 0.5
+    router = jax.random.normal(ks[1], (d, n + 1)) * 0.5
+    w1 = jax.random.normal(ks[2], (n, d, d_h)) * 0.2
+    b1 = jnp.zeros((n, d_h))
+    w2 = jax.random.normal(ks[3], (n, d_h, d)) * 0.2
+    b2 = jnp.zeros((n, d))
+    wi = jax.random.normal(ks[4], (d, d_ff)) * 0.1
+    wo = jax.random.normal(ks[5], (d_ff, d)) * 0.1
+    return x, x @ router, (w1, b1, w2, b2), (wi, wo)
+
+
+def _time(fn, *args, iters):
+    y, _ = fn(*args)
+    jax.block_until_ready(y)                     # compile outside the clock
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y, stats = fn(*args)
+    jax.block_until_ready(y)
+    return (time.perf_counter() - t0) / iters * 1e3, stats
+
+
+def main(quick: bool = False, iters: int | None = None):
+    os.makedirs(OUT, exist_ok=True)
+    on_cpu = jax.default_backend() != "tpu"
+    if quick:
+        shapes = [(256, 2), (512, 4)]
+        d, d_h, d_ff, block_t = 128, 32, 256, 64
+        iters = iters or 3
+    else:
+        shapes = [(1024, 2), (4096, 4), (4096, 8), (16384, 4)]
+        d, d_h, d_ff, block_t = 512, 64, 2048, 256
+        iters = iters or 10
+        if on_cpu:  # interpreter-mode Pallas: keep CPU runs bounded
+            shapes = [s for s in shapes if s[0] <= 4096]
+
+    rows = []
+    for t, n in shapes:
+        key = jax.random.PRNGKey(t * 31 + n)
+        x, logits, (w1, b1, w2, b2), (wi, wo) = _make_case(
+            key, t, n, d, d_h, d_ff)
+        exact_fn = lambda xb: jnp.dot(jax.nn.silu(jnp.dot(xb, wi)), wo)
+        exact_cap, invoke_cap = max(t // 2, 1), max(int(t * 0.4), 1)
+        outs = {}
+        for backend in ("xla", "pallas"):
+            fn = jax.jit(lambda xx, lg, be=backend: D.mcma_dispatch(
+                xx, lg, exact_fn, w1, b1, w2, b2, exact_cap=exact_cap,
+                invoke_cap=invoke_cap, backend=be, block_t=block_t,
+                interpret=on_cpu and be == "pallas"))
+            ms, stats = _time(fn, x, logits, iters=iters)
+            y, _ = fn(x, logits)
+            outs[backend] = np.asarray(y)
+            row = {
+                "T": t, "n_approx": n, "d_model": d, "backend": backend,
+                "block_t": block_t,
+                "interpret": on_cpu and backend == "pallas",
+                "ms_per_call": round(ms, 3),
+                "invocation": round(float(stats["invocation"]), 4),
+                "exact_frac": round(float(stats["exact_frac"]), 4),
+                "dropped": int(stats["dropped"]),
+                "executed_rows": int(stats["executed_rows"]),
+                "padding_rows": int(stats["padding_rows"]),
+            }
+            rows.append(row)
+            print(f"T={t:6d} n={n} {backend:6s} {ms:9.2f} ms/call "
+                  f"inv={row['invocation']:.3f} "
+                  f"pad_rows={row['padding_rows']}", flush=True)
+        err = float(np.abs(outs["pallas"] - outs["xla"]).max())
+        for row in rows[-2:]:
+            row["max_abs_err_vs_xla"] = round(err, 7) \
+                if row["backend"] == "pallas" else 0.0
+        assert err < 1e-4, f"backend divergence at T={t} n={n}: {err}"
+
+    with open(os.path.join(OUT, "dispatch.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    print(f"wrote {os.path.join(OUT, 'dispatch.csv')} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args()
+    main(quick=args.quick, iters=args.iters)

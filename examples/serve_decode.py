@@ -7,6 +7,7 @@ and (optionally) the MCMA ApproxFFN serve path with capacity dispatch.
 
     PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
     PYTHONPATH=src python examples/serve_decode.py --approx
+    PYTHONPATH=src python examples/serve_decode.py --approx --mcma-dispatch
 """
 import argparse
 import dataclasses
@@ -24,17 +25,21 @@ def main(argv=None):
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--approx", action="store_true",
                     help="serve through the MCMA ApproxFFN capacity path")
+    ap.add_argument("--mcma-dispatch", action="store_true",
+                    help="route the ApproxFFN through the Pallas "
+                         "weight-switch dispatch engine (implies --approx)")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(get_config(args.arch))
-    if args.approx:
+    if args.approx or args.mcma_dispatch:
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
             cfg.approx, enable=True))
     assert cfg.input_mode == "tokens", "serve demo expects token models"
     params = M.init_model(jax.random.PRNGKey(0), cfg)
-    server = DecodeServer(cfg, params, batch=args.batch, max_len=96)
+    server = DecodeServer(cfg, params, batch=args.batch, max_len=96,
+                          use_mcma_dispatch=args.mcma_dispatch)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -50,9 +55,13 @@ def main(argv=None):
         print(f"req {r.rid}: prompt_len={len(r.prompt)} -> "
               f"{len(r.out)} new tokens: {r.out[:8]}...")
     done = sum(r.done for r in reqs)
+    path = ("MCMA-dispatch" if args.mcma_dispatch
+            else "approx-FFN" if args.approx else "exact-FFN")
     print(f"\n{done}/{len(reqs)} requests served in {stats['ticks']} ticks "
-          f"with a {args.batch}-slot table "
-          f"({'approx-FFN' if args.approx else 'exact-FFN'} path)")
+          f"with a {args.batch}-slot table ({path} path)")
+    if "invocation_rate" in stats:
+        print(f"mean invocation rate (fraction of tokens approximated): "
+              f"{stats['invocation_rate']:.3f}")
     assert done == len(reqs)
 
 

@@ -27,6 +27,12 @@ class ApproxConfig:
     # approximator.  FLOP savings vs dense FFN = 1 - exact_frac.
     exact_frac: float = 0.5
     invoke_frac: float = 0.4
+    # serve-mode dispatch engine (runtime/dispatch.py): "xla" = portable
+    # per-class capacity dispatch (the test oracle); "pallas" = the
+    # scalar-prefetch weight-switch kernel (kernels/switched_mlp.py).
+    backend: str = "xla"
+    block_t: int = 128           # Pallas dispatch row-tile size
+    interpret: bool = False      # Pallas interpreter mode (CPU/CI runs)
 
 
 @dataclasses.dataclass(frozen=True)

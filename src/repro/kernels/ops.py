@@ -45,6 +45,46 @@ def mlp_apply(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
     return y[:t, :d_out]
 
 
+def worst_case_rows(t: int, n: int, block_t: int) -> int:
+    """Static padded row count class_sort_plan produces for T rows and n
+    classes — i.e. the rows the switched kernel actually launches."""
+    return _pad_to(t + n * block_t, block_t)
+
+
+def class_sort_plan(cls: jax.Array, n: int, block_t: int):
+    """Static-shape plan grouping rows by class into single-class row-tiles.
+
+    cls: (T,) int32 in [0, n).  Returns ``(order, pos, tile_cls,
+    padded_sizes, t_pad)``: original row ``order[i]`` lands at padded
+    position ``pos[i]`` of a (t_pad, ...) buffer in which every
+    ``block_t``-row tile holds rows of exactly one class
+    (``tile_cls[tile]``); worst-case padding is one partial tile per class,
+    so ``t_pad`` is static.  This is the invocation-side machinery the
+    weight-switch kernel (switched_mlp.py) and the serving dispatch
+    runtime (runtime/dispatch.py) share.
+    """
+    t = cls.shape[0]
+    t_pad = worst_case_rows(t, n, block_t)     # static worst case
+
+    # --- group rows by class (stable sort keeps cache-friendly order) ------
+    order = jnp.argsort(cls, stable=True)
+    cls_sorted = cls[order]
+    sizes = jnp.bincount(cls, length=n)                       # (n,)
+    padded_sizes = (sizes + block_t - 1) // block_t * block_t
+    padded_off = jnp.concatenate([jnp.zeros(1, sizes.dtype),
+                                  jnp.cumsum(padded_sizes)])  # (n+1,)
+    start = jnp.concatenate([jnp.zeros(1, sizes.dtype), jnp.cumsum(sizes)])
+    rank = jnp.arange(t) - start[cls_sorted]                  # rank within class
+    pos = padded_off[cls_sorted] + rank                       # padded position
+
+    # --- per-tile class ------------------------------------------------------
+    tile_starts = jnp.arange(t_pad // block_t) * block_t
+    tile_cls = jnp.clip(
+        jnp.searchsorted(padded_off[1:], tile_starts, side="right"), 0, n - 1
+    ).astype(jnp.int32)
+    return order, pos, tile_cls, padded_sizes, t_pad
+
+
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
 def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
                    w2: jax.Array, b2: jax.Array, *, block_t: int = 256,
@@ -60,26 +100,9 @@ def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
     d_h, d_out = w1.shape[2], w2.shape[2]
     d_in_p, d_h_p, d_out_p = (_pad_to(d_in, LANE), _pad_to(d_h, LANE),
                               _pad_to(d_out, LANE))
-    t_pad = _pad_to(t + n * block_t, block_t)  # static worst case
-
-    # --- group rows by class (stable sort keeps cache-friendly order) ------
-    order = jnp.argsort(cls, stable=True)
-    cls_sorted = cls[order]
-    sizes = jnp.bincount(cls, length=n)                       # (n,)
-    padded_sizes = (sizes + block_t - 1) // block_t * block_t
-    padded_off = jnp.concatenate([jnp.zeros(1, sizes.dtype),
-                                  jnp.cumsum(padded_sizes)])  # (n+1,)
-    start = jnp.concatenate([jnp.zeros(1, sizes.dtype), jnp.cumsum(sizes)])
-    rank = jnp.arange(t) - start[cls_sorted]                  # rank within class
-    pos = padded_off[cls_sorted] + rank                       # padded position
+    order, pos, tile_cls, _, t_pad = class_sort_plan(cls, n, block_t)
 
     xp = jnp.zeros((t_pad, d_in_p), x.dtype).at[pos, :d_in].set(x[order])
-
-    # --- per-tile class ------------------------------------------------------
-    tile_starts = jnp.arange(t_pad // block_t) * block_t
-    tile_cls = jnp.clip(
-        jnp.searchsorted(padded_off[1:], tile_starts, side="right"), 0, n - 1
-    ).astype(jnp.int32)
 
     w1p = jnp.pad(w1, ((0, 0), (0, d_in_p - d_in), (0, d_h_p - d_h)))
     b1p = jnp.pad(b1, ((0, 0), (0, d_h_p - d_h)))[:, None, :]

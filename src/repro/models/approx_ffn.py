@@ -108,12 +108,15 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
     gain realized as a FLOP reduction.  invoke capacity per approximator is
     sized for a balanced dispatch with slack.
 
-    Dispatch is GROUPED over the data shards (same lesson as the MoE
-    dispatch, §Perf B/C: global cumsum ranking across a token-sharded dim
-    forces the partitioner to replicate tokens).  Each group ranks and
-    gathers only its own tokens — vmapped, group dim = batch-shard dim —
-    so the whole dispatch stays local per data shard.
+    The engine is ``runtime/dispatch.mcma_dispatch`` (classify -> capacity
+    -> class-sort -> weight-switch kernel / XLA oracle -> exact -> scatter);
+    ``cfg.approx.backend`` picks the backend.  Under a distributed mesh the
+    fully-manual shard_map path below takes over instead (same lesson as
+    the MoE dispatch, §Perf B/C: global cumsum ranking across a
+    token-sharded dim forces the partitioner to replicate tokens, so each
+    data shard must rank/gather only its own tokens).
     """
+    from repro.runtime.dispatch import mcma_dispatch
     from repro.sharding.activations import manual_dp_context
     a = cfg.approx
     b, s, d = x.shape
@@ -125,46 +128,20 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
         g = int(_np.prod([sizes[ax] for ax in dp]))
         if b % g == 0 and cfg.d_ff % sizes["model"] == 0:
             return _approx_serve_manual(cfg, p, x, mesh, dp)
-    groups = 1
-    tg = t // groups
-    xt = x.reshape(groups, tg, d)
-    logits = jnp.einsum("gtd,dc->gtc", xt,
-                        p["router"].astype(x.dtype)).astype(jnp.float32)
-    cls = jnp.argmax(logits, -1)                            # (G, Tg) 0..n
 
-    exact_cap = max(int(tg * a.exact_frac), 1)
-    app_cap = max(int(tg * a.invoke_frac), 1)
-
-    def group_dispatch(xg, cg):
-        out = jnp.zeros((tg, d), x.dtype)
-
-        def path_out(mask, cap, fn):
-            """Gather <=cap tokens where mask, apply fn, scatter back."""
-            pos = jnp.cumsum(mask.astype(jnp.int32)) - 1       # rank in class
-            keep = mask & (pos < cap)
-            idx = jnp.where(keep, pos, cap)                    # cap = trash
-            buf = jnp.zeros((cap + 1, d), x.dtype).at[idx].set(
-                xg * keep[:, None])
-            y = fn(buf[:cap])
-            y = jnp.concatenate([y, jnp.zeros((1, d), x.dtype)], 0)
-            return y[jnp.where(keep, pos, cap)] * keep[:, None]
-
-        out = out + path_out(cg == 0, exact_cap,
-                             lambda xb: ffn_fwd(cfg, p["ffn"], xb))
-        for i in range(a.n_approx):
-            def approx_i(xb, i=i):
-                h = jnp.tanh(jnp.dot(xb, p["a_w1"][i].astype(xb.dtype))
-                             + p["a_b1"][i].astype(xb.dtype))
-                return jnp.dot(h, p["a_w2"][i].astype(xb.dtype)) \
-                    + p["a_b2"][i].astype(xb.dtype)
-            out = out + path_out(cg == i + 1, app_cap, approx_i)
-        return out
-
-    out = jax.vmap(group_dispatch)(xt, cls)
+    xt = x.reshape(t, d)
+    logits = jnp.dot(xt, p["router"].astype(x.dtype)).astype(jnp.float32)
+    out, stats = mcma_dispatch(
+        xt, logits, lambda xb: ffn_fwd(cfg, p["ffn"], xb),
+        p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"],
+        exact_cap=max(int(t * a.exact_frac), 1),
+        invoke_cap=max(int(t * a.invoke_frac), 1),
+        backend=a.backend, block_t=a.block_t, interpret=a.interpret)
 
     aux = {"loss": jnp.zeros((), jnp.float32),
-           "invocation": jnp.mean((cls > 0).astype(jnp.float32)),
-           "router_acc": jnp.zeros((), jnp.float32)}
+           "invocation": stats["invocation"],
+           "router_acc": jnp.zeros((), jnp.float32),
+           "invoke_stats": stats}
     return out.reshape(b, s, d), aux
 
 
@@ -225,21 +202,21 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp):
         out = scatter_back(y_exact, keep0, pos0, exact_cap)
 
         # approximators: replicated weights, fully local
+        from repro.runtime.dispatch import apply_approximator
         for i in range(a.n_approx):
             xb, keep, pos = gather_class(cls == i + 1, app_cap)
-            hh = jnp.tanh(jnp.dot(xb, p_loc["a_w1"][i].astype(xb.dtype))
-                          + p_loc["a_b1"][i].astype(xb.dtype))
-            yy = jnp.dot(hh, p_loc["a_w2"][i].astype(xb.dtype)) \
-                + p_loc["a_b2"][i].astype(xb.dtype)
+            yy = apply_approximator(xb, p_loc["a_w1"][i], p_loc["a_b1"][i],
+                                    p_loc["a_w2"][i], p_loc["a_b2"][i])
             out = out + scatter_back(yy, keep, pos, app_cap)
 
         inv = jax.lax.pmean(jnp.mean((cls > 0).astype(jnp.float32)), axes)
         return out.reshape(bl, sl, d), inv
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(w_specs, P(dp, None, None)),
-                       out_specs=(P(dp, None, None), P()),
-                       axis_names=frozenset(axes), check_vma=False)
+    from repro.sharding.compat import shard_map_compat
+    fn = shard_map_compat(local, mesh=mesh,
+                          in_specs=(w_specs, P(dp, None, None)),
+                          out_specs=(P(dp, None, None), P()),
+                          axis_names=frozenset(axes), check=False)
     out, inv = fn({**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
                                         "a_b2")}, "ffn": p["ffn"]}, x)
     aux = {"loss": jnp.zeros((), jnp.float32), "invocation": inv,

@@ -77,8 +77,14 @@ def _ffn_part(cfg: ModelConfig, p, xn, serve):
         return y, aux, {}
     if cfg.approx.enable:
         y, a = approx_ffn_fwd(cfg, p["approx"], xn, serve=serve)
-        return y, a["loss"], {"invocation": a["invocation"],
-                              "router_acc": a["router_acc"]}
+        m = {"invocation": a["invocation"], "router_acc": a["router_acc"]}
+        st = a.get("invoke_stats")
+        if st is not None:  # serve-mode dispatch engine reports these
+            total = jnp.sum(st["class_counts"]).astype(jnp.float32)
+            m["exact_frac"] = st["exact_frac"]
+            m["dropped_frac"] = st["dropped"].astype(jnp.float32) / total
+            m["padding_rows"] = st["padding_rows"].astype(jnp.float32)
+        return y, a["loss"], m
     return L.ffn_fwd(cfg, p["ffn"], xn), jnp.zeros((), jnp.float32), {}
 
 
@@ -324,13 +330,16 @@ def pad_cache(cfg: ModelConfig, cache, max_len: int):
 
 
 def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
-           serve: bool = True):
+           serve: bool = True, collect_metrics: bool = False):
     """One decode step.  inputs: tokens (B, 1) or embeds (B, 1, d).
-    Returns (logits (B, V), new_cache)."""
+    Returns (logits (B, V), new_cache), or (logits, new_cache, metrics)
+    when ``collect_metrics`` — layer-meaned per-step block metrics (e.g.
+    the ApproxFFN dispatch invocation rate; uniform family only)."""
     topo = topology(cfg)
     x = L.embed_fwd(cfg, params["embed"], inputs)
     pos = cache["pos"]                                   # (B,) per-slot
     positions = pos[:, None]
+    step_metrics: dict[str, jax.Array] = {}
 
     if topo.kind == "uniform":
         # The cache is CARRIED and updated in place (dynamic-update-slice
@@ -341,14 +350,16 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             x, ck, cv = carry
             blk, i = blk_i
             lc = {"k": ck[i], "v": cv[i], "pos": pos}
-            x, nc, _, _ = _dense_block(cfg, blk, x, positions, lc, serve=serve)
+            x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve)
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)
-            return (x, ck, cv), None
-        (x, ks, vs), _ = jax.lax.scan(
+            return (x, ck, cv), (m if collect_metrics else None)
+        (x, ks, vs), ms = jax.lax.scan(
             body, (x, cache["k"], cache["v"]),
             (params["blocks"], jnp.arange(cfg.n_layers)))
         new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+        if collect_metrics and ms is not None:
+            step_metrics = {k: jnp.mean(v) for k, v in ms.items()}
 
     elif topo.kind == "xlstm":
         def group(x, grp):
@@ -391,6 +402,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
 
     x = L.norm_fwd(cfg, params["ln_f"], x)
     logits = L.unembed_fwd(cfg, params["embed"], x)
+    if collect_metrics:
+        return logits[:, 0], new_cache, step_metrics
     return logits[:, 0], new_cache
 
 

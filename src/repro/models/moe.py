@@ -94,10 +94,11 @@ def _moe_fwd_manual(cfg: ModelConfig, p, x, mesh, dp, md):
         y = jax.lax.psum(y_part, "model")
         return y, jax.lax.pmean(aux, axes)
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(w_specs, P(dp, None, None)),
-                       out_specs=(P(dp, None, None), P()),
-                       axis_names=frozenset(axes), check_vma=False)
+    from repro.sharding.compat import shard_map_compat
+    fn = shard_map_compat(local, mesh=mesh,
+                          in_specs=(w_specs, P(dp, None, None)),
+                          out_specs=(P(dp, None, None), P()),
+                          axis_names=frozenset(axes), check=False)
     return fn(p, x)
 
 

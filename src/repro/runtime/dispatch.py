@@ -1,0 +1,156 @@
+"""MCMA dispatch runtime — the single serving-side invocation engine.
+
+The paper's NPU swaps the invoked approximator "within a cycle" by shipping
+a weight set from on-chip cache to the PE weight buffers (§III-D).  This
+module is the TPU-serving analog, one jit-stable pipeline behind
+``mcma_dispatch``:
+
+  classify   router/classifier logits -> per-row class (0 = exact / nC)
+  capacity   static per-class token budgets (GShard convention:
+             over-capacity rows contribute zero; the residual carries them)
+  class-sort rows grouped into single-class row-tiles
+             (kernels/ops.class_sort_plan)
+  switch     the scalar-prefetch Pallas kernel streams each tile's
+             approximator weights HBM->VMEM behind the previous tile's
+             compute (kernels/switched_mlp.py) — the weight-buffer swap
+  exact      class-0 (non-approximable, "nC") rows run the exact function
+             on a gathered capacity buffer; in the Pallas path the
+             nC/over-capacity rows ride through the kernel under a
+             zero-weight pseudo-approximator so the grouped matmul stays
+             one kernel launch (their contribution is exactly 0)
+  scatter    results return to the original row order
+
+Backends:
+  * ``backend="pallas"`` — the weight-switch kernel path above
+    (``interpret=True`` runs it on CPU; compiled on TPU).
+  * ``backend="xla"``    — the portable per-class gather/scatter loop the
+    seed shipped.  It is the semantic oracle: tests require the Pallas
+    path to match it on every dispatched row.
+
+Every call also returns ``invoke_stats`` (per-class routed counts,
+post-capacity dispatched counts, dropped rows, exact fraction, executed
+rows vs useful rows) so servers and benchmarks can report invocation rate
+— the paper's headline metric — per request batch.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def route(logits: jax.Array) -> jax.Array:
+    """Router/classifier logits (T, n+1) -> class ids (T,); 0 = exact."""
+    return jnp.argmax(logits.astype(jnp.float32), -1).astype(jnp.int32)
+
+
+def apply_approximator(xb: jax.Array, w1: jax.Array, b1: jax.Array,
+                       w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """One approximator's tanh MLP on a row block — the single definition
+    of the per-class math shared by the XLA oracle backend and the manual
+    sharded serve path (models/approx_ffn._approx_serve_manual)."""
+    h = jnp.tanh(jnp.dot(xb, w1.astype(xb.dtype)) + b1.astype(xb.dtype))
+    return jnp.dot(h, w2.astype(xb.dtype)) + b2.astype(xb.dtype)
+
+
+def _rank_in_class(cls: jax.Array, n_classes: int) -> jax.Array:
+    """rank[i] = #rows j<=i with cls[j]==cls[i], minus one (arrival order)."""
+    oh = jax.nn.one_hot(cls, n_classes, dtype=jnp.int32)      # (T, n_classes)
+    return jnp.take_along_axis(jnp.cumsum(oh, 0) - 1, cls[:, None], 1)[:, 0]
+
+
+def capacity_path(x: jax.Array, mask: jax.Array, cap: int,
+                  fn: Callable[[jax.Array], jax.Array]) -> jax.Array:
+    """Gather <=cap rows where mask, apply fn, scatter back (zeros elsewhere).
+
+    Static shapes throughout: rows ranked past ``cap`` fall into a trash
+    slot and contribute zero — identical math to the seed's serve path.
+    """
+    _, d = x.shape
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1               # rank in class
+    keep = mask & (pos < cap)
+    idx = jnp.where(keep, pos, cap)                            # cap = trash
+    buf = jnp.zeros((cap + 1, d), x.dtype).at[idx].set(x * keep[:, None])
+    y = fn(buf[:cap])
+    y = jnp.concatenate([y, jnp.zeros((1, y.shape[-1]), y.dtype)], 0)
+    return y[idx] * keep[:, None]
+
+
+def mcma_dispatch(x: jax.Array, logits: jax.Array,
+                  exact_fn: Callable[[jax.Array], jax.Array],
+                  a_w1: jax.Array, a_b1: jax.Array,
+                  a_w2: jax.Array, a_b2: jax.Array, *,
+                  exact_cap: int, invoke_cap: int, backend: str = "xla",
+                  block_t: int = 128, interpret: bool = False):
+    """Full MCMA invocation pipeline over a flat row batch.
+
+    x: (T, d); logits: (T, n_approx+1) router scores (class 0 = exact);
+    exact_fn: (cap, d) -> (cap, d_out) exact path applied to the gathered
+    class-0 buffer; a_*: stacked approximator weights, leading dim n_approx.
+    ``exact_cap``/``invoke_cap``/``backend``/``block_t``/``interpret`` must
+    be static under jit (they determine shapes / the traced program).
+
+    Returns ``(y, invoke_stats)`` with y: (T, d_out) in the original row
+    order and invoke_stats a dict of jnp scalars/vectors:
+
+      class_counts  (n+1,) routed rows per class (sums to T)
+      dispatched    (n+1,) rows actually executed after capacity
+      dropped       scalar, over-capacity rows (zero contribution)
+      exact_frac    scalar, class_counts[0] / T
+      invocation    scalar, 1 - exact_frac (the paper's invocation rate)
+      executed_rows scalar, rows of compute actually launched
+      padding_rows  scalar, executed_rows - sum(dispatched) (capacity slack
+                    for XLA; tile padding, nC deadweight, and the static
+                    worst-case trailing tiles for Pallas)
+    """
+    t, _ = x.shape
+    n = a_w1.shape[0]
+    cls = route(logits)
+    counts = jnp.bincount(cls, length=n + 1)
+
+    # exact ("nC") rows: both backends share the capacity gather path
+    out = capacity_path(x, cls == 0, exact_cap, exact_fn)
+
+    if backend == "xla":
+        for i in range(n):
+            def approx_i(xb, i=i):
+                return apply_approximator(xb, a_w1[i], a_b1[i],
+                                          a_w2[i], a_b2[i])
+            out = out + capacity_path(x, cls == i + 1, invoke_cap, approx_i)
+        executed = jnp.asarray(exact_cap + n * invoke_cap, jnp.int32)
+    elif backend == "pallas":
+        # capacity first, then one grouped kernel launch over ALL rows:
+        # kept approx rows keep their class; exact + over-capacity rows are
+        # assigned a zero-weight pseudo-class n, whose tiles compute exact
+        # zeros (tanh(0)@0 + 0), so no post-mask is needed.
+        rank = _rank_in_class(cls, n + 1)
+        kept = (cls > 0) & (rank < invoke_cap)
+        eff = jnp.where(kept, cls - 1, n).astype(jnp.int32)
+        zcls = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])], 0)
+        out = out + ops.switched_apply(
+            x, eff, zcls(a_w1), zcls(a_b1), zcls(a_w2), zcls(a_b2),
+            block_t=block_t, interpret=interpret)
+        # the kernel launches the full static worst-case grid (including
+        # trailing zero tiles past the occupied region), so that is what
+        # executed_rows must count — n+1 classes including the pseudo-class
+        t_pad = ops.worst_case_rows(t, n + 1, block_t)
+        executed = jnp.asarray(exact_cap + t_pad, jnp.int32)
+    else:
+        raise ValueError(f"unknown dispatch backend: {backend!r}")
+
+    caps = jnp.asarray([exact_cap] + [invoke_cap] * n, counts.dtype)
+    dispatched = jnp.minimum(counts, caps)
+    exact_frac = (counts[0] / t).astype(jnp.float32)
+    stats = {
+        "class_counts": counts,
+        "dispatched": dispatched,
+        "dropped": jnp.sum(counts - dispatched),
+        "exact_frac": exact_frac,
+        "invocation": (1.0 - exact_frac).astype(jnp.float32),
+        "executed_rows": executed,
+        "padding_rows": executed - jnp.sum(dispatched).astype(jnp.int32),
+    }
+    return out, stats

@@ -37,11 +37,23 @@ class Request:
 class DecodeServer:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
                  max_len: int = 512, eos: int | None = None, greedy=True,
-                 seed: int = 0):
+                 seed: int = 0, use_mcma_dispatch: bool = False):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len, self.eos = batch, max_len, eos
-        self.decode = jax.jit(steps_lib.make_decode_step(cfg),
-                              donate_argnums=(1,))
+        # use_mcma_dispatch: decode ticks run the ApproxFFN through the
+        # MCMA Pallas weight-switch engine (runtime/dispatch.py) and the
+        # server accumulates the invocation rate, weighting each tick by
+        # its active-slot count.  Caveat: the decode step classifies all
+        # ``batch`` rows, so free slots (fed token 0) still enter the
+        # router and can bias the rate on a mostly-idle slot table.
+        self.use_mcma_dispatch = use_mcma_dispatch
+        self.decode = jax.jit(
+            steps_lib.make_decode_step(cfg,
+                                       use_mcma_dispatch=use_mcma_dispatch,
+                                       with_stats=use_mcma_dispatch),
+            donate_argnums=(1,))
+        self.invocation_sum = 0.0    # active-slot-weighted invocation sum
+        self.active_sum = 0          # total active slots over all ticks
         self.cache = M.init_cache(cfg, batch, max_len)
         self.slots: list[Request | None] = [None] * batch
         self.queue: list[Request] = []
@@ -84,8 +96,16 @@ class DecodeServer:
         if not any(s is not None for s in self.slots):
             return False
         toks = self._gather_tokens()
-        logits, self.cache = self.decode(self.params, self.cache,
-                                         jnp.asarray(toks))
+        if self.use_mcma_dispatch:
+            logits, self.cache, m = self.decode(self.params, self.cache,
+                                                jnp.asarray(toks))
+            if "invocation" in m:
+                active = sum(s is not None for s in self.slots)
+                self.invocation_sum += float(m["invocation"]) * active
+                self.active_sum += active
+        else:
+            logits, self.cache = self.decode(self.params, self.cache,
+                                             jnp.asarray(toks))
         if self.greedy:
             nxt = np.asarray(jnp.argmax(logits, -1))
         else:
@@ -111,4 +131,8 @@ class DecodeServer:
         while (self.queue or any(s is not None for s in self.slots)) \
                 and self.ticks < max_ticks:
             self.tick()
-        return {"ticks": self.ticks, "wall_s": time.time() - t0}
+        stats = {"ticks": self.ticks, "wall_s": time.time() - t0}
+        if self.use_mcma_dispatch:
+            stats["invocation_rate"] = \
+                self.invocation_sum / max(self.active_sum, 1)
+        return stats

@@ -11,6 +11,7 @@ All functions are pure and jit-friendly; sharding is applied by the caller
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any
 
@@ -77,7 +78,25 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig):
+def mcma_serve_config(cfg: ModelConfig) -> ModelConfig:
+    """Serve-mode cfg routing the ApproxFFN through the Pallas weight-switch
+    dispatch engine (runtime/dispatch.py).  Off-TPU the kernel runs in
+    interpreter mode so the same step compiles in CI/CPU runs."""
+    assert cfg.approx.enable, "MCMA dispatch requires cfg.approx.enable"
+    return dataclasses.replace(cfg, approx=dataclasses.replace(
+        cfg.approx, backend="pallas",
+        interpret=jax.default_backend() != "tpu"))
+
+
+def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
+                     with_stats: bool = False):
+    """``use_mcma_dispatch`` swaps the serve-mode FFN engine to the MCMA
+    Pallas dispatch; ``with_stats`` makes the step also return the
+    layer-meaned dispatch metrics (invocation rate etc.) per tick."""
+    if use_mcma_dispatch:
+        cfg = mcma_serve_config(cfg)
+
     def decode_step(params, cache, inputs):
-        return M.decode(cfg, params, cache, inputs, serve=True)
+        return M.decode(cfg, params, cache, inputs, serve=True,
+                        collect_metrics=with_stats)
     return decode_step

@@ -1,0 +1,25 @@
+"""jax API compatibility for shard_map.
+
+The manual-dispatch paths are written against the modern top-level
+``jax.shard_map(..., axis_names=..., check_vma=...)`` API; older jax
+releases (<= 0.4.x) only ship ``jax.experimental.shard_map.shard_map``
+with ``check_rep``/``auto``.  ``shard_map_compat`` bridges the two:
+``axis_names`` lists the MANUAL axes, everything else in the mesh stays
+auto — on the old API that is ``auto = mesh.axis_names - axis_names``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names,
+                     check: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=frozenset(axis_names),
+                             check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)

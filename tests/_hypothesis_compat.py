@@ -1,0 +1,88 @@
+"""Hypothesis compatibility shim for the property tests.
+
+When ``hypothesis`` is installed this module re-exports the real
+``given`` / ``settings`` / ``st`` and the tests run as true property
+tests.  When it is absent (minimal CI images), the same decorators
+degrade to deterministic example-based tests: each strategy draws from a
+seeded ``random.Random`` (seeded by the test name via crc32, so runs are
+reproducible and independent of ``PYTHONHASHSEED``) and the test body
+runs over a fixed number of drawn examples.  No shrinking, no database —
+a failing draw is reported with the drawn values so it can be pinned as
+a regular parametrized case.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    # Cap on drawn examples in fallback mode: the point is smoke coverage
+    # of the invariant, not exploration (real hypothesis does that), and
+    # every distinct shape costs a jit trace.
+    _FALLBACK_MAX = 8
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        """The subset of ``hypothesis.strategies`` the test-suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda r: r.choice(elems))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    st = _StrategiesModule()
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._hc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_hc_max_examples", _FALLBACK_MAX),
+                        _FALLBACK_MAX)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for i in range(n):
+                    drawn = tuple(s.example(rng) for s in arg_strategies)
+                    kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *drawn, **kwargs, **kw)
+                    except Exception as e:  # noqa: BLE001 - re-raised
+                        raise AssertionError(
+                            f"example-based fallback failed on draw {i}: "
+                            f"args={drawn} kwargs={kw}") from e
+            # NOTE: no functools.wraps — ``__wrapped__`` would make pytest
+            # introspect the inner signature and demand fixtures for the
+            # drawn arguments.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

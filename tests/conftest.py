@@ -1,0 +1,14 @@
+"""Pytest bootstrap: make ``import repro`` (and the tests' local helper
+modules) resolve from a bare ``python -m pytest`` run at the repo root —
+no ``PYTHONPATH=src`` incantation needed.  The documented
+``PYTHONPATH=src python -m pytest`` command keeps working unchanged.
+"""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+
+for _p in (os.path.join(_ROOT, "src"), _HERE):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

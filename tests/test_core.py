@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.apps import APPS, make_dataset
 from repro.core import (npu_model, quality, train_iterative, train_mcca,

@@ -1,0 +1,208 @@
+"""MCMA dispatch runtime (runtime/dispatch.py): the Pallas weight-switch
+serve engine against the XLA capacity-dispatch oracle, invoke_stats
+invariants, and the DecodeServer end-to-end path.  Hypothesis-free by
+design — the oracle (backend="xla") defines the semantics, so every test
+is a direct example-based comparison.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models import model as M
+from repro.models.approx_ffn import approx_ffn_fwd, init_approx_ffn
+from repro.runtime import dispatch as D
+from repro.runtime.server import DecodeServer, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_dispatch_case(key, t, n, d, d_h):
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32) * 0.5
+    router = jax.random.normal(ks[1], (d, n + 1)) * 0.5
+    w1 = jax.random.normal(ks[2], (n, d, d_h)) * 0.2
+    b1 = jax.random.normal(ks[3], (n, d_h)) * 0.1
+    w2 = jax.random.normal(ks[4], (n, d_h, d)) * 0.2
+    b2 = jax.random.normal(ks[5], (n, d)) * 0.1
+    wi = jax.random.normal(jax.random.fold_in(key, 7), (d, 2 * d)) * 0.1
+    wo = jax.random.normal(jax.random.fold_in(key, 8), (2 * d, d)) * 0.1
+    exact_fn = lambda xb: jnp.dot(jax.nn.silu(jnp.dot(xb, wi)), wo)
+    return x, x @ router, (w1, b1, w2, b2), exact_fn
+
+
+def _approx_cfg(**over):
+    cfg = smoke_config(get_config("internlm2-1.8b"))
+    return dataclasses.replace(cfg, approx=dataclasses.replace(
+        cfg.approx, enable=True, **over))
+
+
+# ---------------------------------------------------------------------------
+# mcma_dispatch: Pallas backend vs XLA oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,n,d,d_h,block", [
+    (200, 3, 64, 32, 64),     # generous capacity, mixed classes
+    (37, 2, 24, 8, 32),       # T < block_t
+    (128, 1, 32, 16, 64),     # single approximator
+    (96, 5, 40, 8, 16),       # many classes, some likely sparse
+])
+def test_pallas_backend_matches_xla_oracle(t, n, d, d_h, block):
+    key = jax.random.PRNGKey(t * 131 + n)
+    x, logits, w, exact_fn = _mk_dispatch_case(key, t, n, d, d_h)
+    caps = dict(exact_cap=max(t // 2, 1), invoke_cap=max(int(t * 0.4), 1))
+    yx, sx = D.mcma_dispatch(x, logits, exact_fn, *w, backend="xla", **caps)
+    yp, sp = D.mcma_dispatch(x, logits, exact_fn, *w, backend="pallas",
+                             block_t=block, interpret=True, **caps)
+    # dtype-tolerance match on ALL rows (dispatched AND zero/dropped rows)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yx),
+                               rtol=1e-6, atol=1e-6)
+    # routed counts and capacity accounting agree across backends
+    np.testing.assert_array_equal(np.asarray(sx["class_counts"]),
+                                  np.asarray(sp["class_counts"]))
+    np.testing.assert_array_equal(np.asarray(sx["dispatched"]),
+                                  np.asarray(sp["dispatched"]))
+
+
+def test_invoke_stats_counts_sum_to_t():
+    t, n = 250, 3
+    x, logits, w, exact_fn = _mk_dispatch_case(jax.random.PRNGKey(0),
+                                               t, n, 48, 16)
+    for backend in ("xla", "pallas"):
+        _, s = D.mcma_dispatch(x, logits, exact_fn, *w, exact_cap=t // 2,
+                               invoke_cap=t // 3, backend=backend,
+                               block_t=64, interpret=True)
+        assert int(s["class_counts"].sum()) == t
+        assert s["class_counts"].shape == (n + 1,)
+        disp, cnt = np.asarray(s["dispatched"]), np.asarray(s["class_counts"])
+        assert (disp <= cnt).all()
+        assert disp[0] <= t // 2 and (disp[1:] <= t // 3).all()
+        assert int(s["dropped"]) == int((cnt - disp).sum())
+        assert int(s["executed_rows"]) - int(disp.sum()) \
+            == int(s["padding_rows"])
+        if backend == "pallas":
+            # executed_rows must count the kernel's real static grid
+            from repro.kernels import ops as kops
+            assert int(s["executed_rows"]) \
+                == t // 2 + kops.worst_case_rows(t, n + 1, 64)
+        inv = float(s["invocation"])
+        assert 0.0 <= inv <= 1.0
+        assert inv == pytest.approx(1.0 - cnt[0] / t, abs=1e-6)
+
+
+def test_all_nc_input_takes_exact_path_only():
+    """Router unanimously votes class 0: invocation 0, approximators silent,
+    and both backends still agree (the all-nC regime of a cold router)."""
+    t, n = 130, 3
+    x, _, w, exact_fn = _mk_dispatch_case(jax.random.PRNGKey(5), t, n, 32, 8)
+    logits = jnp.full((t, n + 1), -10.0).at[:, 0].set(10.0)
+    yx, sx = D.mcma_dispatch(x, logits, exact_fn, *w, exact_cap=t,
+                             invoke_cap=16, backend="xla")
+    yp, sp = D.mcma_dispatch(x, logits, exact_fn, *w, exact_cap=t,
+                             invoke_cap=16, backend="pallas", block_t=32,
+                             interpret=True)
+    assert float(sx["invocation"]) == 0.0 == float(sp["invocation"])
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yx),
+                               rtol=1e-6, atol=1e-6)
+    # with full exact capacity the output equals the plain exact function
+    np.testing.assert_allclose(np.asarray(yx), np.asarray(exact_fn(x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_over_capacity_rows_contribute_zero():
+    """Rows ranked past the capacity must come out exactly zero (GShard
+    convention) on both backends."""
+    t, n = 64, 2
+    x, _, w, exact_fn = _mk_dispatch_case(jax.random.PRNGKey(9), t, n, 24, 8)
+    logits = jnp.full((t, n + 1), -10.0).at[:, 1].set(10.0)  # all class 1
+    for backend, kw in (("xla", {}),
+                        ("pallas", dict(block_t=16, interpret=True))):
+        y, s = D.mcma_dispatch(x, logits, exact_fn, *w, exact_cap=4,
+                               invoke_cap=10, backend=backend, **kw)
+        y = np.asarray(y)
+        assert not y[10:].any()              # over-capacity -> zero
+        assert y[:10].any()                  # dispatched rows computed
+        assert int(s["dropped"]) == t - 10
+
+
+def test_unknown_backend_raises():
+    t, n = 16, 2
+    x, logits, w, exact_fn = _mk_dispatch_case(jax.random.PRNGKey(1),
+                                               t, n, 16, 8)
+    with pytest.raises(ValueError, match="backend"):
+        D.mcma_dispatch(x, logits, exact_fn, *w, exact_cap=8, invoke_cap=8,
+                        backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# ApproxFFN serve mode through the engine
+# ---------------------------------------------------------------------------
+
+def test_approx_ffn_serve_pallas_matches_xla():
+    cfg = _approx_cfg()
+    p = init_approx_ffn(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    cfg_x = _approx_cfg(backend="xla")
+    cfg_p = _approx_cfg(backend="pallas", interpret=True, block_t=16)
+    yx, ax = approx_ffn_fwd(cfg_x, p, x, serve=True)
+    yp, ap = approx_ffn_fwd(cfg_p, p, x, serve=True)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yx),
+                               rtol=1e-6, atol=1e-6)
+    for a in (ax, ap):
+        assert int(a["invoke_stats"]["class_counts"].sum()) == 2 * 16
+        assert 0.0 <= float(a["invocation"]) <= 1.0
+
+
+def test_approx_ffn_serve_jits_with_stats():
+    """The serve path must stay jit-stable with the stats in the output."""
+    cfg = _approx_cfg(backend="pallas", interpret=True, block_t=16)
+    p = init_approx_ffn(jax.random.PRNGKey(3), cfg)
+    f = jax.jit(lambda p, x: approx_ffn_fwd(cfg, p, x, serve=True))
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 32, cfg.d_model),
+                          jnp.float32)
+    y, a = f(p, x)
+    assert y.shape == x.shape
+    assert int(a["invoke_stats"]["class_counts"].sum()) == 32
+
+
+# ---------------------------------------------------------------------------
+# DecodeServer end to end
+# ---------------------------------------------------------------------------
+
+def test_decode_server_mcma_dispatch_end_to_end():
+    cfg = _approx_cfg()
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    server = DecodeServer(cfg, params, batch=2, max_len=64,
+                          use_mcma_dispatch=True)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 5)
+                    .astype(np.int32), max_new=4) for i in range(3)]
+    for r in reqs:
+        server.submit(r)
+    stats = server.run_until_drained(max_ticks=300)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    assert 0.0 <= stats["invocation_rate"] <= 1.0
+
+
+def test_decode_server_mcma_matches_xla_serve_tokens():
+    """Same params, same prompts: the Pallas dispatch server must emit the
+    same greedy tokens as the XLA-backend approx server (backends agree to
+    fp tolerance, and smoke logits are far from argmax ties)."""
+    cfg = _approx_cfg(backend="xla")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(1, 9, dtype=np.int32)
+
+    outs = []
+    for use_dispatch in (False, True):
+        srv = DecodeServer(cfg, params, batch=1, max_len=64,
+                           use_mcma_dispatch=use_dispatch)
+        r = Request(rid=0, prompt=prompt, max_new=6)
+        srv.submit(r)
+        srv.run_until_drained(200)
+        outs.append(r.out)
+    assert outs[0] == outs[1], outs

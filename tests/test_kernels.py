@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -79,6 +79,75 @@ def test_switched_mlp_skewed_classes():
     got = ops.switched_apply(x, cls, w1, b1, w2, b2, block_t=64, interpret=True)
     want = ref.switched_mlp_ref(x, cls, w1, b1, w2, b2)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# switched_apply edge cases (each against the pure-jnp oracle in ref.py)
+# ---------------------------------------------------------------------------
+
+
+def _mk_switched(key, n, d_in, d_h, d_out, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    w1 = (jax.random.normal(ks[0], (n, d_in, d_h)) * 0.2).astype(dtype)
+    b1 = (jax.random.normal(ks[1], (n, d_h)) * 0.1).astype(dtype)
+    w2 = (jax.random.normal(ks[2], (n, d_h, d_out)) * 0.2).astype(dtype)
+    b2 = (jax.random.normal(ks[3], (n, d_out)) * 0.1).astype(dtype)
+    return w1, b1, w2, b2
+
+
+def _check_switched(x, cls, w1, b1, w2, b2, block):
+    got = ops.switched_apply(x, cls, w1, b1, w2, b2, block_t=block,
+                             interpret=True)
+    want = ref.switched_mlp_ref(x, cls, w1, b1, w2, b2)
+    assert got.shape == want.shape and got.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_switched_mlp_empty_class():
+    """A class with zero rows must not perturb its neighbours' tiles."""
+    key = jax.random.PRNGKey(11)
+    t, n, d = 120, 4, 24
+    x = jax.random.normal(key, (t, d))
+    w = _mk_switched(jax.random.fold_in(key, 1), n, d, 8, d)
+    cls = jax.random.randint(jax.random.fold_in(key, 2), (t,), 0, n)
+    cls = jnp.where(cls == 1, 3, cls)        # class 1 is now empty
+    _check_switched(x, cls, *w, block=32)
+
+
+def test_switched_mlp_t_smaller_than_block():
+    """T < block_t: everything lives inside partial tiles."""
+    key = jax.random.PRNGKey(12)
+    t, n, d = 7, 3, 16
+    x = jax.random.normal(key, (t, d))
+    w = _mk_switched(jax.random.fold_in(key, 1), n, d, 8, d)
+    cls = jax.random.randint(jax.random.fold_in(key, 2), (t,), 0, n)
+    _check_switched(x, cls, *w, block=64)
+
+
+def test_switched_mlp_single_approximator():
+    """n_approx == 1 degenerates to a plain grouped MLP (no switching)."""
+    key = jax.random.PRNGKey(13)
+    t, d = 150, 20
+    x = jax.random.normal(key, (t, d))
+    w = _mk_switched(jax.random.fold_in(key, 1), 1, d, 12, d)
+    cls = jnp.zeros((t,), jnp.int32)
+    _check_switched(x, cls, *w, block=64)
+
+
+def test_switched_mlp_all_nc_zero_class():
+    """All rows on a zero-weight "nC" class (the dispatch engine's trick
+    for exact/over-capacity rows) must come out exactly zero."""
+    key = jax.random.PRNGKey(14)
+    t, n, d = 90, 3, 24
+    x = jax.random.normal(key, (t, d))
+    w1, b1, w2, b2 = _mk_switched(jax.random.fold_in(key, 1), n, d, 8, d)
+    zc = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])], 0)
+    cls = jnp.full((t,), n, jnp.int32)       # everyone on the zero class
+    got = ops.switched_apply(x, cls, zc(w1), zc(b1), zc(w2), zc(b2),
+                             block_t=32, interpret=True)
+    assert not np.asarray(got).any()
+    _check_switched(x, cls, zc(w1), zc(b1), zc(w2), zc(b2), block=32)
 
 
 # ---------------------------------------------------------------------------

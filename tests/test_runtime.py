@@ -120,12 +120,23 @@ _COMPRESSION = textwrap.dedent("""
         g = 2 * (w - tgt[0])
         return jax.lax.pmean(g, "pod")
 
-    w_c, w_e = w0, w0
-    err = jnp.zeros((4, 8))                      # per-pod error feedback
-    for i in range(300):
-        g_c, err = compressed_step(w_c, targets, err)
-        w_c = w_c - 0.05 * g_c
-        w_e = w_e - 0.05 * exact_step(w_e, targets)
+    # one jitted fori_loop: eager multi-device dispatch costs ~1s/step on
+    # host devices, which pushed the subprocess past its timeout.  The
+    # carry starts at the (4, 8) shape w takes after the first step (the
+    # replicated err broadcasts through the allreduce) so the loop-carry
+    # type is stable; values match the eager trajectory exactly.
+    @jax.jit
+    def run(w0, targets, err0):
+        def body(_, c):
+            w_c, err, w_e = c
+            g_c, err = compressed_step(w_c, targets, err)
+            return (w_c - 0.05 * g_c, err,
+                    w_e - 0.05 * exact_step(w_e, targets))
+        wb = jnp.zeros((4, 8)) + w0
+        return jax.lax.fori_loop(0, 300, body, (wb, err0, wb))
+
+    err0 = jnp.zeros((4, 8))                     # per-pod error feedback
+    w_c, err, w_e = run(w0, targets, err0)
     opt = jnp.mean(targets, 0)
     out = {"err_compressed": float(jnp.linalg.norm(w_c - opt)),
            "err_exact": float(jnp.linalg.norm(w_e - opt))}
@@ -136,7 +147,10 @@ _COMPRESSION = textwrap.dedent("""
 def test_int8_error_feedback_converges():
     r = subprocess.run([sys.executable, "-c", _COMPRESSION],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       # JAX_PLATFORMS pins CPU: without it jax probes the
+                       # TPU plugin and stalls ~8min on TPU-less hosts
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-2000:]
     import json
     out = json.loads(r.stdout.split("RESULT")[1])
