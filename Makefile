@@ -3,8 +3,10 @@
 # `hypothesis` is absent (tests/_hypothesis_compat.py).
 
 PY ?= python
+MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
-.PHONY: test test-tier1 bench-quick bench-dispatch deps
+.PHONY: test test-tier1 test-multidevice bench-quick bench-dispatch \
+	bench-dispatch-sharded deps
 
 deps:
 	$(PY) -m pip install "jax[cpu]" pytest hypothesis
@@ -15,8 +17,18 @@ test-tier1:
 test:
 	$(PY) -m pytest -q
 
+# mirrors the CI "multidevice" leg: shard_map tests + the sharded
+# dispatch microbench on 8 virtual CPU devices
+test-multidevice:
+	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8
+
 bench-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only kernels,dispatch
 
+# mirrors the CI dispatch.csv artifact leg (pallas-vs-xla oracle gate)
 bench-dispatch:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick
+
+bench-dispatch-sharded:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --devices 8

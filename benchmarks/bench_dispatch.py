@@ -10,8 +10,16 @@ invoke_stats the engine reports (invocation rate, dropped rows, executed
 vs useful rows) so the capacity/padding economics are visible per shape.
 
     PYTHONPATH=src python -m benchmarks.bench_dispatch [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_dispatch --quick --devices 8
 
-Writes benchmarks/out/dispatch.csv.
+``--devices N`` adds a sharded mode: the same shapes run through
+``mcma_dispatch_sharded`` over an N-way data mesh (forcing N virtual CPU
+devices when needed), recording the global sharded wall time next to a
+shard-local single-device baseline (one shard's rows on one device) so
+the scaling overhead of the shard_map path is visible per shape.  Every
+mode asserts the Pallas backend against the XLA oracle.
+
+Writes benchmarks/out/dispatch.csv (modes: single | sharded | shard-local).
 """
 from __future__ import annotations
 
@@ -52,9 +60,45 @@ def _time(fn, *args, iters):
     return (time.perf_counter() - t0) / iters * 1e3, stats
 
 
-def main(quick: bool = False, iters: int | None = None):
+def _record(rows, *, t, n, d, backend, block_t, interpret, ms, stats,
+            devices, mode):
+    row = {
+        "T": t, "n_approx": n, "d_model": d, "backend": backend,
+        "block_t": block_t, "interpret": interpret,
+        "devices": devices, "mode": mode,
+        "ms_per_call": round(ms, 3),
+        "invocation": round(float(stats["invocation"]), 4),
+        "exact_frac": round(float(stats["exact_frac"]), 4),
+        "dropped": int(stats["dropped"]),
+        "executed_rows": int(stats["executed_rows"]),
+        "padding_rows": int(stats["padding_rows"]),
+    }
+    rows.append(row)
+    print(f"T={t:6d} n={n} {mode:11s} x{devices} {backend:6s} "
+          f"{ms:9.2f} ms/call inv={row['invocation']:.3f} "
+          f"pad_rows={row['padding_rows']}", flush=True)
+    return row
+
+
+def _check_oracle(rows, outs, t, n):
+    """Gate: the Pallas backend must match the XLA oracle on every row."""
+    err = float(np.abs(outs["pallas"] - outs["xla"]).max())
+    for row in rows[-2:]:
+        row["max_abs_err_vs_xla"] = round(err, 7) \
+            if row["backend"] == "pallas" else 0.0
+    assert err < 1e-4, f"backend divergence at T={t} n={n}: {err}"
+
+
+def main(quick: bool = False, iters: int | None = None, devices: int = 1):
     os.makedirs(OUT, exist_ok=True)
     on_cpu = jax.default_backend() != "tpu"
+    if devices > 1 and len(jax.devices()) < devices:
+        raise SystemExit(
+            f"--devices {devices} needs {devices} jax devices but only "
+            f"{len(jax.devices())} exist; run via `python -m "
+            f"benchmarks.bench_dispatch` (which forces virtual CPU devices) "
+            f"or set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{devices}")
     if quick:
         shapes = [(256, 2), (512, 4)]
         d, d_h, d_ff, block_t = 128, 32, 256, 64
@@ -75,33 +119,61 @@ def main(quick: bool = False, iters: int | None = None):
         exact_cap, invoke_cap = max(t // 2, 1), max(int(t * 0.4), 1)
         outs = {}
         for backend in ("xla", "pallas"):
-            fn = jax.jit(lambda xx, lg, be=backend: D.mcma_dispatch(
-                xx, lg, exact_fn, w1, b1, w2, b2, exact_cap=exact_cap,
-                invoke_cap=invoke_cap, backend=be, block_t=block_t,
-                interpret=on_cpu and be == "pallas"))
+            interp = on_cpu and backend == "pallas"
+            fn = jax.jit(lambda xx, lg, be=backend, ip=interp:
+                         D.mcma_dispatch(
+                             xx, lg, exact_fn, w1, b1, w2, b2,
+                             exact_cap=exact_cap, invoke_cap=invoke_cap,
+                             backend=be, block_t=block_t, interpret=ip))
             ms, stats = _time(fn, x, logits, iters=iters)
             y, _ = fn(x, logits)
             outs[backend] = np.asarray(y)
-            row = {
-                "T": t, "n_approx": n, "d_model": d, "backend": backend,
-                "block_t": block_t,
-                "interpret": on_cpu and backend == "pallas",
-                "ms_per_call": round(ms, 3),
-                "invocation": round(float(stats["invocation"]), 4),
-                "exact_frac": round(float(stats["exact_frac"]), 4),
-                "dropped": int(stats["dropped"]),
-                "executed_rows": int(stats["executed_rows"]),
-                "padding_rows": int(stats["padding_rows"]),
-            }
-            rows.append(row)
-            print(f"T={t:6d} n={n} {backend:6s} {ms:9.2f} ms/call "
-                  f"inv={row['invocation']:.3f} "
-                  f"pad_rows={row['padding_rows']}", flush=True)
-        err = float(np.abs(outs["pallas"] - outs["xla"]).max())
-        for row in rows[-2:]:
-            row["max_abs_err_vs_xla"] = round(err, 7) \
-                if row["backend"] == "pallas" else 0.0
-        assert err < 1e-4, f"backend divergence at T={t} n={n}: {err}"
+            _record(rows, t=t, n=n, d=d, backend=backend, block_t=block_t,
+                    interpret=interp, ms=ms, stats=stats, devices=1,
+                    mode="single")
+        _check_oracle(rows, outs, t, n)
+
+        if devices > 1:
+            assert t % devices == 0, (t, devices)
+            tl = t // devices
+            ec_l, ic_l = max(tl // 2, 1), max(int(tl * 0.4), 1)
+            mesh = jax.make_mesh((devices,), ("data",))
+            exact_fn_p = lambda ep, xb: jnp.dot(
+                jax.nn.silu(jnp.dot(xb, ep[0])), ep[1])
+            outs_sh = {}
+            for backend in ("xla", "pallas"):
+                interp = on_cpu and backend == "pallas"
+                # global sharded call: all shards dispatch concurrently,
+                # invoke_stats psum-reduced to global totals
+                fn = jax.jit(lambda xx, lg, be=backend, ip=interp:
+                             D.mcma_dispatch_sharded(
+                                 mesh, xx, lg, exact_fn_p, (wi, wo),
+                                 w1, b1, w2, b2, exact_cap=ec_l,
+                                 invoke_cap=ic_l, backend=be,
+                                 block_t=block_t, interpret=ip))
+                ms, stats = _time(fn, x, logits, iters=iters)
+                y, _ = fn(x, logits)
+                outs_sh[backend] = np.asarray(y)
+                _record(rows, t=t, n=n, d=d, backend=backend,
+                        block_t=block_t, interpret=interp, ms=ms,
+                        stats=stats, devices=devices, mode="sharded")
+            _check_oracle(rows, outs_sh, t, n)
+            # shard-local baseline: one shard's rows on one device — the
+            # per-shard cost the sharded mode amortizes across devices
+            outs_loc = {}
+            for backend in ("xla", "pallas"):
+                interp = on_cpu and backend == "pallas"
+                fn = jax.jit(lambda xx, lg, be=backend, ip=interp:
+                             D.mcma_dispatch(
+                                 xx, lg, exact_fn, w1, b1, w2, b2,
+                                 exact_cap=ec_l, invoke_cap=ic_l,
+                                 backend=be, block_t=block_t, interpret=ip))
+                ms, stats = _time(fn, x[:tl], logits[:tl], iters=iters)
+                outs_loc[backend] = np.asarray(fn(x[:tl], logits[:tl])[0])
+                _record(rows, t=tl, n=n, d=d, backend=backend,
+                        block_t=block_t, interpret=interp, ms=ms,
+                        stats=stats, devices=1, mode="shard-local")
+            _check_oracle(rows, outs_loc, tl, n)
 
     with open(os.path.join(OUT, "dispatch.csv"), "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
@@ -115,5 +187,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the dispatch over an N-way data mesh "
+                         "(forces N virtual CPU devices when run as main)")
     args = ap.parse_args()
-    main(quick=args.quick, iters=args.iters)
+    if args.devices > 1 and "host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # must land before jax initializes its backend (first device use)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}").strip()
+    main(quick=args.quick, iters=args.iters, devices=args.devices)

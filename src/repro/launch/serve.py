@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \\
         --smoke --requests 16 --max-new 24
+
+Mesh deployments (``--data``/``--model``) shard params/cache by the
+declarative rules and serve every decode tick through the
+shard_map-native MCMA dispatch when ``--mcma-dispatch`` is on (on 8 CPU
+devices: XLA_FLAGS=--xla_force_host_platform_device_count=8 and
+``--data 4 --model 2``).
 """
 from __future__ import annotations
 
@@ -14,6 +20,13 @@ def main(argv=None):
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--approx", action="store_true")
+    ap.add_argument("--mcma-dispatch", action="store_true",
+                    help="serve the ApproxFFN through the Pallas "
+                         "weight-switch dispatch engine (implies --approx)")
+    ap.add_argument("--data", type=int, default=0,
+                    help="mesh data-axis size (0 = no mesh, single device)")
+    ap.add_argument("--model", type=int, default=1,
+                    help="mesh model-axis size (with --data)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
@@ -31,11 +44,18 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
-    if args.approx:
+    if args.approx or args.mcma_dispatch:
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
             cfg.approx, enable=True))
+    mesh = None
+    if args.data:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(data=args.data, model=args.model)
+        assert args.batch % args.data == 0, \
+            "--batch must divide by --data for the sharded dispatch path"
     params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
-    server = DecodeServer(cfg, params, batch=args.batch, max_len=args.max_len)
+    server = DecodeServer(cfg, params, batch=args.batch, max_len=args.max_len,
+                          use_mcma_dispatch=args.mcma_dispatch, mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -50,6 +70,11 @@ def main(argv=None):
     print(f"served {done}/{len(reqs)} requests, {toks} tokens, "
           f"{stats['ticks']} ticks, {stats['wall_s']:.1f}s "
           f"({toks / max(stats['wall_s'], 1e-9):.1f} tok/s aggregate)")
+    if mesh is not None:
+        print(f"mesh: data={args.data} model={args.model} "
+              f"({len(jax.devices())} devices, shard_map-native dispatch)")
+    if "invocation_rate" in stats:
+        print(f"mean invocation rate: {stats['invocation_rate']:.3f}")
     assert done == len(reqs), "server failed to drain"
     return stats
 

@@ -111,10 +111,10 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
     The engine is ``runtime/dispatch.mcma_dispatch`` (classify -> capacity
     -> class-sort -> weight-switch kernel / XLA oracle -> exact -> scatter);
     ``cfg.approx.backend`` picks the backend.  Under a distributed mesh the
-    fully-manual shard_map path below takes over instead (same lesson as
-    the MoE dispatch, §Perf B/C: global cumsum ranking across a
-    token-sharded dim forces the partitioner to replicate tokens, so each
-    data shard must rank/gather only its own tokens).
+    shard_map path below runs the SAME engine per data shard with
+    psum-reduced invoke_stats (global cumsum ranking across a
+    token-sharded dim would force the partitioner to replicate tokens, so
+    each data shard ranks/gathers only its own tokens — §Perf B/C).
     """
     from repro.runtime.dispatch import mcma_dispatch
     from repro.sharding.activations import manual_dp_context
@@ -146,81 +146,63 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
 
 
 def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp):
-    """Fully-manual serve dispatch (shard_map over all axes): each data
-    shard ranks/gathers its own tokens (no cross-shard dispatch traffic);
-    the exact FFN runs Megatron-TP over "model" with one psum; the
-    approximators are replicated (tiny) and run locally.  Same lesson as
-    the manual MoE path (§Perf B/C): keep ranking math off the
-    partitioner's critical path.
+    """Shard_map-native serve dispatch: the SAME ``mcma_dispatch`` engine
+    as the single-device path, run per data shard (each shard classifies /
+    capacities / class-sorts / weight-switches its OWN tokens — no
+    cross-shard dispatch traffic, same lesson as the manual MoE path,
+    §Perf B/C).  The exact FFN runs Megatron-TP over "model" with one psum
+    inside the engine's capacity gather; the approximators are replicated
+    (tiny) and run locally; invoke_stats are psum-reduced over the data
+    axes so every shard reports the global totals.
     """
-    from jax.sharding import PartitionSpec as P
+    from repro.runtime.dispatch import mcma_dispatch
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.rules import approx_serve_specs
     a = cfg.approx
     b, s, d = x.shape
     axes = tuple(dp) + ("model",)
-    ffn_specs = {"w_in": P(dp, "model"), "w_out": P("model", dp)}
-    if "w_gate" in p["ffn"]:
-        ffn_specs["w_gate"] = P(dp, "model")
-    w_specs = {"ffn": ffn_specs, "router": P(None, None),
-               "a_w1": P(None, None, None), "a_b1": P(None, None),
-               "a_w2": P(None, None, None), "a_b2": P(None, None)}
+    specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"])
 
     def local(p_loc, x_loc):
         bl, sl, _ = x_loc.shape
         tl = bl * sl
         xt = x_loc.reshape(tl, d)
+        # FSDP unshard-on-use of the exact FFN's TP slices
         w_in = jax.lax.all_gather(p_loc["ffn"]["w_in"], dp, axis=0, tiled=True)
         w_out = jax.lax.all_gather(p_loc["ffn"]["w_out"], dp, axis=1, tiled=True)
         w_gate = (jax.lax.all_gather(p_loc["ffn"]["w_gate"], dp, axis=0,
                                      tiled=True)
                   if "w_gate" in p_loc["ffn"] else None)
-        logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype))
-        cls = jnp.argmax(logits.astype(jnp.float32), -1)
 
-        exact_cap = max(int(tl * a.exact_frac), 1)
-        app_cap = max(int(tl * a.invoke_frac), 1)
+        def exact_fn(xb):
+            # Megatron-TP: d_ff sharded over "model", one psum per call
+            h = jnp.dot(xb, w_in.astype(xb.dtype))
+            if w_gate is not None:
+                h = jax.nn.silu(jnp.dot(xb, w_gate.astype(xb.dtype))) * h
+            else:
+                h = jax.nn.silu(h)
+            return jax.lax.psum(jnp.dot(h, w_out.astype(h.dtype)), "model")
 
-        def gather_class(mask, cap):
-            pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
-            keep = mask & (pos < cap)
-            idx = jnp.where(keep, pos, cap)
-            buf = jnp.zeros((cap + 1, d), xt.dtype).at[idx].set(
-                xt * keep[:, None])
-            return buf[:cap], keep, pos
+        logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype)) \
+            .astype(jnp.float32)
+        out, stats = mcma_dispatch(
+            xt, logits, exact_fn,
+            p_loc["a_w1"], p_loc["a_b1"], p_loc["a_w2"], p_loc["a_b2"],
+            exact_cap=max(int(tl * a.exact_frac), 1),
+            invoke_cap=max(int(tl * a.invoke_frac), 1),
+            backend=a.backend, block_t=a.block_t, interpret=a.interpret,
+            stats_axes=dp)
+        return out.reshape(bl, sl, d), stats
 
-        def scatter_back(y, keep, pos, cap):
-            y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], 0)
-            return y[jnp.where(keep, pos, cap)] * keep[:, None]
-
-        # exact path: Megatron-TP (f sharded over model), one psum
-        xb, keep0, pos0 = gather_class(cls == 0, exact_cap)
-        h = jnp.dot(xb, w_in.astype(xb.dtype))
-        if w_gate is not None:
-            h = jax.nn.silu(jnp.dot(xb, w_gate.astype(xb.dtype))) * h
-        else:
-            h = jax.nn.silu(h)
-        y_exact = jax.lax.psum(jnp.dot(h, w_out.astype(h.dtype)), "model")
-        out = scatter_back(y_exact, keep0, pos0, exact_cap)
-
-        # approximators: replicated weights, fully local
-        from repro.runtime.dispatch import apply_approximator
-        for i in range(a.n_approx):
-            xb, keep, pos = gather_class(cls == i + 1, app_cap)
-            yy = apply_approximator(xb, p_loc["a_w1"][i], p_loc["a_b1"][i],
-                                    p_loc["a_w2"][i], p_loc["a_b2"][i])
-            out = out + scatter_back(yy, keep, pos, app_cap)
-
-        inv = jax.lax.pmean(jnp.mean((cls > 0).astype(jnp.float32)), axes)
-        return out.reshape(bl, sl, d), inv
-
-    from repro.sharding.compat import shard_map_compat
-    fn = shard_map_compat(local, mesh=mesh,
-                          in_specs=(w_specs, P(dp, None, None)),
-                          out_specs=(P(dp, None, None), P()),
+    fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
+                          out_specs=specs["out"],
                           axis_names=frozenset(axes), check=False)
-    out, inv = fn({**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
-                                        "a_b2")}, "ffn": p["ffn"]}, x)
-    aux = {"loss": jnp.zeros((), jnp.float32), "invocation": inv,
-           "router_acc": jnp.zeros((), jnp.float32)}
+    out, stats = fn({**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
+                                          "a_b2")}, "ffn": p["ffn"]}, x)
+    aux = {"loss": jnp.zeros((), jnp.float32),
+           "invocation": stats["invocation"],
+           "router_acc": jnp.zeros((), jnp.float32),
+           "invoke_stats": stats}
     return out, aux
 
 

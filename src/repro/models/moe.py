@@ -73,12 +73,9 @@ def _moe_fwd_manual(cfg: ModelConfig, p, x, mesh, dp, md):
     all_gather over the data axes.  Capacity is per (data shard, expert):
     GShard groups == data shards.
     """
-    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import moe_manual_specs
     e = cfg.moe.n_experts
-    w_specs = {"router": P(dp, "model"),
-               "w_in": P("model", dp, None), "w_out": P("model", dp, None)}
-    if "w_gate" in p:
-        w_specs["w_gate"] = P("model", dp, None)
+    specs = moe_manual_specs(mesh, gated="w_gate" in p)
     axes = tuple(dp) + ("model",)
 
     def local(p_loc, x_loc):
@@ -95,9 +92,8 @@ def _moe_fwd_manual(cfg: ModelConfig, p, x, mesh, dp, md):
         return y, jax.lax.pmean(aux, axes)
 
     from repro.sharding.compat import shard_map_compat
-    fn = shard_map_compat(local, mesh=mesh,
-                          in_specs=(w_specs, P(dp, None, None)),
-                          out_specs=(P(dp, None, None), P()),
+    fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
+                          out_specs=specs["out"],
                           axis_names=frozenset(axes), check=False)
     return fn(p, x)
 
@@ -105,7 +101,12 @@ def _moe_fwd_manual(cfg: ModelConfig, p, x, mesh, dp, md):
 def _moe_local_experts(cfg: ModelConfig, router, w, x, e_loc: int, e_off):
     """Route local tokens to THIS shard's experts (global top-k routing,
     local compute).  x: (B, S, d) local tokens; returns the partial output
-    (zeros for tokens whose experts live elsewhere) and the aux loss."""
+    (zeros for tokens whose experts live elsewhere) and the aux loss.
+
+    Dispatch plumbing (sort-based ranks, capacity slots, trash-slot
+    scatter/gather) is the shared machinery of the serving dispatch engine
+    (runtime/dispatch.py) — one implementation for MoE and MCMA."""
+    from repro.runtime import dispatch as D
     b, s, d = x.shape
     e, k = cfg.moe.n_experts, cfg.moe.top_k
     t = b * s
@@ -117,21 +118,16 @@ def _moe_local_experts(cfg: ModelConfig, router, w, x, e_loc: int, e_off):
     gate_vals, gate_idx = jax.lax.top_k(probs, k)
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    # global-expert rank math (capacity consistent across model shards)
+    # global-expert rank math (capacity consistent across model shards);
+    # only classes [e_off, e_off + e_loc) land in this shard's buffer
     e_flat = gate_idx.reshape(t * k)
     tok_flat = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(t * k)
-    order = jnp.argsort(e_flat)
-    e_sorted = e_flat[order]
-    counts = jnp.bincount(e_flat, length=e)
-    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])
-    rank = jnp.arange(t * k) - starts[e_sorted]
-    local = (e_sorted >= e_off) & (e_sorted < e_off + e_loc)
-    keep = (rank < cap) & local
-    slot = jnp.where(keep, (e_sorted - e_off) * cap + rank, e_loc * cap)
+    order, e_sorted, rank, _ = D.class_sort_ranks(e_flat, e)
+    keep, slot = D.capacity_slots(e_sorted, rank, cap, n_local=e_loc,
+                                  offset=e_off)
 
-    buf = jnp.zeros((e_loc * cap + 1, d), x.dtype).at[slot].set(
-        xt[tok_flat[order]] * keep[:, None])
-    xe = buf[:e_loc * cap].reshape(e_loc, cap, d)
+    xe = D.scatter_rows(xt[tok_flat[order]], slot, keep,
+                        e_loc * cap).reshape(e_loc, cap, d)
 
     h = jnp.einsum("ecd,edf->ecf", xe, w["w_in"].astype(x.dtype))
     if cfg.gated_ffn:
@@ -141,10 +137,8 @@ def _moe_local_experts(cfg: ModelConfig, router, w, x, e_loc: int, e_off):
         h = jax.nn.silu(h)
     ye = jnp.einsum("ecf,efd->ecd", h, w["w_out"].astype(x.dtype))
 
-    ye_flat = jnp.concatenate([ye.reshape(e_loc * cap, d),
-                               jnp.zeros((1, d), ye.dtype)], 0)
-    contrib = ye_flat[slot] * (gate_vals.reshape(t * k)[order] * keep)[:, None] \
-        .astype(ye.dtype)
+    contrib = D.gather_rows(ye.reshape(e_loc * cap, d), slot, keep) \
+        * gate_vals.reshape(t * k)[order][:, None].astype(ye.dtype)
     out = jnp.zeros((t, d), x.dtype).at[tok_flat[order]].add(contrib)
 
     frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e,
@@ -174,6 +168,7 @@ def _moe_chunked(cfg: ModelConfig, p, x: jax.Array):
 
 def _moe_group(cfg: ModelConfig, p, x: jax.Array):
     """One token group.  x: (B, S, d) -> (out, aux_loss)."""
+    from repro.runtime import dispatch as D
     b, s, d = x.shape
     e, k = cfg.moe.n_experts, cfg.moe.top_k
     t = b * s
@@ -185,20 +180,15 @@ def _moe_group(cfg: ModelConfig, p, x: jax.Array):
     gate_vals, gate_idx = jax.lax.top_k(probs, k)                          # (T, k)
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    # ---- sort-based dispatch -------------------------------------------------
+    # ---- sort-based dispatch (shared engine plumbing) -----------------------
     e_flat = gate_idx.reshape(t * k)                                       # (T*k,)
     tok_flat = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(t * k)
-    order = jnp.argsort(e_flat)                                            # stable
-    e_sorted = e_flat[order]
-    counts = jnp.bincount(e_flat, length=e)                                # (E,)
-    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])
-    rank = jnp.arange(t * k) - starts[e_sorted]                            # within-expert
-    keep = rank < cap
-    slot = jnp.where(keep, e_sorted * cap + rank, e * cap)                 # trash = E*cap
+    order, e_sorted, rank, _ = D.class_sort_ranks(e_flat, e)
+    keep, slot = D.capacity_slots(e_sorted, rank, cap, n_local=e)
 
     # scatter tokens into the expert buffer
-    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xt[tok_flat[order]])
-    xe = buf[:e * cap].reshape(e, cap, d)
+    xe = D.scatter_rows(xt[tok_flat[order]], slot, keep,
+                        e * cap).reshape(e, cap, d)
 
     h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"].astype(x.dtype))
     if cfg.gated_ffn:
@@ -209,10 +199,8 @@ def _moe_group(cfg: ModelConfig, p, x: jax.Array):
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(x.dtype))
 
     # gather back + weighted combine (scatter-add over the k choices)
-    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
-                               jnp.zeros((1, d), ye.dtype)], 0)
-    contrib = ye_flat[slot] * (gate_vals.reshape(t * k)[order] * keep)[:, None] \
-        .astype(ye.dtype)
+    contrib = D.gather_rows(ye.reshape(e * cap, d), slot, keep) \
+        * gate_vals.reshape(t * k)[order][:, None].astype(ye.dtype)
     out = jnp.zeros((t, d), x.dtype).at[tok_flat[order]].add(contrib)
 
     # Switch-style load-balancing aux loss

@@ -31,9 +31,20 @@ Every call also returns ``invoke_stats`` (per-class routed counts,
 post-capacity dispatched counts, dropped rows, exact fraction, executed
 rows vs useful rows) so servers and benchmarks can report invocation rate
 — the paper's headline metric — per request batch.
+
+The engine is shard_map-native: called inside a ``shard_map`` over the
+data axes with ``stats_axes=<those axes>``, each data shard classifies,
+capacities, class-sorts, and runs the weight-switch kernel on its OWN
+rows (no cross-shard dispatch traffic — the same lesson as the manual MoE
+path), while the invoke_stats are ``psum``-reduced over ``stats_axes`` so
+every caller sees the global totals, exactly equal to summing each
+shard's local stats on one device.  ``mcma_dispatch_sharded`` is the
+ready-made wrapper for flat row batches; the model layers
+(models/approx_ffn.py) embed the engine in their own shard_map instead.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable
 
 import jax
@@ -62,6 +73,57 @@ def _rank_in_class(cls: jax.Array, n_classes: int) -> jax.Array:
     return jnp.take_along_axis(jnp.cumsum(oh, 0) - 1, cls[:, None], 1)[:, 0]
 
 
+# ---------------------------------------------------------------------------
+# Shared capacity gather/scatter primitives.  These four functions are the
+# ONE implementation of sort-based capacity dispatch in the repo: the MCMA
+# engine below, the manual expert-parallel MoE path (models/moe.py), and
+# the grouped MoE reference all build on them.
+# ---------------------------------------------------------------------------
+
+def class_sort_ranks(cls: jax.Array, n: int):
+    """Stable class-sort with within-class arrival ranks.
+
+    cls: (R,) int32 in [0, n).  Returns ``(order, cls_sorted, rank,
+    counts)``: visiting rows in ``order`` walks class 0 first, then 1, ...;
+    ``rank[i]`` is row ``order[i]``'s arrival rank within its class;
+    ``counts`` is the per-class histogram (length n).
+    """
+    order = jnp.argsort(cls, stable=True)
+    cls_sorted = cls[order]
+    counts = jnp.bincount(cls, length=n)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])
+    rank = jnp.arange(cls.shape[0]) - starts[cls_sorted]
+    return order, cls_sorted, rank, counts
+
+
+def capacity_slots(cls_sorted: jax.Array, rank: jax.Array, cap: int, *,
+                   n_local: int, offset=0):
+    """keep mask + buffer slots for a (n_local, cap) capacity buffer.
+
+    Rows of classes outside [offset, offset + n_local) or ranked past
+    ``cap`` fall into the trash slot ``n_local * cap`` (the GShard
+    convention — dropped rows contribute zero).  ``offset`` may be traced
+    (e.g. this model-shard's first expert id).
+    """
+    local = (cls_sorted >= offset) & (cls_sorted < offset + n_local)
+    keep = (rank < cap) & local
+    slot = jnp.where(keep, (cls_sorted - offset) * cap + rank, n_local * cap)
+    return keep, slot
+
+
+def scatter_rows(rows: jax.Array, slot: jax.Array, keep: jax.Array,
+                 n_slots: int) -> jax.Array:
+    """rows (R, d) -> (n_slots, d) buffer; slot n_slots is the trash row."""
+    buf = jnp.zeros((n_slots + 1, rows.shape[-1]), rows.dtype)
+    return buf.at[slot].set(rows * keep[:, None])[:n_slots]
+
+
+def gather_rows(y: jax.Array, slot: jax.Array, keep: jax.Array) -> jax.Array:
+    """(n_slots, d_out) buffer -> per-row outputs; dropped rows are zero."""
+    y = jnp.concatenate([y, jnp.zeros((1, y.shape[-1]), y.dtype)], 0)
+    return y[slot] * keep[:, None]
+
+
 def capacity_path(x: jax.Array, mask: jax.Array, cap: int,
                   fn: Callable[[jax.Array], jax.Array]) -> jax.Array:
     """Gather <=cap rows where mask, apply fn, scatter back (zeros elsewhere).
@@ -69,14 +131,11 @@ def capacity_path(x: jax.Array, mask: jax.Array, cap: int,
     Static shapes throughout: rows ranked past ``cap`` fall into a trash
     slot and contribute zero — identical math to the seed's serve path.
     """
-    _, d = x.shape
     pos = jnp.cumsum(mask.astype(jnp.int32)) - 1               # rank in class
     keep = mask & (pos < cap)
-    idx = jnp.where(keep, pos, cap)                            # cap = trash
-    buf = jnp.zeros((cap + 1, d), x.dtype).at[idx].set(x * keep[:, None])
-    y = fn(buf[:cap])
-    y = jnp.concatenate([y, jnp.zeros((1, y.shape[-1]), y.dtype)], 0)
-    return y[idx] * keep[:, None]
+    slot = jnp.where(keep, pos, cap)                           # cap = trash
+    y = fn(scatter_rows(x, slot, keep, cap))
+    return gather_rows(y, slot, keep)
 
 
 def mcma_dispatch(x: jax.Array, logits: jax.Array,
@@ -84,7 +143,8 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
                   a_w1: jax.Array, a_b1: jax.Array,
                   a_w2: jax.Array, a_b2: jax.Array, *,
                   exact_cap: int, invoke_cap: int, backend: str = "xla",
-                  block_t: int = 128, interpret: bool = False):
+                  block_t: int = 128, interpret: bool = False,
+                  stats_axes: tuple = ()):
     """Full MCMA invocation pipeline over a flat row batch.
 
     x: (T, d); logits: (T, n_approx+1) router scores (class 0 = exact);
@@ -93,10 +153,18 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
     ``exact_cap``/``invoke_cap``/``backend``/``block_t``/``interpret`` must
     be static under jit (they determine shapes / the traced program).
 
+    ``stats_axes``: mesh axis names to ``psum`` the invoke_stats over when
+    the call runs inside a ``shard_map`` (the compute stays fully local to
+    each shard — only the scalar/per-class stats are reduced, so every
+    shard reports the GLOBAL totals: counts/dispatched/dropped/executed
+    summed across shards, exact_frac/invocation over the global row count).
+    Empty (the default) outside shard_map.
+
     Returns ``(y, invoke_stats)`` with y: (T, d_out) in the original row
     order and invoke_stats a dict of jnp scalars/vectors:
 
-      class_counts  (n+1,) routed rows per class (sums to T)
+      class_counts  (n+1,) routed rows per class (sums to T, global when
+                    stats_axes is set)
       dispatched    (n+1,) rows actually executed after capacity
       dropped       scalar, over-capacity rows (zero contribution)
       exact_frac    scalar, class_counts[0] / T
@@ -143,7 +211,17 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
 
     caps = jnp.asarray([exact_cap] + [invoke_cap] * n, counts.dtype)
     dispatched = jnp.minimum(counts, caps)
-    exact_frac = (counts[0] / t).astype(jnp.float32)
+    t_total = jnp.asarray(t, jnp.int32)
+    if stats_axes:
+        # inside shard_map: reduce to GLOBAL stats.  Each quantity is a sum
+        # of per-shard terms, so psum of the local values equals the
+        # single-device totals over the same per-shard capacities exactly.
+        ax = tuple(stats_axes)
+        t_total = jax.lax.psum(t_total, ax)
+        counts = jax.lax.psum(counts, ax)
+        dispatched = jax.lax.psum(dispatched, ax)
+        executed = jax.lax.psum(executed, ax)
+    exact_frac = (counts[0] / t_total).astype(jnp.float32)
     stats = {
         "class_counts": counts,
         "dispatched": dispatched,
@@ -154,3 +232,40 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
         "padding_rows": executed - jnp.sum(dispatched).astype(jnp.int32),
     }
     return out, stats
+
+
+def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
+                          exact_fn: Callable[[object, jax.Array], jax.Array],
+                          exact_params,
+                          a_w1: jax.Array, a_b1: jax.Array,
+                          a_w2: jax.Array, a_b2: jax.Array, *,
+                          exact_cap: int, invoke_cap: int,
+                          backend: str = "xla", block_t: int = 128,
+                          interpret: bool = False, data_axes=None):
+    """``mcma_dispatch`` shard_mapped over a mesh's data axes.
+
+    x/logits are row-sharded over the data axes (specs from
+    sharding/rules.mcma_dispatch_specs); the router/approximator/exact
+    weights are replicated.  ``exact_cap``/``invoke_cap`` are PER-SHARD
+    capacities (each shard dispatches its local rows).  ``exact_fn`` takes
+    ``(exact_params, xb)`` so the exact weights ride through shard_map as
+    an explicit (replicated) argument rather than a closure.
+
+    Returns ``(y, invoke_stats)``: y row-sharded like x, invoke_stats
+    psum-reduced to the global totals (replicated on every shard).
+    """
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.rules import dp_axes, mcma_dispatch_specs
+    dp = tuple(data_axes) if data_axes is not None else dp_axes(mesh)
+    specs = mcma_dispatch_specs(mesh, data_axes=dp)
+
+    def local(x_l, lg_l, ep, w1, b1, w2, b2):
+        return mcma_dispatch(
+            x_l, lg_l, partial(exact_fn, ep), w1, b1, w2, b2,
+            exact_cap=exact_cap, invoke_cap=invoke_cap, backend=backend,
+            block_t=block_t, interpret=interpret, stats_axes=dp)
+
+    fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
+                          out_specs=specs["out"],
+                          axis_names=frozenset(dp), check=False)
+    return fn(x, logits, exact_params, a_w1, a_b1, a_w2, a_b2)

@@ -37,7 +37,8 @@ class Request:
 class DecodeServer:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
                  max_len: int = 512, eos: int | None = None, greedy=True,
-                 seed: int = 0, use_mcma_dispatch: bool = False):
+                 seed: int = 0, use_mcma_dispatch: bool = False,
+                 mesh=None):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len, self.eos = batch, max_len, eos
         # use_mcma_dispatch: decode ticks run the ApproxFFN through the
@@ -47,6 +48,14 @@ class DecodeServer:
         # ``batch`` rows, so free slots (fed token 0) still enter the
         # router and can bias the rate on a mostly-idle slot table.
         self.use_mcma_dispatch = use_mcma_dispatch
+        # mesh: distributed deployment.  Params/cache are sharded by the
+        # declarative rules (sharding/rules.py) and every decode step is
+        # traced under steps.serve_mesh_context, so the serve-mode FFNs run
+        # their shard_map-native dispatch (the MCMA engine per data shard,
+        # invoke_stats psum-reduced to global totals).  The mesh's
+        # data-axis size must divide ``batch`` for the manual path to
+        # engage.
+        self.mesh = mesh
         self.decode = jax.jit(
             steps_lib.make_decode_step(cfg,
                                        use_mcma_dispatch=use_mcma_dispatch,
@@ -55,6 +64,9 @@ class DecodeServer:
         self.invocation_sum = 0.0    # active-slot-weighted invocation sum
         self.active_sum = 0          # total active slots over all ticks
         self.cache = M.init_cache(cfg, batch, max_len)
+        if mesh is not None:
+            self.params = self._shard_params(params)
+            self.cache = self._shard_cache(self.cache)
         self.slots: list[Request | None] = [None] * batch
         self.queue: list[Request] = []
         self.remaining_prompt: list[np.ndarray] = [np.zeros((0,), np.int32)] * batch
@@ -62,6 +74,26 @@ class DecodeServer:
         self.greedy = greedy
         self.ticks = 0
         self._fresh = None  # lazily-built pristine cache for slot resets
+
+    def _named_shardings(self, specs):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.tree.map(lambda q: NamedSharding(self.mesh, q), specs,
+                            is_leaf=lambda q: isinstance(q, P))
+
+    def _shard_params(self, params):
+        from repro.sharding import rules as R
+        specs, _ = R.param_pspecs(self.mesh, params)
+        return jax.device_put(params, self._named_shardings(specs))
+
+    def _shard_cache(self, cache):
+        from repro.sharding import rules as R
+        return jax.device_put(cache,
+                              self._named_shardings(R.cache_pspecs(self.mesh,
+                                                                   cache)))
+
+    def _decode(self, *args):
+        with steps_lib.serve_mesh_context(self.mesh):
+            return self.decode(*args)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -74,6 +106,8 @@ class DecodeServer:
                 self.remaining_prompt[i] = np.asarray(req.prompt, np.int32)
                 if self._fresh is None:
                     self._fresh = M.init_cache(self.cfg, self.batch, self.max_len)
+                    if self.mesh is not None:
+                        self._fresh = self._shard_cache(self._fresh)
                 self.cache = M.reset_slot(self.cfg, self.cache, self._fresh, i)
 
     def _gather_tokens(self) -> np.ndarray:
@@ -97,15 +131,15 @@ class DecodeServer:
             return False
         toks = self._gather_tokens()
         if self.use_mcma_dispatch:
-            logits, self.cache, m = self.decode(self.params, self.cache,
-                                                jnp.asarray(toks))
+            logits, self.cache, m = self._decode(self.params, self.cache,
+                                                 jnp.asarray(toks))
             if "invocation" in m:
                 active = sum(s is not None for s in self.slots)
                 self.invocation_sum += float(m["invocation"]) * active
                 self.active_sum += active
         else:
-            logits, self.cache = self.decode(self.params, self.cache,
-                                             jnp.asarray(toks))
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks))
         if self.greedy:
             nxt = np.asarray(jnp.argmax(logits, -1))
         else:

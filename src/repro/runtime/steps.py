@@ -11,6 +11,7 @@ All functions are pure and jit-friendly; sharding is applied by the caller
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any
@@ -86,6 +87,29 @@ def mcma_serve_config(cfg: ModelConfig) -> ModelConfig:
     return dataclasses.replace(cfg, approx=dataclasses.replace(
         cfg.approx, backend="pallas",
         interpret=jax.default_backend() != "tpu"))
+
+
+@contextlib.contextmanager
+def serve_mesh_context(mesh):
+    """Trace/serve context for mesh deployments.
+
+    Activates the mesh plus batch-sharded activations so the serve-mode
+    modules (ApproxFFN, MoE) detect the distributed deployment
+    (sharding/activations.manual_dp_context) and take their
+    shard_map-native dispatch paths — the MCMA engine per data shard with
+    psum-reduced invoke_stats.  ``mesh=None`` is a no-op so single-device
+    callers share the same code path.  Must wrap the call that TRACES the
+    jitted step (jit traces lazily, so wrapping every call is the safe
+    pattern — the context is cheap after the first).
+    """
+    if mesh is None:
+        yield None
+        return
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import rules as R
+    from repro.sharding.activations import activation_sharding
+    with mesh, activation_sharding(P(R.dp_axes(mesh), None, None)):
+        yield mesh
 
 
 def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,

@@ -43,6 +43,12 @@ def _dp_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+def dp_axes(mesh: Mesh):
+    """Public alias of the DP meta-axis tuple (used by the dispatch engine,
+    the serve context, and tests)."""
+    return _dp_axes(mesh)
+
+
 def _dp_size(mesh: Mesh) -> int:
     return int(np.prod([_axis_size(mesh, a) for a in _dp_axes(mesh)]))
 
@@ -171,6 +177,56 @@ def param_pspecs(mesh: Mesh, params) -> tuple[Any, ShardingReport]:
                                  for i, v in enumerate(subtree))
         return specs[path_prefix[:-1]]
     return rebuild("", params), report
+
+
+# ---------------------------------------------------------------------------
+# shard_map in/out specs for the serving dispatch paths.  These are the
+# declarative contracts the manual (shard_map) serve code is written
+# against; keeping them here (next to the param rules) means tests and
+# benches can build the exact same shardings the models use.
+# ---------------------------------------------------------------------------
+
+def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None) -> dict:
+    """Specs for ``runtime/dispatch.mcma_dispatch_sharded`` on flat (T, d)
+    row batches: x/logits/y row-sharded over the data axes; exact params,
+    router logits producer, and the stacked approximator weights
+    replicated; invoke_stats replicated out (psum-reduced inside)."""
+    dp = tuple(data_axes) if data_axes is not None else _dp_axes(mesh)
+    row = P(dp, None)
+    # in: (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2); P() prefixes
+    # cover arbitrary exact_params pytrees.
+    return {"in": (row, row, P(), P(None, None, None), P(None, None),
+                   P(None, None, None), P(None, None)),
+            "out": (row, P())}
+
+
+def approx_serve_specs(mesh: Mesh, *, gated: bool) -> dict:
+    """Specs for the manual ApproxFFN serve path (models/approx_ffn.py):
+    exact FFN weights Megatron-TP over "model" + FSDP over the data axes;
+    router/approximators replicated (tiny — TP would only buy per-layer
+    all-reduces, §Perf C.2); tokens batch-sharded; stats replicated."""
+    dp = _dp_axes(mesh)
+    ffn = {"w_in": P(dp, "model"), "w_out": P("model", dp)}
+    if gated:
+        ffn["w_gate"] = P(dp, "model")
+    weights = {"ffn": ffn, "router": P(None, None),
+               "a_w1": P(None, None, None), "a_b1": P(None, None),
+               "a_w2": P(None, None, None), "a_b2": P(None, None)}
+    return {"in": (weights, P(dp, None, None)),
+            "out": (P(dp, None, None), P())}
+
+
+def moe_manual_specs(mesh: Mesh, *, gated: bool) -> dict:
+    """Specs for the manual expert-parallel MoE path (models/moe.py):
+    expert stacks EP over "model" + FSDP over data; router TP'd over both;
+    tokens batch-sharded; aux loss replicated."""
+    dp = _dp_axes(mesh)
+    weights = {"router": P(dp, "model"),
+               "w_in": P("model", dp, None), "w_out": P("model", dp, None)}
+    if gated:
+        weights["w_gate"] = P("model", dp, None)
+    return {"in": (weights, P(dp, None, None)),
+            "out": (P(dp, None, None), P())}
 
 
 def batch_pspec(mesh: Mesh, arr_or_spec) -> P:
