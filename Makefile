@@ -6,7 +6,7 @@ PY ?= python
 MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
 .PHONY: test test-tier1 test-multidevice bench-quick bench-dispatch \
-	bench-dispatch-sharded deps
+	bench-dispatch-sharded bench-autotune deps
 
 deps:
 	$(PY) -m pip install "jax[cpu]" pytest hypothesis
@@ -21,7 +21,7 @@ test:
 # dispatch microbench on 8 virtual CPU devices
 test-multidevice:
 	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py
-	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune
 
 bench-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only kernels,dispatch
@@ -32,3 +32,8 @@ bench-dispatch:
 
 bench-dispatch-sharded:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --devices 8
+
+# capacity-autotuning trajectory leg (CI runs this and uploads the CSV):
+# pallas-vs-xla divergence gated at EVERY visited operating point
+bench-autotune:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune

@@ -19,7 +19,19 @@ shard-local single-device baseline (one shard's rows on one device) so
 the scaling overhead of the shard_map path is visible per shape.  Every
 mode asserts the Pallas backend against the XLA oracle.
 
-Writes benchmarks/out/dispatch.csv (modes: single | sharded | shard-local).
+``--autotune`` adds the capacity-autotuning microbench: a skewed,
+phase-shifting synthetic request mix is served tick by tick while the
+``runtime/autotune.CapacityController`` walks its operating-point ladder
+(with ``--devices N`` also through the sharded engine on an N-way mesh).
+Each tick appends a trajectory row (operating point, dropped rows,
+routed vs served invocation); at every VISITED operating point the
+Pallas backend is asserted against the XLA oracle — the divergence gate
+under switched capacities.  The leg itself asserts the controller ends
+under the drop budget with strictly more served invocation than the
+static starting point.
+
+Writes benchmarks/out/dispatch.csv (modes: single | sharded |
+shard-local | autotune).
 """
 from __future__ import annotations
 
@@ -89,7 +101,129 @@ def _check_oracle(rows, outs, t, n):
     assert err < 1e-4, f"backend divergence at T={t} n={n}: {err}"
 
 
-def main(quick: bool = False, iters: int | None = None, devices: int = 1):
+def _skewed_logits(key, t, n, hot, hot_frac):
+    """Router logits sending ~hot_frac of rows to class ``hot`` and the
+    rest roughly uniform over the other classes (incl. exact)."""
+    ks = jax.random.split(key, 2)
+    cls = jnp.where(jax.random.uniform(ks[0], (t,)) < hot_frac, hot,
+                    jax.random.randint(ks[1], (t,), 0, n + 1))
+    return jax.nn.one_hot(cls, n + 1) * 10.0
+
+
+def _autotune_leg(rows, *, quick, devices, drop_budget=0.05):
+    """Serve a phase-shifting skewed mix through the controller's ladder;
+    gate pallas-vs-xla at every visited operating point."""
+    from repro.runtime.autotune import (CapacityController, OperatingPoint,
+                                        point_caps)
+    from repro.sharding.rules import shard_capacity
+    t, n = (256, 3) if quick else (1024, 4)
+    d, d_h, d_ff, block_t = (128, 32, 256, 64) if quick \
+        else (256, 64, 1024, 128)
+    on_cpu = jax.default_backend() != "tpu"
+    key = jax.random.PRNGKey(17)
+    x, _, (w1, b1, w2, b2), (wi, wo) = _make_case(key, t, n, d, d_h, d_ff)
+    exact_fn = lambda xb: jnp.dot(jax.nn.silu(jnp.dot(xb, wi)), wo)
+    exact_fn_p = lambda ep, xb: jnp.dot(jax.nn.silu(jnp.dot(xb, ep[0])),
+                                        ep[1])
+
+    ladder = (OperatingPoint(0.5, 0.15), OperatingPoint(0.5, 0.3),
+              OperatingPoint(0.6, 0.5), OperatingPoint(1.0, 1.0))
+    mesh = jax.make_mesh((devices,), ("data",)) if devices > 1 else None
+    tl = t // devices
+    ctrl = CapacityController(
+        ladder, lambda pt: point_caps(pt, tl, n, n_shards=devices),
+        drop_budget=drop_budget, cooldown=1, down_patience=4)
+
+    fns = {}                                  # (rung, backend) -> jitted fn
+
+    def run_point(idx, xx, lg, backend):
+        pt = ladder[idx]
+        ec = shard_capacity(tl, pt.exact_frac, slack=pt.shard_slack)
+        ic = shard_capacity(tl, pt.invoke_frac, slack=pt.shard_slack)
+        interp = on_cpu and backend == "pallas"
+        if (idx, backend) not in fns:
+            if mesh is None:
+                fns[(idx, backend)] = jax.jit(
+                    lambda a, b, be=backend, ip=interp, e=ec, i=ic:
+                    D.mcma_dispatch(a, b, exact_fn, w1, b1, w2, b2,
+                                    exact_cap=e, invoke_cap=i, backend=be,
+                                    block_t=block_t, interpret=ip))
+            else:
+                fns[(idx, backend)] = jax.jit(
+                    lambda a, b, be=backend, ip=interp, e=ec, i=ic:
+                    D.mcma_dispatch_sharded(
+                        mesh, a, b, exact_fn_p, (wi, wo), w1, b1, w2, b2,
+                        exact_cap=e, invoke_cap=i, backend=be,
+                        block_t=block_t, interpret=ip))
+        return fns[(idx, backend)](xx, lg)
+
+    # two-phase mix: light/balanced, then one class runs hot — the static
+    # starting rung drops a large share of approximable rows
+    phases = [(0.25, 8), (0.85, 24)] if quick else [(0.25, 10), (0.85, 40)]
+    tick = 0
+    static_idx = ctrl.index
+    static_acc = np.zeros(2)                  # dropped, served approx rows
+    tuned_acc = np.zeros(2)
+    total_rows = 0
+    hot = n                                   # hottest approximator class
+    for hot_frac, ticks in phases:
+        for _ in range(ticks):
+            lg = _skewed_logits(jax.random.fold_in(key, tick), t, n, hot,
+                                hot_frac)
+            yx, sx = run_point(ctrl.index, x, lg, "xla")
+            yp, sp = run_point(ctrl.index, x, lg, "pallas")
+            err = float(np.abs(np.asarray(yp) - np.asarray(yx)).max())
+            assert err < 1e-4, \
+                f"pallas-vs-xla divergence at operating point " \
+                f"{ladder[ctrl.index]}: {err}"
+            # static baseline: the same mix pinned at the starting rung
+            # (free while the controller still sits on it)
+            ss = sx if ctrl.index == static_idx \
+                else run_point(static_idx, x, lg, "xla")[1]
+            static_acc += (float(ss["dropped"]),
+                           float(np.asarray(ss["dispatched"])[1:].sum()))
+            tuned_acc += (float(sx["dropped"]),
+                          float(np.asarray(sx["dispatched"])[1:].sum()))
+            total_rows += t
+            pt = ladder[ctrl.index]
+            rows.append({
+                "T": t, "n_approx": n, "d_model": d, "backend": "both",
+                "block_t": block_t, "interpret": on_cpu,
+                "devices": devices, "mode": "autotune",
+                "tick": tick, "op_index": ctrl.index,
+                "op_exact_frac": pt.exact_frac,
+                "op_invoke_frac": pt.invoke_frac,
+                "invocation": round(float(sx["invocation"]), 4),
+                "exact_frac": round(float(sx["exact_frac"]), 4),
+                "dropped": int(sx["dropped"]),
+                "served_invocation": round(
+                    float(np.asarray(sx["dispatched"])[1:].sum())
+                    / max(float(np.asarray(sx["class_counts"]).sum()), 1),
+                    4),
+                "executed_rows": int(sx["executed_rows"]),
+                "padding_rows": int(sx["padding_rows"]),
+                "max_abs_err_vs_xla": round(err, 7),
+            })
+            ctrl.observe(jax.tree.map(np.asarray, sx))
+            tick += 1
+    final = ctrl.index
+    print(f"autotune x{devices}: {len(ctrl.history)} switches, final point "
+          f"{ladder[final]}; dropped {tuned_acc[0]:.0f} vs static "
+          f"{static_acc[0]:.0f} rows; served approx rows "
+          f"{tuned_acc[1]:.0f} vs static {static_acc[1]:.0f}", flush=True)
+    # the leg's own acceptance gate: under budget, strictly above static
+    assert static_acc[0] / total_rows > 0.10, \
+        "mix not skewed enough to stress the static config"
+    last = [r for r in rows if r["mode"] == "autotune"][-max(
+        1, phases[-1][1] // 2):]
+    tail_drop = sum(r["dropped"] for r in last) / (len(last) * t)
+    assert tail_drop <= drop_budget, (tail_drop, drop_budget)
+    assert tuned_acc[1] > static_acc[1], \
+        "autotune must serve strictly more approximator rows than static"
+
+
+def main(quick: bool = False, iters: int | None = None, devices: int = 1,
+         autotune: bool = False):
     os.makedirs(OUT, exist_ok=True)
     on_cpu = jax.default_backend() != "tpu"
     if devices > 1 and len(jax.devices()) < devices:
@@ -175,8 +309,15 @@ def main(quick: bool = False, iters: int | None = None, devices: int = 1):
                         stats=stats, devices=1, mode="shard-local")
             _check_oracle(rows, outs_loc, tl, n)
 
+    if autotune:
+        _autotune_leg(rows, quick=quick, devices=devices)
+
+    # column union across modes (the autotune rows add trajectory columns)
+    fields = list(rows[0].keys())
+    for r in rows:
+        fields += [k for k in r if k not in fields]
     with open(os.path.join(OUT, "dispatch.csv"), "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w = csv.DictWriter(f, fieldnames=fields, restval="")
         w.writeheader()
         w.writerows(rows)
     print(f"wrote {os.path.join(OUT, 'dispatch.csv')} ({len(rows)} rows)")
@@ -190,6 +331,10 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the dispatch over an N-way data mesh "
                          "(forces N virtual CPU devices when run as main)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="add the capacity-autotuning trajectory leg "
+                         "(controller over a skewed phase-shifting mix; "
+                         "pallas-vs-xla gated at every operating point)")
     args = ap.parse_args()
     if args.devices > 1 and "host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -197,4 +342,5 @@ if __name__ == "__main__":
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "") +
             f" --xla_force_host_platform_device_count={args.devices}").strip()
-    main(quick=args.quick, iters=args.iters, devices=args.devices)
+    main(quick=args.quick, iters=args.iters, devices=args.devices,
+         autotune=args.autotune)

@@ -28,18 +28,24 @@ def main(argv=None):
     ap.add_argument("--mcma-dispatch", action="store_true",
                     help="route the ApproxFFN through the Pallas "
                          "weight-switch dispatch engine (implies --approx)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="adapt serve capacities online from the served "
+                         "invoke_stats (implies --mcma-dispatch)")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(get_config(args.arch))
+    if args.autotune:
+        args.mcma_dispatch = True
     if args.approx or args.mcma_dispatch:
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
             cfg.approx, enable=True))
     assert cfg.input_mode == "tokens", "serve demo expects token models"
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     server = DecodeServer(cfg, params, batch=args.batch, max_len=96,
-                          use_mcma_dispatch=args.mcma_dispatch)
+                          use_mcma_dispatch=args.mcma_dispatch,
+                          autotune=args.autotune)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -62,6 +68,14 @@ def main(argv=None):
     if "invocation_rate" in stats:
         print(f"mean invocation rate (fraction of tokens approximated): "
               f"{stats['invocation_rate']:.3f}")
+    if "served_invocation_rate" in stats:
+        print(f"served invocation rate (approx rows executed): "
+              f"{stats['served_invocation_rate']:.3f}; dropped "
+              f"{stats['dropped_rows']:.1f} rows")
+    if "autotune" in stats:
+        a = stats["autotune"]
+        print(f"autotune: {len(a['switches'])} switches, final point "
+              f"{a['final_point']}")
     assert done == len(reqs)
 
 

@@ -27,6 +27,11 @@ class ApproxConfig:
     # approximator.  FLOP savings vs dense FFN = 1 - exact_frac.
     exact_frac: float = 0.5
     invoke_frac: float = 0.4
+    # per-shard capacity over-provisioning under a mesh (the engine
+    # dispatches each data shard's rows against its own budgets, so a
+    # class hot on one shard drops rows even when another shard has
+    # slack).  >1 buys headroom; sharding/rules.shard_capacity applies it.
+    shard_slack: float = 1.0
     # serve-mode dispatch engine (runtime/dispatch.py): "xla" = portable
     # per-class capacity dispatch (the test oracle); "pallas" = the
     # scalar-prefetch weight-switch kernel (kernels/switched_mlp.py).

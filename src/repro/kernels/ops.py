@@ -51,6 +51,31 @@ def worst_case_rows(t: int, n: int, block_t: int) -> int:
     return _pad_to(t + n * block_t, block_t)
 
 
+def prepad_switched_weights(w1: jax.Array, b1: jax.Array, w2: jax.Array,
+                            b2: jax.Array, *, pseudo_classes: int = 1):
+    """One-time serving form of an approximator weight stack.
+
+    Appends ``pseudo_classes`` all-zero approximators (the nC/over-capacity
+    rows ride through the switched kernel under them with exactly-zero
+    contribution) and lane-pads every feature dim to a multiple of LANE, so
+    ``switched_apply(..., prepadded=True)`` ships the stacks straight into
+    the kernel with no per-call copies.  Padding regions are exact zeros —
+    semantics-preserving for the tanh MLP (see module docstring).
+
+    w1: (n, d_in, d_h); b1: (n, d_h); w2: (n, d_h, d_out); b2: (n, d_out)
+    -> same order with leading dim n + pseudo_classes and padded features.
+    """
+    n, d_in, d_h = w1.shape
+    d_out = w2.shape[2]
+    d_in_p, d_h_p, d_out_p = (_pad_to(d_in, LANE), _pad_to(d_h, LANE),
+                              _pad_to(d_out, LANE))
+    z = pseudo_classes
+    return (jnp.pad(w1, ((0, z), (0, d_in_p - d_in), (0, d_h_p - d_h))),
+            jnp.pad(b1, ((0, z), (0, d_h_p - d_h))),
+            jnp.pad(w2, ((0, z), (0, d_h_p - d_h), (0, d_out_p - d_out))),
+            jnp.pad(b2, ((0, z), (0, d_out_p - d_out))))
+
+
 def class_sort_plan(cls: jax.Array, n: int, block_t: int):
     """Static-shape plan grouping rows by class into single-class row-tiles.
 
@@ -85,29 +110,44 @@ def class_sort_plan(cls: jax.Array, n: int, block_t: int):
     return order, pos, tile_cls, padded_sizes, t_pad
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret", "prepadded",
+                                    "d_out"))
 def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
                    w2: jax.Array, b2: jax.Array, *, block_t: int = 256,
-                   interpret: bool = False) -> jax.Array:
+                   interpret: bool = False, prepadded: bool = False,
+                   d_out: int | None = None) -> jax.Array:
     """MCMA dispatch: row t is evaluated under approximator cls[t].
 
     x: (T, d_in); cls: (T,) int32 in [0, n).  Rows are grouped by class into
     single-class tiles (worst-case padding: one partial tile per class), the
     switched kernel runs over the padded buffer, and results scatter back.
+
+    ``prepadded=True`` declares the weight stacks already in serving form
+    (prepad_switched_weights: lane-padded feature dims, pseudo-classes
+    appended) so no per-call weight copies happen on the hot path;
+    ``d_out`` then gives the LOGICAL output width to slice back to (the
+    padded stacks cannot tell it apart from its padding).
     """
     t, d_in = x.shape
     n = w1.shape[0]
-    d_h, d_out = w1.shape[2], w2.shape[2]
-    d_in_p, d_h_p, d_out_p = (_pad_to(d_in, LANE), _pad_to(d_h, LANE),
-                              _pad_to(d_out, LANE))
+    if prepadded:
+        assert d_out is not None, "prepadded stacks need an explicit d_out"
+        d_in_p, d_h_p = w1.shape[1], w1.shape[2]
+        assert d_in <= d_in_p, (d_in, d_in_p)
+        w1p, w2p = w1, w2
+        b1p, b2p = b1[:, None, :], b2[:, None, :]
+    else:
+        d_h, d_out = w1.shape[2], w2.shape[2]
+        d_in_p, d_h_p, d_out_p = (_pad_to(d_in, LANE), _pad_to(d_h, LANE),
+                                  _pad_to(d_out, LANE))
+        w1p = jnp.pad(w1, ((0, 0), (0, d_in_p - d_in), (0, d_h_p - d_h)))
+        b1p = jnp.pad(b1, ((0, 0), (0, d_h_p - d_h)))[:, None, :]
+        w2p = jnp.pad(w2, ((0, 0), (0, d_h_p - d_h), (0, d_out_p - d_out)))
+        b2p = jnp.pad(b2, ((0, 0), (0, d_out_p - d_out)))[:, None, :]
     order, pos, tile_cls, _, t_pad = class_sort_plan(cls, n, block_t)
 
     xp = jnp.zeros((t_pad, d_in_p), x.dtype).at[pos, :d_in].set(x[order])
-
-    w1p = jnp.pad(w1, ((0, 0), (0, d_in_p - d_in), (0, d_h_p - d_h)))
-    b1p = jnp.pad(b1, ((0, 0), (0, d_h_p - d_h)))[:, None, :]
-    w2p = jnp.pad(w2, ((0, 0), (0, d_h_p - d_h), (0, d_out_p - d_out)))
-    b2p = jnp.pad(b2, ((0, 0), (0, d_out_p - d_out)))[:, None, :]
 
     yp = switched_mlp.switched_mlp(xp, tile_cls, w1p, b1p, w2p, b2p,
                                    block_t=block_t, interpret=interpret)

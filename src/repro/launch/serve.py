@@ -23,6 +23,15 @@ def main(argv=None):
     ap.add_argument("--mcma-dispatch", action="store_true",
                     help="serve the ApproxFFN through the Pallas "
                          "weight-switch dispatch engine (implies --approx)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="adapt serve capacities online from the served "
+                         "invoke_stats (runtime/autotune.py; implies "
+                         "--mcma-dispatch): the controller walks a ladder "
+                         "of precompiled operating points targeting "
+                         "--drop-budget dropped rows at max invocation")
+    ap.add_argument("--drop-budget", type=float, default=0.05,
+                    help="autotune target: max fraction of routed rows "
+                         "dropped over capacity (default 0.05)")
     ap.add_argument("--data", type=int, default=0,
                     help="mesh data-axis size (0 = no mesh, single device)")
     ap.add_argument("--model", type=int, default=1,
@@ -44,6 +53,8 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
+    if args.autotune:
+        args.mcma_dispatch = True
     if args.approx or args.mcma_dispatch:
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
             cfg.approx, enable=True))
@@ -55,7 +66,9 @@ def main(argv=None):
             "--batch must divide by --data for the sharded dispatch path"
     params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
     server = DecodeServer(cfg, params, batch=args.batch, max_len=args.max_len,
-                          use_mcma_dispatch=args.mcma_dispatch, mesh=mesh)
+                          use_mcma_dispatch=args.mcma_dispatch, mesh=mesh,
+                          autotune=args.autotune,
+                          drop_budget=args.drop_budget)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -75,6 +88,14 @@ def main(argv=None):
               f"({len(jax.devices())} devices, shard_map-native dispatch)")
     if "invocation_rate" in stats:
         print(f"mean invocation rate: {stats['invocation_rate']:.3f}")
+    if "served_invocation_rate" in stats:
+        print(f"served invocation rate: {stats['served_invocation_rate']:.3f}"
+              f" (dropped {stats['dropped_rows']:.1f} rows,"
+              f" frac {stats['dropped_frac']:.4f})")
+    if "autotune" in stats:
+        a = stats["autotune"]
+        print(f"autotune: final point {a['final_point']} after "
+              f"{len(a['switches'])} switches")
     assert done == len(reqs), "server failed to drain"
     return stats
 

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.ops import prepad_switched_weights
 from repro.models.layers import ffn_fwd, init_ffn
 
 
@@ -39,22 +40,42 @@ def init_approx_ffn(key, cfg: ModelConfig):
     d, a = cfg.d_model, cfg.approx
     ks = jax.random.split(key, 4)
     s_in, s_h = d ** -0.5, a.d_hidden ** -0.5
-    p = {"ffn": init_ffn(ks[0], cfg),
-         "router": jax.random.normal(ks[1], (d, a.n_approx + 1), cfg.pdtype) * s_in,
-         # stacked identical-topology approximators (paper §III-D requirement)
-         "a_w1": jax.random.normal(ks[2], (a.n_approx, d, a.d_hidden), cfg.pdtype) * s_in,
-         "a_b1": jnp.zeros((a.n_approx, a.d_hidden), cfg.pdtype),
-         "a_w2": jax.random.normal(ks[3], (a.n_approx, a.d_hidden, d), cfg.pdtype) * s_h,
-         "a_b2": jnp.zeros((a.n_approx, d), cfg.pdtype)}
-    return p
+    # stacked identical-topology approximators (paper §III-D requirement),
+    # stored in SERVING form from the start: the zero-weight nC
+    # pseudo-class appended and feature dims lane-padded
+    # (kernels/ops.prepad_switched_weights), so the decode hot path ships
+    # the stacks into the weight-switch kernel with no per-call copies.
+    # Padded regions are exact zeros and STAY zero under training: the
+    # train path only reads/derives gradients through the logical views
+    # (approx_stacks), so their grads — and hence AdamW updates — are zero.
+    w1 = jax.random.normal(ks[2], (a.n_approx, d, a.d_hidden), cfg.pdtype) * s_in
+    b1 = jnp.zeros((a.n_approx, a.d_hidden), cfg.pdtype)
+    w2 = jax.random.normal(ks[3], (a.n_approx, a.d_hidden, d), cfg.pdtype) * s_h
+    b2 = jnp.zeros((a.n_approx, d), cfg.pdtype)
+    w1, b1, w2, b2 = prepad_switched_weights(w1, b1, w2, b2)
+    return {"ffn": init_ffn(ks[0], cfg),
+            "router": jax.random.normal(ks[1], (d, a.n_approx + 1),
+                                        cfg.pdtype) * s_in,
+            "a_w1": w1, "a_b1": b1, "a_w2": w2, "a_b2": b2}
 
 
-def _apply_all_approx(p, x):
+def approx_stacks(cfg: ModelConfig, p):
+    """Logical (n, d, d_hidden)-shaped views of the serving-form stacks —
+    what the train path and error labelling operate on."""
+    a, d = cfg.approx, cfg.d_model
+    return (p["a_w1"][:a.n_approx, :d, :a.d_hidden],
+            p["a_b1"][:a.n_approx, :a.d_hidden],
+            p["a_w2"][:a.n_approx, :a.d_hidden, :d],
+            p["a_b2"][:a.n_approx, :d])
+
+
+def _apply_all_approx(cfg, p, x):
     """All approximators on all tokens.  x: (T, d) -> (n, T, d)."""
-    h = jnp.einsum("td,ndh->nth", x, p["a_w1"].astype(x.dtype))
-    h = jnp.tanh(h + p["a_b1"][:, None, :].astype(x.dtype))
-    y = jnp.einsum("nth,nhd->ntd", h, p["a_w2"].astype(x.dtype))
-    return y + p["a_b2"][:, None, :].astype(x.dtype)
+    w1, b1, w2, b2 = approx_stacks(cfg, p)
+    h = jnp.einsum("td,ndh->nth", x, w1.astype(x.dtype))
+    h = jnp.tanh(h + b1[:, None, :].astype(x.dtype))
+    y = jnp.einsum("nth,nhd->ntd", h, w2.astype(x.dtype))
+    return y + b2[:, None, :].astype(x.dtype)
 
 
 def _rel_err(y_hat, y, eps=1e-6):
@@ -74,7 +95,7 @@ def approx_ffn_train(cfg: ModelConfig, p, x: jax.Array):
     b, s, d = x.shape
     xt = x.reshape(b * s, d)
     exact = ffn_fwd(cfg, p["ffn"], xt)                      # (T, d) teacher
-    approx = _apply_all_approx(p, xt)                       # (n, T, d)
+    approx = _apply_all_approx(cfg, p, xt)                  # (n, T, d)
     errs = jax.vmap(lambda yh: _rel_err(yh, exact))(approx)  # (n, T)
 
     # competitive labels: argmin error if under bound, else 0 (exact)
@@ -101,12 +122,18 @@ def approx_ffn_train(cfg: ModelConfig, p, x: jax.Array):
     return exact.reshape(b, s, d), aux
 
 
-def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
+def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
+                     row_mask: jax.Array | None = None):
     """Serving path with capacity dispatch.  x: (B, S, d) -> (out, aux).
 
     Exact FFN runs on ``exact_frac``·T tokens only — the paper's invocation
     gain realized as a FLOP reduction.  invoke capacity per approximator is
     sized for a balanced dispatch with slack.
+
+    ``row_mask`` (optional, (B,) bool) marks the ACTIVE batch rows — a
+    decode server's occupied slots.  Idle rows are excluded from dispatch
+    and from every invoke stat, so invocation/exact_frac (and any capacity
+    autotuner reading them) stay exact on partially-full slot tables.
 
     The engine is ``runtime/dispatch.mcma_dispatch`` (classify -> capacity
     -> class-sort -> weight-switch kernel / XLA oracle -> exact -> scatter);
@@ -118,6 +145,7 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
     """
     from repro.runtime.dispatch import mcma_dispatch
     from repro.sharding.activations import manual_dp_context
+    from repro.sharding.rules import shard_capacity
     a = cfg.approx
     b, s, d = x.shape
     t = b * s
@@ -127,16 +155,19 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         g = int(_np.prod([sizes[ax] for ax in dp]))
         if b % g == 0 and cfg.d_ff % sizes["model"] == 0:
-            return _approx_serve_manual(cfg, p, x, mesh, dp)
+            return _approx_serve_manual(cfg, p, x, mesh, dp,
+                                        row_mask=row_mask)
 
     xt = x.reshape(t, d)
+    rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
     logits = jnp.dot(xt, p["router"].astype(x.dtype)).astype(jnp.float32)
     out, stats = mcma_dispatch(
         xt, logits, lambda xb: ffn_fwd(cfg, p["ffn"], xb),
         p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"],
-        exact_cap=max(int(t * a.exact_frac), 1),
-        invoke_cap=max(int(t * a.invoke_frac), 1),
-        backend=a.backend, block_t=a.block_t, interpret=a.interpret)
+        exact_cap=shard_capacity(t, a.exact_frac, slack=a.shard_slack),
+        invoke_cap=shard_capacity(t, a.invoke_frac, slack=a.shard_slack),
+        backend=a.backend, block_t=a.block_t, interpret=a.interpret,
+        row_mask=rm, weights_prepadded=True)
 
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
@@ -145,7 +176,7 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array):
     return out.reshape(b, s, d), aux
 
 
-def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp):
+def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None):
     """Shard_map-native serve dispatch: the SAME ``mcma_dispatch`` engine
     as the single-device path, run per data shard (each shard classifies /
     capacities / class-sorts / weight-switches its OWN tokens — no
@@ -153,20 +184,25 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp):
     §Perf B/C).  The exact FFN runs Megatron-TP over "model" with one psum
     inside the engine's capacity gather; the approximators are replicated
     (tiny) and run locally; invoke_stats are psum-reduced over the data
-    axes so every shard reports the global totals.
+    axes so every shard reports the global totals.  Per-shard capacities
+    come from sharding/rules.shard_capacity (``cfg.approx.shard_slack``
+    over-provisions them against cross-shard class skew).
     """
     from repro.runtime.dispatch import mcma_dispatch
     from repro.sharding.compat import shard_map_compat
-    from repro.sharding.rules import approx_serve_specs
+    from repro.sharding.rules import approx_serve_specs, shard_capacity
     a = cfg.approx
     b, s, d = x.shape
     axes = tuple(dp) + ("model",)
     specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"])
+    if row_mask is None:
+        row_mask = jnp.ones((b,), bool)
 
-    def local(p_loc, x_loc):
+    def local(p_loc, x_loc, m_loc):
         bl, sl, _ = x_loc.shape
         tl = bl * sl
         xt = x_loc.reshape(tl, d)
+        rm = jnp.repeat(m_loc.astype(bool), sl)
         # FSDP unshard-on-use of the exact FFN's TP slices
         w_in = jax.lax.all_gather(p_loc["ffn"]["w_in"], dp, axis=0, tiled=True)
         w_out = jax.lax.all_gather(p_loc["ffn"]["w_out"], dp, axis=1, tiled=True)
@@ -188,17 +224,19 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp):
         out, stats = mcma_dispatch(
             xt, logits, exact_fn,
             p_loc["a_w1"], p_loc["a_b1"], p_loc["a_w2"], p_loc["a_b2"],
-            exact_cap=max(int(tl * a.exact_frac), 1),
-            invoke_cap=max(int(tl * a.invoke_frac), 1),
+            exact_cap=shard_capacity(tl, a.exact_frac, slack=a.shard_slack),
+            invoke_cap=shard_capacity(tl, a.invoke_frac,
+                                      slack=a.shard_slack),
             backend=a.backend, block_t=a.block_t, interpret=a.interpret,
-            stats_axes=dp)
+            stats_axes=dp, row_mask=rm, weights_prepadded=True)
         return out.reshape(bl, sl, d), stats
 
     fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
                           out_specs=specs["out"],
                           axis_names=frozenset(axes), check=False)
     out, stats = fn({**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
-                                          "a_b2")}, "ffn": p["ffn"]}, x)
+                                          "a_b2")}, "ffn": p["ffn"]}, x,
+                    row_mask)
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
            "router_acc": jnp.zeros((), jnp.float32),
@@ -206,7 +244,8 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp):
     return out, aux
 
 
-def approx_ffn_fwd(cfg: ModelConfig, p, x: jax.Array, *, serve: bool = False):
+def approx_ffn_fwd(cfg: ModelConfig, p, x: jax.Array, *, serve: bool = False,
+                   row_mask: jax.Array | None = None):
     if serve:
-        return approx_ffn_serve(cfg, p, x)
+        return approx_ffn_serve(cfg, p, x, row_mask=row_mask)
     return approx_ffn_train(cfg, p, x)

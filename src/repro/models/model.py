@@ -53,7 +53,8 @@ def _init_dense_block(key, cfg: ModelConfig):
     return p
 
 
-def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False):
+def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False,
+                 row_mask=None):
     """One transformer block.  Returns (x, new_cache, aux_loss, aux_metrics)."""
     h, new_cache = L.attention_fwd(cfg, p["attn"], L.norm_fwd(cfg, p["ln1"], x),
                                    positions, cache)
@@ -61,29 +62,37 @@ def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False):
     metrics = {}
     if cfg.parallel_block:
         # stablelm-2 style: FFN in parallel with attention, one residual
-        f = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln1"], x), serve)
+        f = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln1"], x), serve, row_mask)
         f, aux, metrics = f
         x = x + h + f
     else:
         x = x + h
-        f, aux, metrics = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln2"], x), serve)
+        f, aux, metrics = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln2"], x),
+                                    serve, row_mask)
         x = x + f
     return x, new_cache, aux, metrics
 
 
-def _ffn_part(cfg: ModelConfig, p, xn, serve):
+def _ffn_part(cfg: ModelConfig, p, xn, serve, row_mask=None):
     if cfg.moe.n_experts:
         y, aux = moe.moe_fwd(cfg, p["moe"], xn)
         return y, aux, {}
     if cfg.approx.enable:
-        y, a = approx_ffn_fwd(cfg, p["approx"], xn, serve=serve)
+        y, a = approx_ffn_fwd(cfg, p["approx"], xn, serve=serve,
+                              row_mask=row_mask)
         m = {"invocation": a["invocation"], "router_acc": a["router_acc"]}
         st = a.get("invoke_stats")
         if st is not None:  # serve-mode dispatch engine reports these
-            total = jnp.sum(st["class_counts"]).astype(jnp.float32)
+            total = jnp.maximum(jnp.sum(st["class_counts"]), 1) \
+                .astype(jnp.float32)
             m["exact_frac"] = st["exact_frac"]
             m["dropped_frac"] = st["dropped"].astype(jnp.float32) / total
             m["padding_rows"] = st["padding_rows"].astype(jnp.float32)
+            # the capacity autotuner's raw signal (global under a mesh):
+            # routed + post-capacity per-class counts, dropped rows
+            m["class_counts"] = st["class_counts"].astype(jnp.float32)
+            m["dispatched"] = st["dispatched"].astype(jnp.float32)
+            m["dropped_rows"] = st["dropped"].astype(jnp.float32)
         return y, a["loss"], m
     return L.ffn_fwd(cfg, p["ffn"], xn), jnp.zeros((), jnp.float32), {}
 
@@ -213,7 +222,9 @@ def forward(cfg: ModelConfig, params, inputs: jax.Array, *,
         x, (auxs, ms, kvs) = jax.lax.scan(_maybe_remat(cfg, body), x,
                                           params["blocks"])
         aux_total = jnp.sum(auxs)
-        metrics = {k: jnp.mean(v) for k, v in ms.items()}
+        # layer mean over the scan axis only: scalar metrics stay scalar,
+        # per-class vectors (class_counts/dispatched) stay (n+1,)
+        metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}
         if collect_cache:
             ks, vs = kvs
             if cfg.sliding_window:
@@ -330,11 +341,17 @@ def pad_cache(cfg: ModelConfig, cache, max_len: int):
 
 
 def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
-           serve: bool = True, collect_metrics: bool = False):
+           serve: bool = True, collect_metrics: bool = False,
+           row_mask: jax.Array | None = None):
     """One decode step.  inputs: tokens (B, 1) or embeds (B, 1, d).
     Returns (logits (B, V), new_cache), or (logits, new_cache, metrics)
     when ``collect_metrics`` — layer-meaned per-step block metrics (e.g.
-    the ApproxFFN dispatch invocation rate; uniform family only)."""
+    the ApproxFFN dispatch invocation rate; uniform family only).
+
+    ``row_mask`` (optional, (B,) bool) marks the ACTIVE batch slots of a
+    continuous-batching server.  Idle slots (fed dummy token 0) are
+    excluded from the serve-mode dispatch and its invoke stats, so the
+    reported invocation/exact_frac are exact on partially-full tables."""
     topo = topology(cfg)
     x = L.embed_fwd(cfg, params["embed"], inputs)
     pos = cache["pos"]                                   # (B,) per-slot
@@ -350,7 +367,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             x, ck, cv = carry
             blk, i = blk_i
             lc = {"k": ck[i], "v": cv[i], "pos": pos}
-            x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve)
+            x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
+                                       row_mask=row_mask)
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)
             return (x, ck, cv), (m if collect_metrics else None)
@@ -359,7 +377,7 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             (params["blocks"], jnp.arange(cfg.n_layers)))
         new_cache = {"k": ks, "v": vs, "pos": pos + 1}
         if collect_metrics and ms is not None:
-            step_metrics = {k: jnp.mean(v) for k, v in ms.items()}
+            step_metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}
 
     elif topo.kind == "xlstm":
         def group(x, grp):
@@ -391,7 +409,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
                 return x, ns
             x, nmsts = jax.lax.scan(inner, x, (mblks, msts))
             lc = {"k": ck[gi], "v": cv[gi], "pos": pos}
-            x, nc, _, _ = _dense_block(cfg, shared, x, positions, lc, serve=serve)
+            x, nc, _, _ = _dense_block(cfg, shared, x, positions, lc,
+                                       serve=serve, row_mask=row_mask)
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], gi, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], gi, 0)
             return (x, ck, cv), nmsts

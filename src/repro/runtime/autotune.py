@@ -1,0 +1,245 @@
+"""Online capacity autotuning from served invoke_stats.
+
+The paper maximizes approximator invocation, but the serve-mode capacity
+fractions (``ApproxConfig.exact_frac``/``invoke_frac``) are static: a class
+that runs hot drops rows (zero contribution — quality loss carried by the
+residual) while other classes' capacity slots sit idle as pure padding.
+QoS-Nets-style, approximate inference should move between OPERATING POINTS
+at runtime from the observed load — and the psum-reduced global
+``invoke_stats`` every ``mcma_dispatch`` call returns are exactly that
+signal (per-class routed counts, post-capacity dispatched counts, dropped
+rows; exact on partially-full slot tables since the free-slot router bias
+fix, see runtime/dispatch.mcma_dispatch's ``row_mask``).
+
+Capacities determine SHAPES, so adaptation cannot be a traced knob:
+instead the controller selects among a small static ladder of
+``OperatingPoint``s, each corresponding to one precompiled jitted step
+(the server keeps one decode step per rung and switches between them —
+no retracing after first use of a rung).
+
+Control law (deliberately boring — it must never thrash a serving fleet):
+
+  * objective: keep the EMA of the dropped-row fraction under
+    ``drop_budget`` while running the CHEAPEST rung that does so (cheap =
+    least executed capacity; dropping to a cheaper rung both saves padded
+    compute and, on the rungs below the mix's demand, trades invocation
+    away — so "cheapest rung under budget" IS "max invocation at min
+    cost" for a monotone ladder);
+  * step UP (more capacity) when the EMA violates the budget: jump
+    directly to the first rung whose PREDICTED drop fraction — replaying
+    the observed per-class routed counts against that rung's capacities —
+    meets the budget (observed drops at the current rung only say "not
+    enough"; the prediction says how much is);
+  * step DOWN one rung only after ``down_patience`` consecutive ticks in
+    which the next-cheaper rung's predicted drop fraction stays under
+    ``down_margin * drop_budget`` (hysteresis: the down-threshold is
+    stricter than the up-threshold, so the controller never oscillates
+    between two rungs on a steady mix);
+  * ``cooldown`` ticks of silence after every switch (a switch changes
+    the stats distribution; judging the new rung on the old EMA would
+    double-trigger);
+  * exponential DOWN-BACKOFF: the prediction can be systematically
+    optimistic (layer-MEANED counts hide per-layer class concentration;
+    global counts hide cross-shard skew), so a rung that dropped rows and
+    forced a re-escalation shortly after the controller stepped down into
+    it doubles the patience required before the next down attempt — a
+    persistently deceptive mix converges to "sit on the safe rung"
+    instead of thrashing the step cache.
+
+On a mesh the prediction uses GLOBAL counts against GLOBAL capacities
+(per-shard capacity x shard count), which is optimistic under cross-shard
+skew — a shard-hot class can still drop rows at a rung the prediction
+cleared.  That is safe: the up-rule is driven by OBSERVED drops, so the
+controller simply climbs one more rung (or the ladder carries rungs with
+``shard_slack`` > 1, the per-shard rebalancing headroom of
+sharding/rules.shard_capacity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One rung of the capacity ladder — a full serve-capacity config.
+
+    ``exact_frac``/``invoke_frac`` are the capacity fractions baked into
+    the jitted step's shapes; ``shard_slack`` over-provisions per-shard
+    budgets against cross-shard class skew (sharding/rules.shard_capacity).
+    """
+
+    exact_frac: float
+    invoke_frac: float
+    shard_slack: float = 1.0
+
+    def cost(self, n_approx: int) -> float:
+        """Relative executed capacity (rows of compute per input row)."""
+        return (self.exact_frac + n_approx * self.invoke_frac) \
+            * self.shard_slack
+
+
+def default_ladder(cfg) -> tuple[OperatingPoint, ...]:
+    """A small ladder bracketing the static config's operating point.
+
+    Rungs are ordered by cost: half capacity (light mixes), the static
+    config itself, 1.5x headroom, and a full-capacity top rung that can
+    never drop a row — the controller's escape hatch for adversarial
+    mixes.  Capacity fractions saturate at 1.0 (a capacity past T never
+    fills).
+    """
+    a = cfg.approx
+    base = OperatingPoint(a.exact_frac, a.invoke_frac, a.shard_slack)
+    rungs = (
+        OperatingPoint(min(a.exact_frac * 0.5, 1.0),
+                       min(a.invoke_frac * 0.5, 1.0), a.shard_slack),
+        base,
+        OperatingPoint(min(a.exact_frac * 1.5, 1.0),
+                       min(a.invoke_frac * 1.5, 1.0), a.shard_slack),
+        OperatingPoint(1.0, 1.0, a.shard_slack),
+    )
+    # dedup (e.g. exact_frac=1.0 collapses rungs) preserving cost order
+    out: list[OperatingPoint] = []
+    for r in sorted(rungs, key=lambda r: r.cost(a.n_approx)):
+        if not out or r != out[-1]:
+            out.append(r)
+    return tuple(out)
+
+
+def point_caps(pt: OperatingPoint, t_local: int, n_approx: int,
+               n_shards: int = 1) -> np.ndarray:
+    """GLOBAL per-class capacity vector (n_approx + 1,) of a rung — the
+    same per-shard formula the dispatch paths use
+    (sharding/rules.shard_capacity), summed over shards."""
+    from repro.sharding.rules import shard_capacity
+    ec = shard_capacity(t_local, pt.exact_frac, slack=pt.shard_slack)
+    ic = shard_capacity(t_local, pt.invoke_frac, slack=pt.shard_slack)
+    return np.asarray([ec * n_shards] + [ic * n_shards] * n_approx, float)
+
+
+@dataclasses.dataclass
+class Switch:
+    """One ladder move, recorded for the trajectory."""
+
+    tick: int
+    from_index: int
+    to_index: int
+    drop_ema: float
+
+
+class CapacityController:
+    """Selects the active ladder rung from per-tick global invoke_stats.
+
+    ``caps_fn(point) -> (n+1,) global capacity vector`` tells the
+    controller what each rung would dispatch (servers build it from their
+    batch/mesh geometry via ``point_caps``).  ``observe`` consumes one
+    tick's stats (``class_counts``, ``dropped`` — layer-meaned values are
+    fine, the law is scale-free in t) and returns the rung index to use
+    for the NEXT tick.
+    """
+
+    def __init__(self, ladder: Sequence[OperatingPoint],
+                 caps_fn: Callable[[OperatingPoint], np.ndarray], *,
+                 drop_budget: float = 0.05, ema: float = 0.5,
+                 down_patience: int = 8, down_margin: float = 0.5,
+                 cooldown: int = 3, start: int | None = None):
+        assert len(ladder) >= 1
+        assert 0.0 < drop_budget < 1.0
+        self.ladder = tuple(ladder)
+        self.caps_fn = caps_fn
+        self.drop_budget = drop_budget
+        self.ema_alpha = ema
+        self.down_patience = down_patience
+        self.down_margin = down_margin
+        self.cooldown = cooldown
+        self.index = start if start is not None else 0
+        self.tick = 0
+        self.drop_ema: float | None = None
+        self.history: list[Switch] = []
+        self._down_ok = 0
+        self._last_switch = -10 ** 9
+        self._down_hold = down_patience   # current (backed-off) patience
+        self._last_down_tick = None       # tick of the latest down-switch
+
+    @property
+    def point(self) -> OperatingPoint:
+        return self.ladder[self.index]
+
+    def _predicted_drop_frac(self, counts: np.ndarray, index: int) -> float:
+        """Drop fraction the observed routed mix would suffer at a rung
+        (global counts vs global caps; optimistic under cross-shard skew,
+        see module docstring)."""
+        caps = np.asarray(self.caps_fn(self.ladder[index]), float)
+        t = float(counts.sum())
+        if t <= 0:
+            return 0.0
+        return float(np.maximum(counts - caps, 0.0).sum()) / t
+
+    def observe(self, stats) -> int:
+        """Consume one tick's stats dict; returns the rung for next tick.
+
+        ``stats`` needs ``class_counts`` (n+1,) and ``dropped`` (scalar);
+        extra keys are ignored so a server can pass its metric dict
+        straight through.
+        """
+        counts = np.asarray(stats["class_counts"], float)
+        dropped = float(np.asarray(stats["dropped"]))
+        t = counts.sum()
+        drop_frac = dropped / t if t > 0 else 0.0
+        a = self.ema_alpha
+        self.drop_ema = drop_frac if self.drop_ema is None \
+            else a * drop_frac + (1 - a) * self.drop_ema
+        self.tick += 1
+        if self.tick - self._last_switch <= self.cooldown:
+            return self.index
+
+        if self.drop_ema > self.drop_budget \
+                and self.index < len(self.ladder) - 1:
+            # violated: jump to the first rung predicted to meet budget
+            target = len(self.ladder) - 1
+            for j in range(self.index + 1, len(self.ladder)):
+                if self._predicted_drop_frac(counts, j) <= self.drop_budget:
+                    target = j
+                    break
+            self._switch(target)
+        elif self.index > 0 and self.drop_ema <= self.drop_budget \
+                and self._predicted_drop_frac(counts, self.index - 1) \
+                <= self.drop_budget * self.down_margin:
+            # the EMA gate matters when pinned at the TOP rung: with no
+            # rung left to climb, a violating mix must hold position, not
+            # drift down on the occasional light tick's prediction
+            self._down_ok += 1
+            if self._down_ok >= self._down_hold:
+                self._switch(self.index - 1)
+        else:
+            self._down_ok = 0
+        return self.index
+
+    def _switch(self, to_index: int):
+        if to_index > self.index and self._last_down_tick is not None \
+                and self.tick - self._last_down_tick \
+                <= 4 * (self.cooldown + 1):
+            # re-escalating right after a step-down: the prediction lied
+            # for this mix — back off future down attempts exponentially
+            self._down_hold = min(self._down_hold * 2, 1 << 10)
+        elif to_index < self.index:
+            self._last_down_tick = self.tick
+        self.history.append(Switch(self.tick, self.index, to_index,
+                                   float(self.drop_ema or 0.0)))
+        self.index = to_index
+        self._down_ok = 0
+        self._last_switch = self.tick
+        # the new rung changes the drop distribution; restart the EMA
+        self.drop_ema = None
+
+    def summary(self) -> dict:
+        """Trajectory record for server stats / bench CSVs."""
+        return {
+            "final_index": self.index,
+            "final_point": dataclasses.asdict(self.point),
+            "switches": [dataclasses.asdict(s) for s in self.history],
+            "drop_ema": self.drop_ema,
+            "ticks": self.tick,
+        }

@@ -144,7 +144,8 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
                   a_w2: jax.Array, a_b2: jax.Array, *,
                   exact_cap: int, invoke_cap: int, backend: str = "xla",
                   block_t: int = 128, interpret: bool = False,
-                  stats_axes: tuple = ()):
+                  stats_axes: tuple = (), row_mask: jax.Array | None = None,
+                  weights_prepadded: bool = False):
     """Full MCMA invocation pipeline over a flat row batch.
 
     x: (T, d); logits: (T, n_approx+1) router scores (class 0 = exact);
@@ -160,14 +161,28 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
     summed across shards, exact_frac/invocation over the global row count).
     Empty (the default) outside shard_map.
 
+    ``row_mask``: optional (T,) bool marking ACTIVE rows.  Inactive rows
+    (e.g. a decode server's free slots, fed token 0) are forced out of
+    every path: they take no class, consume no capacity slot, and are
+    excluded from every stat (t_total = active rows) — so ``invocation``/
+    ``exact_frac`` and the autotuner signal stay exact on partially-full
+    slot tables instead of being polluted by routed garbage.  None (the
+    default) treats every row as active and traces the exact same program
+    as before the mask existed.
+
+    ``weights_prepadded``: the a_* stacks are already in serving form
+    (kernels/ops.prepad_switched_weights — one zero pseudo-class appended,
+    feature dims lane-padded), so the Pallas path ships them to the kernel
+    with zero per-call copies and the XLA oracle slices logical views.
+
     Returns ``(y, invoke_stats)`` with y: (T, d_out) in the original row
     order and invoke_stats a dict of jnp scalars/vectors:
 
-      class_counts  (n+1,) routed rows per class (sums to T, global when
-                    stats_axes is set)
+      class_counts  (n+1,) routed ACTIVE rows per class (sums to t_total,
+                    global when stats_axes is set)
       dispatched    (n+1,) rows actually executed after capacity
       dropped       scalar, over-capacity rows (zero contribution)
-      exact_frac    scalar, class_counts[0] / T
+      exact_frac    scalar, class_counts[0] / t_total
       invocation    scalar, 1 - exact_frac (the paper's invocation rate)
       executed_rows scalar, rows of compute actually launched
       padding_rows  scalar, executed_rows - sum(dispatched) (capacity slack
@@ -175,32 +190,71 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
                     worst-case trailing tiles for Pallas)
     """
     t, _ = x.shape
-    n = a_w1.shape[0]
+    n = a_w1.shape[0] - (1 if weights_prepadded else 0)
+    # schema guard: the router always has n_approx+1 classes, so a stack
+    # whose leading dim disagrees (e.g. a pre-serving-form checkpoint fed
+    # through weights_prepadded=True, where the last REAL approximator
+    # would silently play the zero pseudo-class) fails loudly here
+    assert logits.shape[-1] == n + 1, (
+        f"router width {logits.shape[-1]} != n_approx + 1 = {n + 1}: "
+        f"approximator stack (leading dim {a_w1.shape[0]}, "
+        f"weights_prepadded={weights_prepadded}) does not match — "
+        "prepadded stacks must come from ops.prepad_switched_weights")
     cls = route(logits)
-    counts = jnp.bincount(cls, length=n + 1)
+    if row_mask is not None:
+        mask = row_mask.astype(bool)
+        # inactive rows: class 0 so they never claim an approximator rank;
+        # the exact gather below additionally excludes them via the mask,
+        # and the sentinel class n+1 keeps them out of class_counts.
+        cls = jnp.where(mask, cls, 0)
+        counts = jnp.bincount(jnp.where(mask, cls, n + 1),
+                              length=n + 2)[:n + 1]
+        exact_mask = (cls == 0) & mask
+        t_total = jnp.sum(mask.astype(jnp.int32))
+    else:
+        counts = jnp.bincount(cls, length=n + 1)
+        exact_mask = cls == 0
+        t_total = jnp.asarray(t, jnp.int32)
 
     # exact ("nC") rows: both backends share the capacity gather path
-    out = capacity_path(x, cls == 0, exact_cap, exact_fn)
+    out = capacity_path(x, exact_mask, exact_cap, exact_fn)
 
     if backend == "xla":
+        d_out = out.shape[-1]
         for i in range(n):
-            def approx_i(xb, i=i):
-                return apply_approximator(xb, a_w1[i], a_b1[i],
-                                          a_w2[i], a_b2[i])
-            out = out + capacity_path(x, cls == i + 1, invoke_cap, approx_i)
+            if weights_prepadded:
+                # logical views of the padded stacks; padded regions are
+                # exact zeros, so the sliced math is unchanged
+                d_in = x.shape[1]
+                def approx_i(xb, i=i):
+                    return apply_approximator(
+                        xb, a_w1[i, :d_in], a_b1[i],
+                        a_w2[i][:, :d_out], a_b2[i, :d_out])
+            else:
+                def approx_i(xb, i=i):
+                    return apply_approximator(xb, a_w1[i], a_b1[i],
+                                              a_w2[i], a_b2[i])
+            out = out + capacity_path(x, (cls == i + 1), invoke_cap,
+                                      approx_i)
         executed = jnp.asarray(exact_cap + n * invoke_cap, jnp.int32)
     elif backend == "pallas":
         # capacity first, then one grouped kernel launch over ALL rows:
-        # kept approx rows keep their class; exact + over-capacity rows are
-        # assigned a zero-weight pseudo-class n, whose tiles compute exact
-        # zeros (tanh(0)@0 + 0), so no post-mask is needed.
+        # kept approx rows keep their class; exact + over-capacity (and
+        # masked-inactive, already class 0) rows are assigned a zero-weight
+        # pseudo-class n, whose tiles compute exact zeros (tanh(0)@0 + 0),
+        # so no post-mask is needed.
         rank = _rank_in_class(cls, n + 1)
         kept = (cls > 0) & (rank < invoke_cap)
         eff = jnp.where(kept, cls - 1, n).astype(jnp.int32)
-        zcls = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])], 0)
-        out = out + ops.switched_apply(
-            x, eff, zcls(a_w1), zcls(a_b1), zcls(a_w2), zcls(a_b2),
-            block_t=block_t, interpret=interpret)
+        if weights_prepadded:
+            out = out + ops.switched_apply(
+                x, eff, a_w1, a_b1, a_w2, a_b2, block_t=block_t,
+                interpret=interpret, prepadded=True, d_out=out.shape[-1])
+        else:
+            zcls = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])], 0)
+            out = out + ops.switched_apply(
+                x, eff, zcls(a_w1), zcls(a_b1), zcls(a_w2), zcls(a_b2),
+                block_t=block_t, interpret=interpret)
         # the kernel launches the full static worst-case grid (including
         # trailing zero tiles past the occupied region), so that is what
         # executed_rows must count — n+1 classes including the pseudo-class
@@ -211,7 +265,6 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
 
     caps = jnp.asarray([exact_cap] + [invoke_cap] * n, counts.dtype)
     dispatched = jnp.minimum(counts, caps)
-    t_total = jnp.asarray(t, jnp.int32)
     if stats_axes:
         # inside shard_map: reduce to GLOBAL stats.  Each quantity is a sum
         # of per-shard terms, so psum of the local values equals the
@@ -221,13 +274,17 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
         counts = jax.lax.psum(counts, ax)
         dispatched = jax.lax.psum(dispatched, ax)
         executed = jax.lax.psum(executed, ax)
-    exact_frac = (counts[0] / t_total).astype(jnp.float32)
+    exact_frac = (counts[0] / jnp.maximum(t_total, 1)).astype(jnp.float32)
+    # zero active rows (possible under row_mask): report invocation 0, not
+    # the 1.0 that 1 - 0/1 would claim for a fully idle batch
+    invocation = jnp.where(t_total > 0, 1.0 - exact_frac, 0.0) \
+        .astype(jnp.float32)
     stats = {
         "class_counts": counts,
         "dispatched": dispatched,
         "dropped": jnp.sum(counts - dispatched),
         "exact_frac": exact_frac,
-        "invocation": (1.0 - exact_frac).astype(jnp.float32),
+        "invocation": invocation,
         "executed_rows": executed,
         "padding_rows": executed - jnp.sum(dispatched).astype(jnp.int32),
     }
@@ -241,15 +298,21 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
                           a_w2: jax.Array, a_b2: jax.Array, *,
                           exact_cap: int, invoke_cap: int,
                           backend: str = "xla", block_t: int = 128,
-                          interpret: bool = False, data_axes=None):
+                          interpret: bool = False, data_axes=None,
+                          row_mask: jax.Array | None = None,
+                          weights_prepadded: bool = False):
     """``mcma_dispatch`` shard_mapped over a mesh's data axes.
 
     x/logits are row-sharded over the data axes (specs from
     sharding/rules.mcma_dispatch_specs); the router/approximator/exact
     weights are replicated.  ``exact_cap``/``invoke_cap`` are PER-SHARD
-    capacities (each shard dispatches its local rows).  ``exact_fn`` takes
-    ``(exact_params, xb)`` so the exact weights ride through shard_map as
-    an explicit (replicated) argument rather than a closure.
+    capacities (each shard dispatches its local rows — derive them from a
+    global operating point with sharding/rules.shard_capacity).
+    ``exact_fn`` takes ``(exact_params, xb)`` so the exact weights ride
+    through shard_map as an explicit (replicated) argument rather than a
+    closure.  ``row_mask`` (optional, (T,) bool, row-sharded like x) marks
+    active rows; inactive rows are excluded from dispatch and from the
+    psum-reduced stats on every shard.
 
     Returns ``(y, invoke_stats)``: y row-sharded like x, invoke_stats
     psum-reduced to the global totals (replicated on every shard).
@@ -257,15 +320,21 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
     from repro.sharding.compat import shard_map_compat
     from repro.sharding.rules import dp_axes, mcma_dispatch_specs
     dp = tuple(data_axes) if data_axes is not None else dp_axes(mesh)
-    specs = mcma_dispatch_specs(mesh, data_axes=dp)
+    specs = mcma_dispatch_specs(mesh, data_axes=dp,
+                                with_mask=row_mask is not None)
 
-    def local(x_l, lg_l, ep, w1, b1, w2, b2):
+    def local(x_l, lg_l, ep, w1, b1, w2, b2, *m_l):
         return mcma_dispatch(
             x_l, lg_l, partial(exact_fn, ep), w1, b1, w2, b2,
             exact_cap=exact_cap, invoke_cap=invoke_cap, backend=backend,
-            block_t=block_t, interpret=interpret, stats_axes=dp)
+            block_t=block_t, interpret=interpret, stats_axes=dp,
+            row_mask=m_l[0] if m_l else None,
+            weights_prepadded=weights_prepadded)
 
     fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
                           out_specs=specs["out"],
                           axis_names=frozenset(dp), check=False)
-    return fn(x, logits, exact_params, a_w1, a_b1, a_w2, a_b2)
+    args = (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2)
+    if row_mask is not None:
+        args = args + (row_mask,)
+    return fn(*args)

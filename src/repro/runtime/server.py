@@ -38,15 +38,17 @@ class DecodeServer:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
                  max_len: int = 512, eos: int | None = None, greedy=True,
                  seed: int = 0, use_mcma_dispatch: bool = False,
-                 mesh=None):
+                 mesh=None, autotune=None, drop_budget: float = 0.05,
+                 autotune_kwargs: dict | None = None):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len, self.eos = batch, max_len, eos
         # use_mcma_dispatch: decode ticks run the ApproxFFN through the
         # MCMA Pallas weight-switch engine (runtime/dispatch.py) and the
         # server accumulates the invocation rate, weighting each tick by
-        # its active-slot count.  Caveat: the decode step classifies all
-        # ``batch`` rows, so free slots (fed token 0) still enter the
-        # router and can bias the rate on a mostly-idle slot table.
+        # its active-slot count.  Every tick passes the active-slot mask
+        # into the decode step, so free slots (fed token 0) are excluded
+        # from the router, the capacity dispatch, and every invoke stat —
+        # the rates are exact even on a mostly-idle slot table.
         self.use_mcma_dispatch = use_mcma_dispatch
         # mesh: distributed deployment.  Params/cache are sharded by the
         # declarative rules (sharding/rules.py) and every decode step is
@@ -56,13 +58,42 @@ class DecodeServer:
         # data-axis size must divide ``batch`` for the manual path to
         # engage.
         self.mesh = mesh
-        self.decode = jax.jit(
-            steps_lib.make_decode_step(cfg,
-                                       use_mcma_dispatch=use_mcma_dispatch,
-                                       with_stats=use_mcma_dispatch),
-            donate_argnums=(1,))
+        # autotune: online capacity adaptation (runtime/autotune.py).
+        # True -> the default ladder around cfg's static operating point;
+        # a sequence of OperatingPoints -> that ladder.  One decode step
+        # per rung is compiled lazily on first use; the controller picks
+        # the rung per tick from the served global invoke_stats, targeting
+        # ``drop_budget`` dropped-row fraction at minimum capacity.
+        self.controller = None
+        if autotune:
+            from repro.runtime import autotune as at
+            assert use_mcma_dispatch, \
+                "autotune consumes invoke_stats; needs use_mcma_dispatch"
+            ladder = at.default_ladder(cfg) if autotune is True \
+                else tuple(autotune)
+            shards = self._dp_shards()
+            assert batch % shards == 0, (batch, shards)
+            n = cfg.approx.n_approx
+            caps_fn = lambda pt: at.point_caps(pt, batch // shards, n,
+                                               n_shards=shards)
+            # cold-start at the configured static operating point when the
+            # ladder contains it (the controller then only MOVES once the
+            # served stats justify it), else at the cheapest rung
+            base = at.OperatingPoint(cfg.approx.exact_frac,
+                                     cfg.approx.invoke_frac,
+                                     cfg.approx.shard_slack)
+            kw = dict(autotune_kwargs or {})
+            if "start" not in kw and base in ladder:
+                kw["start"] = ladder.index(base)
+            self.controller = at.CapacityController(
+                ladder, caps_fn, drop_budget=drop_budget, **kw)
+        self._steps = {}             # ladder index -> jitted decode step
+        self.decode = self._make_step(None)
         self.invocation_sum = 0.0    # active-slot-weighted invocation sum
         self.active_sum = 0          # total active slots over all ticks
+        self.dropped_sum = 0.0       # layer-mean dropped rows over ticks
+        self.dispatched_sum = None   # (n+1,) layer-mean dispatched rows
+        self.routed_sum = None       # (n+1,) layer-mean routed rows
         self.cache = M.init_cache(cfg, batch, max_len)
         if mesh is not None:
             self.params = self._shard_params(params)
@@ -74,6 +105,31 @@ class DecodeServer:
         self.greedy = greedy
         self.ticks = 0
         self._fresh = None  # lazily-built pristine cache for slot resets
+
+    def _dp_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        from repro.sharding import rules as R
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return int(np.prod([sizes[a] for a in R.dp_axes(self.mesh)]))
+
+    def _make_step(self, point):
+        return jax.jit(
+            steps_lib.make_decode_step(
+                self.cfg, use_mcma_dispatch=self.use_mcma_dispatch,
+                with_stats=self.use_mcma_dispatch, operating_point=point),
+            donate_argnums=(1,))
+
+    def _active_step(self):
+        """The decode step for this tick: the controller's current ladder
+        rung when autotuning (compiled lazily per rung, then cached — a
+        switch is a dict lookup, never a retrace), else the static step."""
+        if self.controller is None:
+            return self.decode
+        idx = self.controller.index
+        if idx not in self._steps:
+            self._steps[idx] = self._make_step(self.controller.ladder[idx])
+        return self._steps[idx]
 
     def _named_shardings(self, specs):
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -93,7 +149,7 @@ class DecodeServer:
 
     def _decode(self, *args):
         with steps_lib.serve_mesh_context(self.mesh):
-            return self.decode(*args)
+            return self._active_step()(*args)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -131,12 +187,27 @@ class DecodeServer:
             return False
         toks = self._gather_tokens()
         if self.use_mcma_dispatch:
+            # active-slot mask: idle slots are excluded from the dispatch
+            # and its stats inside the step (the free-slot bias fix), so
+            # every metric below is exact for the occupied slots only
+            mask = jnp.asarray([s is not None for s in self.slots])
             logits, self.cache, m = self._decode(self.params, self.cache,
-                                                 jnp.asarray(toks))
+                                                 jnp.asarray(toks), mask)
             if "invocation" in m:
                 active = sum(s is not None for s in self.slots)
                 self.invocation_sum += float(m["invocation"]) * active
                 self.active_sum += active
+            if "dropped_rows" in m:
+                self.dropped_sum += float(m["dropped_rows"])
+                disp = np.asarray(m["dispatched"], float)
+                routed = np.asarray(m["class_counts"], float)
+                self.dispatched_sum = disp if self.dispatched_sum is None \
+                    else self.dispatched_sum + disp
+                self.routed_sum = routed if self.routed_sum is None \
+                    else self.routed_sum + routed
+                if self.controller is not None:
+                    self.controller.observe(
+                        {"class_counts": routed, "dropped": m["dropped_rows"]})
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(toks))
@@ -169,4 +240,20 @@ class DecodeServer:
         if self.use_mcma_dispatch:
             stats["invocation_rate"] = \
                 self.invocation_sum / max(self.active_sum, 1)
+            # the autotuner's objective, observable from server stats:
+            # global dropped rows and per-class routed/dispatched counts
+            # (layer-mean per tick, summed over ticks; mesh runs report
+            # psum-reduced global totals)
+            stats["dropped_rows"] = self.dropped_sum
+            if self.routed_sum is not None:
+                stats["routed_per_class"] = self.routed_sum.tolist()
+                stats["dispatched_per_class"] = self.dispatched_sum.tolist()
+                total = max(float(self.routed_sum.sum()), 1.0)
+                stats["dropped_frac"] = self.dropped_sum / total
+                # invocation actually SERVED (approx rows executed, not
+                # just routed) — what capacity autotuning maximizes
+                stats["served_invocation_rate"] = \
+                    float(self.dispatched_sum[1:].sum()) / total
+        if self.controller is not None:
+            stats["autotune"] = self.controller.summary()
         return stats

@@ -113,14 +113,29 @@ def serve_mesh_context(mesh):
 
 
 def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
-                     with_stats: bool = False):
+                     with_stats: bool = False, operating_point=None):
     """``use_mcma_dispatch`` swaps the serve-mode FFN engine to the MCMA
     Pallas dispatch; ``with_stats`` makes the step also return the
-    layer-meaned dispatch metrics (invocation rate etc.) per tick."""
+    layer-meaned dispatch metrics (invocation rate etc.) per tick.
+
+    ``operating_point`` (runtime/autotune.OperatingPoint) overrides the
+    config's serve capacity fractions — capacities are SHAPES, so each
+    ladder rung is its own compilation unit; the server precompiles one
+    step per rung and the autotuner switches between them (never
+    retraces a live one).
+
+    The returned step takes an optional trailing ``row_mask`` ((B,) bool
+    of ACTIVE slots); pass it on partially-full slot tables so idle rows
+    never bias the dispatch stats (the free-slot router-bias fix)."""
     if use_mcma_dispatch:
         cfg = mcma_serve_config(cfg)
+    if operating_point is not None:
+        pt = operating_point
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, exact_frac=pt.exact_frac,
+            invoke_frac=pt.invoke_frac, shard_slack=pt.shard_slack))
 
-    def decode_step(params, cache, inputs):
+    def decode_step(params, cache, inputs, row_mask=None):
         return M.decode(cfg, params, cache, inputs, serve=True,
-                        collect_metrics=with_stats)
+                        collect_metrics=with_stats, row_mask=row_mask)
     return decode_step

@@ -114,8 +114,11 @@ def _param_rule(mesh, path: str, arr, report) -> P:
         return P(None, "model" if _fits(shape[1], md) else None)
     # ApproxFFN: approximators + router are tiny (n x d x d_hidden); TP
     # sharding them only buys per-layer all-reduces of the (n, T, h)
-    # activations (§Perf C.2) — replicate instead.
-    if "approx/" in path and name in ("a_w1", "a_w2", "router"):
+    # activations (§Perf C.2) — replicate instead.  The stacks (and their
+    # biases, 2D since the serving-form prepad) must stay whole: the serve
+    # shard_map declares them replicated in approx_serve_specs.
+    if "approx/" in path and name in ("a_w1", "a_w2", "router",
+                                      "a_b1", "a_b2"):
         return P(*([None] * nd))
     # count leading stack dims: params under blocks/ carry 1 (uniform) or 2
     # (xlstm/hybrid inner) scan dims; detect by path prefix
@@ -186,25 +189,46 @@ def param_pspecs(mesh: Mesh, params) -> tuple[Any, ShardingReport]:
 # benches can build the exact same shardings the models use.
 # ---------------------------------------------------------------------------
 
-def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None) -> dict:
+def shard_capacity(t_local: int, frac: float, *, slack: float = 1.0) -> int:
+    """Per-shard capacity for a capacity fraction of a row-sharded batch.
+
+    The engine dispatches per data shard, so a class hot on ONE shard drops
+    rows even when another shard has slack.  ``slack`` is the rebalancing
+    hook: it over-provisions every shard's budget (slack > 1 trades
+    ``(slack - 1) * frac * t_local`` rows of padded compute per shard for
+    headroom against cross-shard skew; a capacity autotuner raises it when
+    drops persist at an operating point whose GLOBAL budget looks
+    sufficient).  ``slack=1.0`` reproduces the historic per-shard formula
+    exactly; the result is clamped to the shard's row count (capacity past
+    t_local can never fill).
+    """
+    return max(min(int(t_local * frac * slack), t_local), 1)
+
+
+def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None,
+                        with_mask: bool = False) -> dict:
     """Specs for ``runtime/dispatch.mcma_dispatch_sharded`` on flat (T, d)
     row batches: x/logits/y row-sharded over the data axes; exact params,
     router logits producer, and the stacked approximator weights
-    replicated; invoke_stats replicated out (psum-reduced inside)."""
+    replicated; invoke_stats replicated out (psum-reduced inside).
+    ``with_mask`` appends the (T,) active-row mask, row-sharded like x."""
     dp = tuple(data_axes) if data_axes is not None else _dp_axes(mesh)
     row = P(dp, None)
-    # in: (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2); P() prefixes
-    # cover arbitrary exact_params pytrees.
-    return {"in": (row, row, P(), P(None, None, None), P(None, None),
-                   P(None, None, None), P(None, None)),
-            "out": (row, P())}
+    # in: (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2[, row_mask]);
+    # P() prefixes cover arbitrary exact_params pytrees.
+    ins = (row, row, P(), P(None, None, None), P(None, None),
+           P(None, None, None), P(None, None))
+    if with_mask:
+        ins = ins + (P(dp),)
+    return {"in": ins, "out": (row, P())}
 
 
 def approx_serve_specs(mesh: Mesh, *, gated: bool) -> dict:
     """Specs for the manual ApproxFFN serve path (models/approx_ffn.py):
     exact FFN weights Megatron-TP over "model" + FSDP over the data axes;
     router/approximators replicated (tiny — TP would only buy per-layer
-    all-reduces, §Perf C.2); tokens batch-sharded; stats replicated."""
+    all-reduces, §Perf C.2); tokens batch-sharded with their (B,)
+    active-slot mask; stats replicated."""
     dp = _dp_axes(mesh)
     ffn = {"w_in": P(dp, "model"), "w_out": P("model", dp)}
     if gated:
@@ -212,7 +236,7 @@ def approx_serve_specs(mesh: Mesh, *, gated: bool) -> dict:
     weights = {"ffn": ffn, "router": P(None, None),
                "a_w1": P(None, None, None), "a_b1": P(None, None),
                "a_w2": P(None, None, None), "a_b2": P(None, None)}
-    return {"in": (weights, P(dp, None, None)),
+    return {"in": (weights, P(dp, None, None), P(dp)),
             "out": (P(dp, None, None), P())}
 
 
