@@ -6,7 +6,8 @@ PY ?= python
 MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
 .PHONY: test test-tier1 test-multidevice bench-quick bench-dispatch \
-	bench-dispatch-sharded bench-autotune deps
+	bench-dispatch-sharded bench-autotune bench-decode-tick \
+	bench-ci-dispatch deps
 
 deps:
 	$(PY) -m pip install "jax[cpu]" pytest hypothesis
@@ -17,11 +18,11 @@ test-tier1:
 test:
 	$(PY) -m pytest -q
 
-# mirrors the CI "multidevice" leg: shard_map tests + the sharded
-# dispatch microbench on 8 virtual CPU devices
+# mirrors the CI "multidevice" leg: shard_map tests (incl. the tick-scope
+# mesh decode) + the sharded dispatch microbench on 8 virtual CPU devices
 test-multidevice:
-	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py
-	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune
+	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick
 
 bench-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only kernels,dispatch
@@ -33,7 +34,18 @@ bench-dispatch:
 bench-dispatch-sharded:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --devices 8
 
-# capacity-autotuning trajectory leg (CI runs this and uploads the CSV):
-# pallas-vs-xla divergence gated at EVERY visited operating point
+# capacity-autotuning trajectory leg: pallas-vs-xla divergence gated at
+# EVERY visited operating point
 bench-autotune:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune
+
+# tick-level dispatch planning: a full L-layer decode tick at
+# route_scope=layer vs tick (asserts 1 class-sort per tick under tick
+# scope; oracle-gated at both scopes)
+bench-decode-tick:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --decode-tick
+
+# the CI dispatch.csv artifact leg: base shapes + autotune trajectory +
+# decode-tick rows in ONE csv (separate invocations would overwrite it)
+bench-ci-dispatch:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick

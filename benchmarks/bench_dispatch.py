@@ -30,8 +30,18 @@ under switched capacities.  The leg itself asserts the controller ends
 under the drop budget with strictly more served invocation than the
 static starting point.
 
+``--decode-tick`` adds the tick-level dispatch-planning microbench: a
+full L-layer decode tick through the REAL model decode step in
+``route_scope="layer"`` (route -> class-sort -> dispatch inside every
+layer of the scan) vs ``route_scope="tick"`` (ONE DispatchPlan above the
+scan, every layer a weight-switch launch on already-sorted rows).  Each
+row records the per-tick wall time plus the DYNAMIC sort/scatter op
+counts per tick (jaxpr walk, scan-length aware) — the leg asserts tick
+scope runs strictly fewer sorts (1 plan vs L) and gates the Pallas
+backend against the XLA oracle at both scopes.
+
 Writes benchmarks/out/dispatch.csv (modes: single | sharded |
-shard-local | autotune).
+shard-local | autotune | decode-tick).
 """
 from __future__ import annotations
 
@@ -222,8 +232,110 @@ def _autotune_leg(rows, *, quick, devices, drop_budget=0.05):
         "autotune must serve strictly more approximator rows than static"
 
 
+def _sub_jaxprs(eqn):
+    """All jaxpr-valued params of an eqn (pjit/scan/remat/pallas bodies)."""
+    out = []
+    for v in eqn.params.values():
+        for u in (v if isinstance(v, (list, tuple)) else (v,)):
+            if hasattr(u, "jaxpr") and hasattr(u, "consts"):  # ClosedJaxpr
+                out.append(u.jaxpr)
+            elif hasattr(u, "eqns"):                          # Jaxpr
+                out.append(u)
+    return out
+
+
+def _count_dynamic_ops(jaxpr, names) -> int:
+    """How many times primitives in ``names`` EXECUTE per call: a scan
+    body's ops count once per trip (static jaxpr counts would hide the
+    per-layer cost the tick plan amortizes)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        mult = eqn.params.get("length", 1) \
+            if eqn.primitive.name == "scan" else 1
+        if eqn.primitive.name in names:
+            total += 1
+        for sub in _sub_jaxprs(eqn):
+            total += mult * _count_dynamic_ops(sub, names)
+    return total
+
+
+def _decode_tick_leg(rows, *, quick):
+    """Full decode tick, route_scope=layer vs tick, oracle-gated."""
+    import dataclasses
+    from repro.configs.registry import get_config, smoke_config
+    from repro.models import model as M
+    from repro.runtime import steps as S
+
+    on_cpu = jax.default_backend() != "tpu"
+    n_layers, batch, iters = (4, 64, 3) if quick else (8, 128, 10)
+    base = smoke_config(get_config("internlm2-1.8b"))
+    base = dataclasses.replace(base, n_layers=n_layers)
+
+    def cfg_with(scope, backend):
+        return dataclasses.replace(base, approx=dataclasses.replace(
+            base.approx, enable=True, backend=backend,
+            interpret=on_cpu and backend == "pallas", block_t=32,
+            route_scope=scope))
+
+    params = M.init_model(jax.random.PRNGKey(0), cfg_with("layer", "xla"))
+    cache = M.init_cache(base, batch, 64)
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(1, base.vocab, (batch, 1)),
+        jnp.int32)
+    mask = jnp.ones((batch,), bool)
+
+    sorts = {}
+    for scope in ("layer", "tick"):
+        outs = {}
+        for backend in ("xla", "pallas"):
+            cfg = cfg_with(scope, backend)
+            step = jax.jit(S.make_decode_step(cfg, with_stats=True))
+            lg, _, m = step(params, cache, toks, mask)
+            jax.block_until_ready(lg)                # compile off the clock
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                lg, _, m = step(params, cache, toks, mask)
+            jax.block_until_ready(lg)
+            ms = (time.perf_counter() - t0) / iters * 1e3
+            outs[backend] = np.asarray(lg)
+            jaxpr = jax.make_jaxpr(S.make_decode_step(cfg, with_stats=True))(
+                params, cache, toks, mask).jaxpr
+            n_sorts = _count_dynamic_ops(jaxpr, {"sort"})
+            n_scatter = _count_dynamic_ops(
+                jaxpr, {"scatter", "scatter-add"})
+            sorts[(scope, backend)] = n_sorts
+            rows.append({
+                "T": batch, "n_approx": base.approx.n_approx,
+                "d_model": base.d_model, "backend": backend,
+                "block_t": 32, "interpret": on_cpu and backend == "pallas",
+                "devices": 1, "mode": "decode-tick",
+                "route_scope": scope, "layers": n_layers,
+                "ms_per_tick": round(ms, 3),
+                "sorts_per_tick": n_sorts,
+                "scatters_per_tick": n_scatter,
+                "invocation": round(float(m["invocation"]), 4),
+                "exact_frac": round(float(m["exact_frac"]), 4),
+            })
+            print(f"decode-tick L={n_layers} B={batch} scope={scope:5s} "
+                  f"{backend:6s} {ms:9.2f} ms/tick sorts={n_sorts} "
+                  f"scatters={n_scatter}", flush=True)
+        # oracle gate at this scope, same as the other legs
+        err = float(np.abs(outs["pallas"] - outs["xla"]).max())
+        for row in rows[-2:]:
+            row["max_abs_err_vs_xla"] = round(err, 7) \
+                if row["backend"] == "pallas" else 0.0
+        assert err < 1e-4, f"decode-tick divergence at scope={scope}: {err}"
+    # the leg's acceptance gate: one class-sort per tick, not one per
+    # layer.  Only the Pallas executor sorts (the plan builds the sort
+    # for it; the XLA oracle re-derives per-class slots from cls/rank and
+    # honestly records 0 at both scopes — no dead argsorts in the CSV).
+    assert sorts[("layer", "pallas")] == n_layers, sorts
+    assert sorts[("tick", "pallas")] == 1, sorts
+    assert sorts[("tick", "xla")] <= sorts[("layer", "xla")], sorts
+
+
 def main(quick: bool = False, iters: int | None = None, devices: int = 1,
-         autotune: bool = False):
+         autotune: bool = False, decode_tick: bool = False):
     os.makedirs(OUT, exist_ok=True)
     on_cpu = jax.default_backend() != "tpu"
     if devices > 1 and len(jax.devices()) < devices:
@@ -311,6 +423,8 @@ def main(quick: bool = False, iters: int | None = None, devices: int = 1,
 
     if autotune:
         _autotune_leg(rows, quick=quick, devices=devices)
+    if decode_tick:
+        _decode_tick_leg(rows, quick=quick)
 
     # column union across modes (the autotune rows add trajectory columns)
     fields = list(rows[0].keys())
@@ -335,6 +449,12 @@ if __name__ == "__main__":
                     help="add the capacity-autotuning trajectory leg "
                          "(controller over a skewed phase-shifting mix; "
                          "pallas-vs-xla gated at every operating point)")
+    ap.add_argument("--decode-tick", action="store_true",
+                    help="add the tick-level dispatch-planning leg: a full "
+                         "L-layer decode tick at route_scope=layer vs tick "
+                         "(per-tick wall + dynamic sort/scatter op counts; "
+                         "asserts 1 class-sort per tick under tick scope "
+                         "and pallas==xla at both scopes)")
     args = ap.parse_args()
     if args.devices > 1 and "host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -343,4 +463,4 @@ if __name__ == "__main__":
             os.environ.get("XLA_FLAGS", "") +
             f" --xla_force_host_platform_device_count={args.devices}").strip()
     main(quick=args.quick, iters=args.iters, devices=args.devices,
-         autotune=args.autotune)
+         autotune=args.autotune, decode_tick=args.decode_tick)

@@ -36,6 +36,13 @@ class ApproxConfig:
     # per-class capacity dispatch (the test oracle); "pallas" = the
     # scalar-prefetch weight-switch kernel (kernels/switched_mlp.py).
     backend: str = "xla"
+    # routing granularity at decode (runtime/dispatch.py plan/execute):
+    # "layer" = per-layer route -> sort -> dispatch (today's semantics, the
+    # only scope the train path uses); "tick" = the paper's one decision
+    # per input datum — ONE DispatchPlan per decode tick from the model's
+    # tick-router head, reused by every layer of the scan (each layer is
+    # just a weight-switch kernel launch on already-sorted rows).
+    route_scope: str = "layer"
     block_t: int = 128           # Pallas dispatch row-tile size
     interpret: bool = False      # Pallas interpreter mode (CPU/CI runs)
 

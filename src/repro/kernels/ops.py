@@ -116,7 +116,8 @@ def class_sort_plan(cls: jax.Array, n: int, block_t: int):
 def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
                    w2: jax.Array, b2: jax.Array, *, block_t: int = 256,
                    interpret: bool = False, prepadded: bool = False,
-                   d_out: int | None = None) -> jax.Array:
+                   d_out: int | None = None,
+                   sort_plan=None) -> jax.Array:
     """MCMA dispatch: row t is evaluated under approximator cls[t].
 
     x: (T, d_in); cls: (T,) int32 in [0, n).  Rows are grouped by class into
@@ -128,6 +129,14 @@ def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
     appended) so no per-call weight copies happen on the hot path;
     ``d_out`` then gives the LOGICAL output width to slice back to (the
     padded stacks cannot tell it apart from its padding).
+
+    ``sort_plan`` is an optional precomputed ``(order, pos, tile_cls)``
+    triple from ``class_sort_plan(cls, n, block_t)`` — a caller that
+    reuses one routing decision across many weight stacks (the tick-scope
+    DispatchPlan, runtime/dispatch.py) pays the argsort/bincount once and
+    every call here is just scatter -> kernel -> gather.  ``cls`` is
+    ignored when it is given; it MUST have been built with the same
+    ``block_t`` and class count.
     """
     t, d_in = x.shape
     n = w1.shape[0]
@@ -145,7 +154,11 @@ def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
         b1p = jnp.pad(b1, ((0, 0), (0, d_h_p - d_h)))[:, None, :]
         w2p = jnp.pad(w2, ((0, 0), (0, d_h_p - d_h), (0, d_out_p - d_out)))
         b2p = jnp.pad(b2, ((0, 0), (0, d_out_p - d_out)))[:, None, :]
-    order, pos, tile_cls, _, t_pad = class_sort_plan(cls, n, block_t)
+    if sort_plan is None:
+        order, pos, tile_cls, _, t_pad = class_sort_plan(cls, n, block_t)
+    else:
+        order, pos, tile_cls = sort_plan
+        t_pad = tile_cls.shape[0] * block_t
 
     xp = jnp.zeros((t_pad, d_in_p), x.dtype).at[pos, :d_in].set(x[order])
 

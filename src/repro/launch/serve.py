@@ -32,6 +32,12 @@ def main(argv=None):
     ap.add_argument("--drop-budget", type=float, default=0.05,
                     help="autotune target: max fraction of routed rows "
                          "dropped over capacity (default 0.05)")
+    ap.add_argument("--route-scope", choices=("layer", "tick"), default=None,
+                    help="MCMA routing granularity at decode: 'tick' makes "
+                         "ONE dispatch plan per tick (tick-router head, "
+                         "reused by every layer of the scan — the paper's "
+                         "per-input decision); 'layer' routes per layer "
+                         "(default: the config's route_scope)")
     ap.add_argument("--data", type=int, default=0,
                     help="mesh data-axis size (0 = no mesh, single device)")
     ap.add_argument("--model", type=int, default=1,
@@ -68,7 +74,8 @@ def main(argv=None):
     server = DecodeServer(cfg, params, batch=args.batch, max_len=args.max_len,
                           use_mcma_dispatch=args.mcma_dispatch, mesh=mesh,
                           autotune=args.autotune,
-                          drop_budget=args.drop_budget)
+                          drop_budget=args.drop_budget,
+                          route_scope=args.route_scope)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,

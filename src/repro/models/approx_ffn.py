@@ -118,12 +118,98 @@ def approx_ffn_train(cfg: ModelConfig, p, x: jax.Array):
     aux = {"loss": a.router_weight * router_loss + a.distill_weight * distill,
            "invocation": jnp.mean(safe.astype(jnp.float32)),
            "router_acc": jnp.mean((jnp.argmax(logits, -1) == labels)
-                                  .astype(jnp.float32))}
+                                  .astype(jnp.float32)),
+           # per-token one-hot competitive labels — the model (model.py)
+           # sums these over the layer scan to train the TICK router head
+           # on the across-layer modal label (route_scope="tick")
+           "label_votes": jax.nn.one_hot(labels, a.n_approx + 1,
+                                         dtype=jnp.float32)}
     return exact.reshape(b, s, d), aux
 
 
+def _manual_serve_ctx(cfg: ModelConfig, b: int):
+    """(mesh, dp, n_data_shards) when the shard_map-native serve path
+    engages for a batch of ``b`` rows under the active distributed trace
+    context, else (None, (), 1).  The SAME predicate gates plan
+    construction (make_tick_plan) and per-layer consumption, so a tick
+    plan is always built with exactly the sharding its consumers expect."""
+    from repro.sharding.activations import manual_dp_context
+    mesh, dp = manual_dp_context()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None, (), 1
+    import numpy as _np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    g = int(_np.prod([sizes[ax] for ax in dp]))
+    if b % g == 0 and cfg.d_ff % sizes["model"] == 0:
+        return mesh, dp, g
+    return None, (), 1
+
+
+def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
+                   row_mask: jax.Array | None = None):
+    """One DispatchPlan per decode tick (route_scope="tick").
+
+    Classifies with the model's TICK-router head (``params["tick_router"]``,
+    co-trained on the across-layer competitive labels) on the pre-layer
+    hidden state ``x`` (B, S=1, d), runs capacity + class-sort once, and
+    returns the plan every layer of the decode scan executes against.
+    Under a distributed trace context the plan is built per data shard
+    inside a shard_map — the identical sharding the per-layer manual serve
+    path consumes it with — and its count fields are psum-reduced to
+    global totals, so the autotuner reads ONE exact observation per tick.
+    """
+    from repro.runtime.dispatch import make_dispatch_plan
+    from repro.sharding.rules import shard_capacity
+    a = cfg.approx
+    b, s, d = x.shape
+    t = b * s
+    assert "tick_router" in params, (
+        "route_scope='tick' needs the tick-router head, but these params "
+        "have none — they predate the head (init_model now adds "
+        "'tick_router' whenever approx.enable); re-init or serve with "
+        "route_scope='layer'")
+    router = params["tick_router"]
+    mesh, dp, g = _manual_serve_ctx(cfg, b)
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.compat import shard_map_compat
+        from repro.sharding.rules import dispatch_plan_specs
+        tl = t // g
+        ec = shard_capacity(tl, a.exact_frac, slack=a.shard_slack)
+        ic = shard_capacity(tl, a.invoke_frac, slack=a.shard_slack)
+        if row_mask is None:
+            row_mask = jnp.ones((b,), bool)
+
+        def local(rt, x_l, m_l):
+            bl, sl, _ = x_l.shape
+            xt = x_l.reshape(bl * sl, d)
+            lg = jnp.dot(xt, rt.astype(xt.dtype)).astype(jnp.float32)
+            return make_dispatch_plan(
+                lg, jnp.repeat(m_l.astype(bool), sl), exact_cap=ec,
+                invoke_cap=ic, backend=a.backend, block_t=a.block_t,
+                stats_axes=dp)
+
+        fn = shard_map_compat(
+            local, mesh=mesh,
+            in_specs=(P(None, None), P(dp, None, None), P(dp)),
+            out_specs=dispatch_plan_specs(
+                mesh, data_axes=dp, n_approx=a.n_approx, exact_cap=ec,
+                invoke_cap=ic, block_t=a.block_t, backend=a.backend),
+            axis_names=frozenset(tuple(dp) + ("model",)), check=False)
+        return fn(router, x, row_mask)
+
+    xt = x.reshape(t, d)
+    logits = jnp.dot(xt, router.astype(xt.dtype)).astype(jnp.float32)
+    rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
+    return make_dispatch_plan(
+        logits, rm,
+        exact_cap=shard_capacity(t, a.exact_frac, slack=a.shard_slack),
+        invoke_cap=shard_capacity(t, a.invoke_frac, slack=a.shard_slack),
+        backend=a.backend, block_t=a.block_t)
+
+
 def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
-                     row_mask: jax.Array | None = None):
+                     row_mask: jax.Array | None = None, plan=None):
     """Serving path with capacity dispatch.  x: (B, S, d) -> (out, aux).
 
     Exact FFN runs on ``exact_frac``·T tokens only — the paper's invocation
@@ -135,6 +221,12 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
     and from every invoke stat, so invocation/exact_frac (and any capacity
     autotuner reading them) stay exact on partially-full slot tables.
 
+    ``plan`` (optional, a runtime/dispatch.DispatchPlan): tick-scope
+    routing — the decision was made ONCE above the layer scan
+    (make_tick_plan) and this layer only executes against it; no router
+    matmul, sort, or stats collective runs here, and ``row_mask`` is
+    ignored (the plan already embeds it).
+
     The engine is ``runtime/dispatch.mcma_dispatch`` (classify -> capacity
     -> class-sort -> weight-switch kernel / XLA oracle -> exact -> scatter);
     ``cfg.approx.backend`` picks the backend.  Under a distributed mesh the
@@ -143,31 +235,34 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
     token-sharded dim would force the partitioner to replicate tokens, so
     each data shard ranks/gathers only its own tokens — §Perf B/C).
     """
-    from repro.runtime.dispatch import mcma_dispatch
-    from repro.sharding.activations import manual_dp_context
+    from repro.runtime.dispatch import (execute_dispatch, mcma_dispatch,
+                                        plan_invoke_stats)
     from repro.sharding.rules import shard_capacity
     a = cfg.approx
     b, s, d = x.shape
     t = b * s
-    mesh, dp = manual_dp_context()
-    if mesh is not None and "model" in mesh.axis_names:
-        import numpy as _np
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        g = int(_np.prod([sizes[ax] for ax in dp]))
-        if b % g == 0 and cfg.d_ff % sizes["model"] == 0:
-            return _approx_serve_manual(cfg, p, x, mesh, dp,
-                                        row_mask=row_mask)
+    mesh, dp, _ = _manual_serve_ctx(cfg, b)
+    if mesh is not None:
+        return _approx_serve_manual(cfg, p, x, mesh, dp,
+                                    row_mask=row_mask, plan=plan)
 
-    xt = x.reshape(t, d)
-    rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
-    logits = jnp.dot(xt, p["router"].astype(x.dtype)).astype(jnp.float32)
-    out, stats = mcma_dispatch(
-        xt, logits, lambda xb: ffn_fwd(cfg, p["ffn"], xb),
-        p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"],
-        exact_cap=shard_capacity(t, a.exact_frac, slack=a.shard_slack),
-        invoke_cap=shard_capacity(t, a.invoke_frac, slack=a.shard_slack),
-        backend=a.backend, block_t=a.block_t, interpret=a.interpret,
-        row_mask=rm, weights_prepadded=True)
+    if plan is not None:
+        out = execute_dispatch(
+            plan, x.reshape(t, d), lambda xb: ffn_fwd(cfg, p["ffn"], xb),
+            p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"],
+            interpret=a.interpret, weights_prepadded=True)
+        stats = plan_invoke_stats(plan)
+    else:
+        xt = x.reshape(t, d)
+        rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
+        logits = jnp.dot(xt, p["router"].astype(x.dtype)).astype(jnp.float32)
+        out, stats = mcma_dispatch(
+            xt, logits, lambda xb: ffn_fwd(cfg, p["ffn"], xb),
+            p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"],
+            exact_cap=shard_capacity(t, a.exact_frac, slack=a.shard_slack),
+            invoke_cap=shard_capacity(t, a.invoke_frac, slack=a.shard_slack),
+            backend=a.backend, block_t=a.block_t, interpret=a.interpret,
+            row_mask=rm, weights_prepadded=True)
 
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
@@ -176,7 +271,8 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
     return out.reshape(b, s, d), aux
 
 
-def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None):
+def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
+                         plan=None):
     """Shard_map-native serve dispatch: the SAME ``mcma_dispatch`` engine
     as the single-device path, run per data shard (each shard classifies /
     capacities / class-sorts / weight-switches its OWN tokens — no
@@ -187,22 +283,24 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None):
     axes so every shard reports the global totals.  Per-shard capacities
     come from sharding/rules.shard_capacity (``cfg.approx.shard_slack``
     over-provisions them against cross-shard class skew).
+
+    ``plan`` (tick scope): the DispatchPlan was built per data shard by
+    ``make_tick_plan`` under the SAME row sharding this region re-enters,
+    so each shard executes its local rows against its local plan fields;
+    the plan's count fields are already psum-reduced global totals, so
+    the stats come straight off the plan with no collective here.
     """
-    from repro.runtime.dispatch import mcma_dispatch
+    from repro.runtime.dispatch import (execute_dispatch, mcma_dispatch,
+                                        plan_invoke_stats)
     from repro.sharding.compat import shard_map_compat
     from repro.sharding.rules import approx_serve_specs, shard_capacity
     a = cfg.approx
     b, s, d = x.shape
     axes = tuple(dp) + ("model",)
-    specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"])
-    if row_mask is None:
-        row_mask = jnp.ones((b,), bool)
+    weights = {**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
+                                    "a_b2")}, "ffn": p["ffn"]}
 
-    def local(p_loc, x_loc, m_loc):
-        bl, sl, _ = x_loc.shape
-        tl = bl * sl
-        xt = x_loc.reshape(tl, d)
-        rm = jnp.repeat(m_loc.astype(bool), sl)
+    def tp_exact_fn(p_loc):
         # FSDP unshard-on-use of the exact FFN's TP slices
         w_in = jax.lax.all_gather(p_loc["ffn"]["w_in"], dp, axis=0, tiled=True)
         w_out = jax.lax.all_gather(p_loc["ffn"]["w_out"], dp, axis=1, tiled=True)
@@ -218,25 +316,53 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None):
             else:
                 h = jax.nn.silu(h)
             return jax.lax.psum(jnp.dot(h, w_out.astype(h.dtype)), "model")
+        return exact_fn
 
-        logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype)) \
-            .astype(jnp.float32)
-        out, stats = mcma_dispatch(
-            xt, logits, exact_fn,
-            p_loc["a_w1"], p_loc["a_b1"], p_loc["a_w2"], p_loc["a_b2"],
-            exact_cap=shard_capacity(tl, a.exact_frac, slack=a.shard_slack),
-            invoke_cap=shard_capacity(tl, a.invoke_frac,
-                                      slack=a.shard_slack),
-            backend=a.backend, block_t=a.block_t, interpret=a.interpret,
-            stats_axes=dp, row_mask=rm, weights_prepadded=True)
-        return out.reshape(bl, sl, d), stats
+    if plan is not None:
+        specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"],
+                                   plan=plan)
 
-    fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
-                          out_specs=specs["out"],
-                          axis_names=frozenset(axes), check=False)
-    out, stats = fn({**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
-                                          "a_b2")}, "ffn": p["ffn"]}, x,
-                    row_mask)
+        def local_plan(p_loc, x_loc, plan_loc):
+            bl, sl, _ = x_loc.shape
+            xt = x_loc.reshape(bl * sl, d)
+            out = execute_dispatch(
+                plan_loc, xt, tp_exact_fn(p_loc),
+                p_loc["a_w1"], p_loc["a_b1"], p_loc["a_w2"], p_loc["a_b2"],
+                interpret=a.interpret, weights_prepadded=True)
+            return out.reshape(bl, sl, d)
+
+        fn = shard_map_compat(local_plan, mesh=mesh, in_specs=specs["in"],
+                              out_specs=specs["out"],
+                              axis_names=frozenset(axes), check=False)
+        out = fn(weights, x, plan)
+        stats = plan_invoke_stats(plan)
+    else:
+        specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"])
+        if row_mask is None:
+            row_mask = jnp.ones((b,), bool)
+
+        def local(p_loc, x_loc, m_loc):
+            bl, sl, _ = x_loc.shape
+            tl = bl * sl
+            xt = x_loc.reshape(tl, d)
+            rm = jnp.repeat(m_loc.astype(bool), sl)
+            logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype)) \
+                .astype(jnp.float32)
+            out, stats = mcma_dispatch(
+                xt, logits, tp_exact_fn(p_loc),
+                p_loc["a_w1"], p_loc["a_b1"], p_loc["a_w2"], p_loc["a_b2"],
+                exact_cap=shard_capacity(tl, a.exact_frac,
+                                         slack=a.shard_slack),
+                invoke_cap=shard_capacity(tl, a.invoke_frac,
+                                          slack=a.shard_slack),
+                backend=a.backend, block_t=a.block_t, interpret=a.interpret,
+                stats_axes=dp, row_mask=rm, weights_prepadded=True)
+            return out.reshape(bl, sl, d), stats
+
+        fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
+                              out_specs=specs["out"],
+                              axis_names=frozenset(axes), check=False)
+        out, stats = fn(weights, x, row_mask)
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
            "router_acc": jnp.zeros((), jnp.float32),
@@ -245,7 +371,7 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None):
 
 
 def approx_ffn_fwd(cfg: ModelConfig, p, x: jax.Array, *, serve: bool = False,
-                   row_mask: jax.Array | None = None):
+                   row_mask: jax.Array | None = None, plan=None):
     if serve:
-        return approx_ffn_serve(cfg, p, x, row_mask=row_mask)
+        return approx_ffn_serve(cfg, p, x, row_mask=row_mask, plan=plan)
     return approx_ffn_train(cfg, p, x)

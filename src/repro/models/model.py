@@ -54,33 +54,42 @@ def _init_dense_block(key, cfg: ModelConfig):
 
 
 def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False,
-                 row_mask=None):
-    """One transformer block.  Returns (x, new_cache, aux_loss, aux_metrics)."""
+                 row_mask=None, dispatch_plan=None):
+    """One transformer block.  Returns (x, new_cache, aux_loss, aux_metrics).
+
+    ``dispatch_plan`` (serve + route_scope="tick"): the per-tick
+    DispatchPlan built above the layer scan — this block's ApproxFFN
+    executes against it instead of routing its own tokens."""
     h, new_cache = L.attention_fwd(cfg, p["attn"], L.norm_fwd(cfg, p["ln1"], x),
                                    positions, cache)
     aux = jnp.zeros((), jnp.float32)
     metrics = {}
     if cfg.parallel_block:
         # stablelm-2 style: FFN in parallel with attention, one residual
-        f = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln1"], x), serve, row_mask)
+        f = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln1"], x), serve, row_mask,
+                      dispatch_plan)
         f, aux, metrics = f
         x = x + h + f
     else:
         x = x + h
         f, aux, metrics = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln2"], x),
-                                    serve, row_mask)
+                                    serve, row_mask, dispatch_plan)
         x = x + f
     return x, new_cache, aux, metrics
 
 
-def _ffn_part(cfg: ModelConfig, p, xn, serve, row_mask=None):
+def _ffn_part(cfg: ModelConfig, p, xn, serve, row_mask=None,
+              dispatch_plan=None):
     if cfg.moe.n_experts:
         y, aux = moe.moe_fwd(cfg, p["moe"], xn)
         return y, aux, {}
     if cfg.approx.enable:
         y, a = approx_ffn_fwd(cfg, p["approx"], xn, serve=serve,
-                              row_mask=row_mask)
+                              row_mask=row_mask, plan=dispatch_plan)
         m = {"invocation": a["invocation"], "router_acc": a["router_acc"]}
+        if "label_votes" in a:  # train path: per-token competitive labels,
+            # summed over the layer scan to supervise the tick-router head
+            m["_label_votes"] = a["label_votes"]
         st = a.get("invoke_stats")
         if st is not None:  # serve-mode dispatch engine reports these
             total = jnp.maximum(jnp.sum(st["class_counts"]), 1) \
@@ -187,6 +196,16 @@ def init_model(key: jax.Array, cfg: ModelConfig):
         # ONE shared attention+FFN block (Zamba2), applied per group
         params["shared"] = _init_dense_block(ks, dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, n_experts=0)))
+    if cfg.approx.enable and not cfg.moe.n_experts \
+            and topo.kind in ("uniform", "hybrid"):
+        # tick-router head (route_scope="tick"): ONE (d, n+1) classifier on
+        # the pre-layer hidden state, co-trained on the competitive labels
+        # aggregated across layers — the paper's one decision per input,
+        # made once per decode tick and reused by every layer of the scan
+        params["tick_router"] = jax.random.normal(
+            jax.random.fold_in(ke, 1),
+            (cfg.d_model, cfg.approx.n_approx + 1),
+            cfg.pdtype) * cfg.d_model ** -0.5
     return params
 
 
@@ -211,16 +230,26 @@ def forward(cfg: ModelConfig, params, inputs: jax.Array, *,
     aux_total = jnp.zeros((), jnp.float32)
     metrics: dict[str, jax.Array] = {}
     cache = None
+    # tick-router co-training: accumulate every layer's competitive labels
+    # (one-hot votes) through the scan carry; after the scan the TICK
+    # router head trains on the across-layer modal label per token
+    train_tick = ("tick_router" in params and not serve
+                  and cfg.approx.enable and not cfg.moe.n_experts)
+    x0 = x
+    votes0 = jnp.zeros((b * s, cfg.approx.n_approx + 1), jnp.float32)
 
     if topo.kind == "uniform":
-        def body(x, blk):
+        def body(carry, blk):
+            x, votes = carry
             x, kv, aux, m = _dense_block(cfg, blk, x, positions, None, serve=serve)
+            if "_label_votes" in m:
+                votes = votes + m.pop("_label_votes")
             # K/V are scan outputs ONLY when prefill needs them — XLA does
             # not reliably DCE unused (L, B, S, KV, hd) while-loop outputs
             kvs = (kv["k"], kv["v"]) if collect_cache else ()
-            return constrain(x), (aux, m, kvs)
-        x, (auxs, ms, kvs) = jax.lax.scan(_maybe_remat(cfg, body), x,
-                                          params["blocks"])
+            return (constrain(x), votes), (aux, m, kvs)
+        (x, votes), (auxs, ms, kvs) = jax.lax.scan(
+            _maybe_remat(cfg, body), (x, votes0), params["blocks"])
         aux_total = jnp.sum(auxs)
         # layer mean over the scan axis only: scalar metrics stay scalar,
         # per-class vectors (class_counts/dispatched) stay (n+1,)
@@ -252,22 +281,44 @@ def forward(cfg: ModelConfig, params, inputs: jax.Array, *,
     else:  # hybrid
         shared = params["shared"]
 
-        def group(x, mblks):
+        def group(carry, mblks):
+            x, votes = carry
+
             def inner(x, blk):
                 x, st = _mamba_block(cfg, blk, x, None)
                 return constrain(x), st
             x, msts = jax.lax.scan(_maybe_remat(cfg, inner), x, mblks)
-            x, kv, aux, _ = _dense_block(cfg, shared, x, positions, None,
+            x, kv, aux, m = _dense_block(cfg, shared, x, positions, None,
                                          serve=serve)
+            if "_label_votes" in m:
+                votes = votes + m.pop("_label_votes")
             kvs = (kv["k"], kv["v"]) if collect_cache else ()
-            return constrain(x), (msts, aux, kvs)
-        x, (mstates, auxs, kvs) = jax.lax.scan(_maybe_remat(cfg, group), x,
-                                               params["mamba"])
+            return (constrain(x), votes), (msts, aux, m, kvs)
+        (x, votes), (mstates, auxs, ms, kvs) = jax.lax.scan(
+            _maybe_remat(cfg, group), (x, votes0), params["mamba"])
         aux_total = jnp.sum(auxs)
+        # group mean of the shared block's metrics (the uniform-family
+        # convention) — the dispatch/invocation signal was previously
+        # dropped here, leaving the autotuner blind for this family
+        metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}
         if collect_cache:
             ks, vs = kvs
             cache = {"mamba": mstates, "k": ks, "v": vs,
                      "pos": jnp.full((b,), s, jnp.int32)}
+
+    if train_tick and topo.kind in ("uniform", "hybrid"):
+        tick_labels = jnp.argmax(votes, -1)
+        t_logits = jnp.dot(x0.reshape(b * s, -1),
+                           params["tick_router"].astype(x0.dtype)) \
+            .astype(jnp.float32)
+        logp = jax.nn.log_softmax(t_logits, -1)
+        tick_loss = -jnp.mean(jnp.take_along_axis(logp,
+                                                  tick_labels[:, None], 1))
+        aux_total = aux_total + cfg.approx.router_weight * tick_loss
+        metrics = dict(metrics, tick_router_loss=tick_loss,
+                       tick_router_acc=jnp.mean(
+                           (jnp.argmax(t_logits, -1) == tick_labels)
+                           .astype(jnp.float32)))
 
     x = L.norm_fwd(cfg, params["ln_f"], x)
     logits = L.unembed_fwd(cfg, params["embed"], x)
@@ -351,12 +402,31 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
     ``row_mask`` (optional, (B,) bool) marks the ACTIVE batch slots of a
     continuous-batching server.  Idle slots (fed dummy token 0) are
     excluded from the serve-mode dispatch and its invoke stats, so the
-    reported invocation/exact_frac are exact on partially-full tables."""
+    reported invocation/exact_frac are exact on partially-full tables.
+
+    ``cfg.approx.route_scope="tick"``: the MCMA routing decision is made
+    ONCE per tick — a DispatchPlan built from the tick-router head on the
+    pre-layer hidden state (approx_ffn.make_tick_plan), hoisted above the
+    layer scan and reused by every layer, so each layer's dispatch is one
+    weight-switch launch on already-sorted rows (no per-layer argsort/
+    bincount/rank), and the reported invoke stats are the ONE tick-level
+    observation (every layer sees the same plan)."""
     topo = topology(cfg)
     x = L.embed_fwd(cfg, params["embed"], inputs)
     pos = cache["pos"]                                   # (B,) per-slot
     positions = pos[:, None]
     step_metrics: dict[str, jax.Array] = {}
+    plan = None
+    if serve and cfg.approx.enable:
+        if cfg.approx.route_scope not in ("layer", "tick"):
+            # a typo would otherwise silently fall back to per-layer routing
+            raise ValueError(f"unknown route_scope: "
+                             f"{cfg.approx.route_scope!r} "
+                             "(expected 'layer' or 'tick')")
+        if (cfg.approx.route_scope == "tick" and not cfg.moe.n_experts
+                and topo.kind in ("uniform", "hybrid")):
+            from repro.models.approx_ffn import make_tick_plan
+            plan = make_tick_plan(cfg, params, x, row_mask)
 
     if topo.kind == "uniform":
         # The cache is CARRIED and updated in place (dynamic-update-slice
@@ -368,7 +438,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             blk, i = blk_i
             lc = {"k": ck[i], "v": cv[i], "pos": pos}
             x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
-                                       row_mask=row_mask)
+                                       row_mask=row_mask, dispatch_plan=plan)
+            m.pop("_label_votes", None)   # train-only co-training signal
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)
             return (x, ck, cv), (m if collect_metrics else None)
@@ -409,15 +480,21 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
                 return x, ns
             x, nmsts = jax.lax.scan(inner, x, (mblks, msts))
             lc = {"k": ck[gi], "v": cv[gi], "pos": pos}
-            x, nc, _, _ = _dense_block(cfg, shared, x, positions, lc,
-                                       serve=serve, row_mask=row_mask)
+            x, nc, _, m = _dense_block(cfg, shared, x, positions, lc,
+                                       serve=serve, row_mask=row_mask,
+                                       dispatch_plan=plan)
+            m.pop("_label_votes", None)   # train-only co-training signal
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], gi, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], gi, 0)
-            return (x, ck, cv), nmsts
-        (x, ks, vs), nm = jax.lax.scan(
+            return (x, ck, cv), (nmsts, m if collect_metrics else None)
+        (x, ks, vs), (nm, ms) = jax.lax.scan(
             group, (x, cache["k"], cache["v"]),
             (params["mamba"], cache["mamba"], jnp.arange(topo_g)))
         new_cache = {"mamba": nm, "k": ks, "v": vs, "pos": pos + 1}
+        if collect_metrics and ms is not None:
+            # group mean of the shared block's dispatch metrics — this used
+            # to be dropped, leaving the autotuner blind for this family
+            step_metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}
 
     x = L.norm_fwd(cfg, params["ln_f"], x)
     logits = L.unembed_fwd(cfg, params["embed"], x)

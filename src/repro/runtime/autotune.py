@@ -53,6 +53,15 @@ cleared.  That is safe: the up-rule is driven by OBSERVED drops, so the
 controller simply climbs one more rung (or the ladder carries rungs with
 ``shard_slack`` > 1, the per-shard rebalancing headroom of
 sharding/rules.shard_capacity).
+
+Under tick-scope routing (``ApproxConfig.route_scope="tick"``, PR 4) the
+per-layer-mean optimism disappears entirely: ONE DispatchPlan per decode
+tick means every layer reports the same per-class counts, so the
+controller's observation IS the tick's exact routed mix — one clean
+sample per tick instead of a mean of L noisy per-layer decisions, and
+the replay prediction is exact up to cross-shard skew.  The control law
+is unchanged (it is scale-free in t and never assumed per-layer
+variance); only the down-backoff's reason to exist shrinks.
 """
 from __future__ import annotations
 

@@ -41,9 +41,22 @@ every caller sees the global totals, exactly equal to summing each
 shard's local stats on one device.  ``mcma_dispatch_sharded`` is the
 ready-made wrapper for flat row batches; the model layers
 (models/approx_ffn.py) embed the engine in their own shard_map instead.
+
+Plan/execute split: the route -> capacity -> class-sort half of the
+pipeline is ``make_dispatch_plan`` and returns a ``DispatchPlan`` (class
+ids, within-class ranks, the class-sort permutation, keep/slot buffers,
+per-class counts — everything that depends on the LOGITS but not on the
+layer's weights); ``execute_dispatch`` applies one layer's approximators
+and exact path against a plan.  ``mcma_dispatch`` is exactly
+``make_dispatch_plan`` + ``execute_dispatch`` + ``plan_invoke_stats``,
+so the paper's one-decision-per-input semantics fall out for free: route
+once per decode tick, reuse the SAME plan across all L layers of the
+scan (``ApproxConfig.route_scope = "tick"``), and each layer is one
+weight-switch kernel launch on already-sorted rows.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Callable
 
@@ -138,6 +151,257 @@ def capacity_path(x: jax.Array, mask: jax.Array, cap: int,
     return gather_rows(y, slot, keep)
 
 
+# ---------------------------------------------------------------------------
+# Plan/execute: the routing decision as a first-class value.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """One routing decision over a flat row batch, ready to execute.
+
+    Everything here depends on the router LOGITS (and the capacities) but
+    not on any layer's weights, so a plan built once per decode tick can
+    be replayed against every layer of the scan.  Array fields (traced,
+    pytree data):
+
+      cls         (T,) int32 routed class per row (0 = exact; inactive
+                  rows under ``row_mask`` are forced to 0)
+      rank        (T,) int32 within-class arrival rank of every row
+      eff         (T,) int32 kernel class ids: kept approx rows keep
+                  ``cls - 1``; exact / over-capacity / inactive rows get
+                  the zero-weight pseudo-class ``n_approx``
+      order, pos  the class-sort permutation of ``eff`` and each row's
+                  padded single-class-tile position (ops.class_sort_plan;
+                  identity/zero placeholders on "xla" plans — only the
+                  Pallas executor consumes the sort)
+      tile_cls    (t_pad // block_t,) per-tile class for the weight switch
+      exact_keep  (T,) bool — class-0 rows inside the exact capacity
+      exact_slot  (T,) int32 capacity-buffer slot (exact_cap = trash)
+      counts      (n_approx + 1,) routed rows per class
+      dispatched  (n_approx + 1,) post-capacity executed rows per class
+      t_total     () int32 active rows
+      executed    () int32 rows of compute the executor will launch
+
+    ``counts``/``dispatched``/``t_total``/``executed`` are psum-reduced
+    GLOBAL totals when the plan is built with ``stats_axes`` inside a
+    shard_map; the row-shaped fields stay shard-local.  Static metadata
+    (pytree aux): ``n_approx``, the capacities, ``block_t``, ``backend``.
+    """
+
+    cls: jax.Array
+    rank: jax.Array
+    eff: jax.Array
+    order: jax.Array
+    pos: jax.Array
+    tile_cls: jax.Array
+    exact_keep: jax.Array
+    exact_slot: jax.Array
+    counts: jax.Array
+    dispatched: jax.Array
+    t_total: jax.Array
+    executed: jax.Array
+    n_approx: int
+    exact_cap: int
+    invoke_cap: int
+    block_t: int
+    backend: str
+
+
+_PLAN_DATA = ("cls", "rank", "eff", "order", "pos", "tile_cls",
+              "exact_keep", "exact_slot", "counts", "dispatched",
+              "t_total", "executed")
+_PLAN_META = ("n_approx", "exact_cap", "invoke_cap", "block_t", "backend")
+
+jax.tree_util.register_pytree_node(
+    DispatchPlan,
+    lambda p: (tuple(getattr(p, f) for f in _PLAN_DATA),
+               tuple(getattr(p, f) for f in _PLAN_META)),
+    lambda meta, data: DispatchPlan(*data, *meta))
+
+
+def make_dispatch_plan(logits: jax.Array,
+                       row_mask: jax.Array | None = None, *,
+                       exact_cap: int | None = None,
+                       invoke_cap: int | None = None,
+                       operating_point=None, backend: str = "xla",
+                       block_t: int = 128,
+                       stats_axes: tuple = ()) -> DispatchPlan:
+    """classify -> capacity -> class-sort, once, as a reusable plan.
+
+    logits: (T, n_approx + 1) router/classifier scores (class 0 = exact);
+    ``row_mask`` marks ACTIVE rows exactly as in ``mcma_dispatch``.
+    Capacities come either from explicit ``exact_cap``/``invoke_cap`` or
+    from an ``operating_point`` (runtime/autotune.OperatingPoint, applied
+    to this batch's row count via sharding/rules.shard_capacity).
+    ``stats_axes`` psum-reduces the count fields to global totals when
+    building inside a shard_map — build and consume the plan inside the
+    same shard_map region (sharding/rules.dispatch_plan_specs describes
+    how its fields shard between the two).
+    """
+    t = logits.shape[0]
+    n = logits.shape[-1] - 1
+    if operating_point is not None:
+        from repro.sharding.rules import shard_capacity
+        assert exact_cap is None and invoke_cap is None, \
+            "pass capacities OR an operating_point, not both"
+        exact_cap = shard_capacity(t, operating_point.exact_frac,
+                                   slack=operating_point.shard_slack)
+        invoke_cap = shard_capacity(t, operating_point.invoke_frac,
+                                    slack=operating_point.shard_slack)
+    cls = route(logits)
+    if row_mask is not None:
+        mask = row_mask.astype(bool)
+        # inactive rows: class 0 so they never claim an approximator rank;
+        # the exact keep below additionally excludes them via the mask,
+        # and the sentinel class n+1 keeps them out of counts.
+        cls = jnp.where(mask, cls, 0)
+        counts = jnp.bincount(jnp.where(mask, cls, n + 1),
+                              length=n + 2)[:n + 1]
+        exact_mask = (cls == 0) & mask
+        t_total = jnp.sum(mask.astype(jnp.int32))
+    else:
+        counts = jnp.bincount(cls, length=n + 1)
+        exact_mask = cls == 0
+        t_total = jnp.asarray(t, jnp.int32)
+
+    # approximator side: capacity first, then the single-class-tile sort
+    # of the effective classes (kept rows keep cls-1; exact/over-capacity/
+    # inactive rows ride the zero-weight pseudo-class n).  Only the Pallas
+    # executor consumes the sort fields (the XLA oracle re-derives per-class
+    # slots from cls/rank), so an "xla" plan carries cheap identity/zero
+    # placeholders of the same shapes instead of paying a dead argsort —
+    # the plan SCHEMA is backend-independent, the sort work is not.
+    rank = _rank_in_class(cls, n + 1)
+    kept = (cls > 0) & (rank < invoke_cap)
+    eff = jnp.where(kept, cls - 1, n).astype(jnp.int32)
+    if backend == "pallas":
+        order, pos, tile_cls, _, _ = ops.class_sort_plan(eff, n + 1, block_t)
+    else:
+        n_tiles = ops.worst_case_rows(t, n + 1, block_t) // block_t
+        order = pos = jnp.arange(t, dtype=jnp.int32)
+        tile_cls = jnp.zeros((n_tiles,), jnp.int32)
+
+    # exact ("nC") side: capacity-buffer keep/slot (exact_cap = trash)
+    epos = jnp.cumsum(exact_mask.astype(jnp.int32)) - 1
+    exact_keep = exact_mask & (epos < exact_cap)
+    exact_slot = jnp.where(exact_keep, epos, exact_cap)
+
+    caps = jnp.asarray([exact_cap] + [invoke_cap] * n, counts.dtype)
+    dispatched = jnp.minimum(counts, caps)
+    if backend == "pallas":
+        # the kernel launches the full static worst-case grid (including
+        # trailing zero tiles past the occupied region) — n+1 classes
+        # including the pseudo-class
+        executed = jnp.asarray(
+            exact_cap + ops.worst_case_rows(t, n + 1, block_t), jnp.int32)
+    elif backend == "xla":
+        executed = jnp.asarray(exact_cap + n * invoke_cap, jnp.int32)
+    else:
+        raise ValueError(f"unknown dispatch backend: {backend!r}")
+    if stats_axes:
+        # inside shard_map: reduce to GLOBAL stats.  Each quantity is a sum
+        # of per-shard terms, so psum of the local values equals the
+        # single-device totals over the same per-shard capacities exactly.
+        ax = tuple(stats_axes)
+        t_total = jax.lax.psum(t_total, ax)
+        counts = jax.lax.psum(counts, ax)
+        dispatched = jax.lax.psum(dispatched, ax)
+        executed = jax.lax.psum(executed, ax)
+    return DispatchPlan(cls=cls, rank=rank, eff=eff, order=order, pos=pos,
+                        tile_cls=tile_cls, exact_keep=exact_keep,
+                        exact_slot=exact_slot, counts=counts,
+                        dispatched=dispatched, t_total=t_total,
+                        executed=executed, n_approx=n, exact_cap=exact_cap,
+                        invoke_cap=invoke_cap, block_t=block_t,
+                        backend=backend)
+
+
+def plan_invoke_stats(plan: DispatchPlan) -> dict:
+    """The engine's invoke_stats dict, derived from a plan (elementwise —
+    cheap to call per layer; identical keys/values to ``mcma_dispatch``'s
+    second return).  Already global totals for plans built with
+    ``stats_axes``, so no collectives are needed here."""
+    exact_frac = (plan.counts[0] / jnp.maximum(plan.t_total, 1)) \
+        .astype(jnp.float32)
+    # zero active rows (possible under row_mask): report invocation 0, not
+    # the 1.0 that 1 - 0/1 would claim for a fully idle batch
+    invocation = jnp.where(plan.t_total > 0, 1.0 - exact_frac, 0.0) \
+        .astype(jnp.float32)
+    return {
+        "class_counts": plan.counts,
+        "dispatched": plan.dispatched,
+        "dropped": jnp.sum(plan.counts - plan.dispatched),
+        "exact_frac": exact_frac,
+        "invocation": invocation,
+        "executed_rows": plan.executed,
+        "padding_rows": plan.executed
+        - jnp.sum(plan.dispatched).astype(jnp.int32),
+    }
+
+
+def execute_dispatch(plan: DispatchPlan, x: jax.Array,
+                     exact_fn: Callable[[jax.Array], jax.Array],
+                     a_w1: jax.Array, a_b1: jax.Array,
+                     a_w2: jax.Array, a_b2: jax.Array, *,
+                     interpret: bool = False,
+                     weights_prepadded: bool = False) -> jax.Array:
+    """Apply one layer's approximators + exact path against a plan.
+
+    x: (T, d) rows in ORIGINAL order (the plan's permutation is applied
+    internally); returns (T, d_out) in original order.  Both backends
+    consume the same plan — ``plan.backend`` picks the executor — so the
+    Pallas path stays bit-exact against the XLA oracle under plan reuse.
+    No routing, sorting, or counting happens here: at tick scope this is
+    the entire per-layer cost.
+    """
+    n = plan.n_approx
+    assert a_w1.shape[0] - (1 if weights_prepadded else 0) == n, (
+        f"approximator stack (leading dim {a_w1.shape[0]}, "
+        f"weights_prepadded={weights_prepadded}) does not match the plan's "
+        f"n_approx={n}")
+    # exact ("nC") rows: capacity gather -> exact_fn -> scatter-back
+    xg = scatter_rows(x, plan.exact_slot, plan.exact_keep, plan.exact_cap)
+    out = gather_rows(exact_fn(xg), plan.exact_slot, plan.exact_keep)
+
+    if plan.backend == "xla":
+        d_out = out.shape[-1]
+        for i in range(n):
+            if weights_prepadded:
+                # logical views of the padded stacks; padded regions are
+                # exact zeros, so the sliced math is unchanged
+                d_in = x.shape[1]
+                def approx_i(xb, i=i):
+                    return apply_approximator(
+                        xb, a_w1[i, :d_in], a_b1[i],
+                        a_w2[i][:, :d_out], a_b2[i, :d_out])
+            else:
+                def approx_i(xb, i=i):
+                    return apply_approximator(xb, a_w1[i], a_b1[i],
+                                              a_w2[i], a_b2[i])
+            keep = (plan.cls == i + 1) & (plan.rank < plan.invoke_cap)
+            slot = jnp.where(keep, plan.rank, plan.invoke_cap)
+            xb = scatter_rows(x, slot, keep, plan.invoke_cap)
+            out = out + gather_rows(approx_i(xb), slot, keep)
+    else:  # pallas — validated by make_dispatch_plan
+        # one grouped kernel launch over ALL rows on the plan's precomputed
+        # class-sort: exact + over-capacity (and masked-inactive) rows ride
+        # the zero-weight pseudo-class n, whose tiles compute exact zeros
+        # (tanh(0)@0 + 0), so no post-mask is needed.
+        sort_plan = (plan.order, plan.pos, plan.tile_cls)
+        if weights_prepadded:
+            out = out + ops.switched_apply(
+                x, plan.eff, a_w1, a_b1, a_w2, a_b2, block_t=plan.block_t,
+                interpret=interpret, prepadded=True, d_out=out.shape[-1],
+                sort_plan=sort_plan)
+        else:
+            zcls = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])], 0)
+            out = out + ops.switched_apply(
+                x, plan.eff, zcls(a_w1), zcls(a_b1), zcls(a_w2), zcls(a_b2),
+                block_t=plan.block_t, interpret=interpret,
+                sort_plan=sort_plan)
+    return out
+
+
 def mcma_dispatch(x: jax.Array, logits: jax.Array,
                   exact_fn: Callable[[jax.Array], jax.Array],
                   a_w1: jax.Array, a_b1: jax.Array,
@@ -189,7 +453,6 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
                     for XLA; tile padding, nC deadweight, and the static
                     worst-case trailing tiles for Pallas)
     """
-    t, _ = x.shape
     n = a_w1.shape[0] - (1 if weights_prepadded else 0)
     # schema guard: the router always has n_approx+1 classes, so a stack
     # whose leading dim disagrees (e.g. a pre-serving-form checkpoint fed
@@ -200,95 +463,13 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
         f"approximator stack (leading dim {a_w1.shape[0]}, "
         f"weights_prepadded={weights_prepadded}) does not match — "
         "prepadded stacks must come from ops.prepad_switched_weights")
-    cls = route(logits)
-    if row_mask is not None:
-        mask = row_mask.astype(bool)
-        # inactive rows: class 0 so they never claim an approximator rank;
-        # the exact gather below additionally excludes them via the mask,
-        # and the sentinel class n+1 keeps them out of class_counts.
-        cls = jnp.where(mask, cls, 0)
-        counts = jnp.bincount(jnp.where(mask, cls, n + 1),
-                              length=n + 2)[:n + 1]
-        exact_mask = (cls == 0) & mask
-        t_total = jnp.sum(mask.astype(jnp.int32))
-    else:
-        counts = jnp.bincount(cls, length=n + 1)
-        exact_mask = cls == 0
-        t_total = jnp.asarray(t, jnp.int32)
-
-    # exact ("nC") rows: both backends share the capacity gather path
-    out = capacity_path(x, exact_mask, exact_cap, exact_fn)
-
-    if backend == "xla":
-        d_out = out.shape[-1]
-        for i in range(n):
-            if weights_prepadded:
-                # logical views of the padded stacks; padded regions are
-                # exact zeros, so the sliced math is unchanged
-                d_in = x.shape[1]
-                def approx_i(xb, i=i):
-                    return apply_approximator(
-                        xb, a_w1[i, :d_in], a_b1[i],
-                        a_w2[i][:, :d_out], a_b2[i, :d_out])
-            else:
-                def approx_i(xb, i=i):
-                    return apply_approximator(xb, a_w1[i], a_b1[i],
-                                              a_w2[i], a_b2[i])
-            out = out + capacity_path(x, (cls == i + 1), invoke_cap,
-                                      approx_i)
-        executed = jnp.asarray(exact_cap + n * invoke_cap, jnp.int32)
-    elif backend == "pallas":
-        # capacity first, then one grouped kernel launch over ALL rows:
-        # kept approx rows keep their class; exact + over-capacity (and
-        # masked-inactive, already class 0) rows are assigned a zero-weight
-        # pseudo-class n, whose tiles compute exact zeros (tanh(0)@0 + 0),
-        # so no post-mask is needed.
-        rank = _rank_in_class(cls, n + 1)
-        kept = (cls > 0) & (rank < invoke_cap)
-        eff = jnp.where(kept, cls - 1, n).astype(jnp.int32)
-        if weights_prepadded:
-            out = out + ops.switched_apply(
-                x, eff, a_w1, a_b1, a_w2, a_b2, block_t=block_t,
-                interpret=interpret, prepadded=True, d_out=out.shape[-1])
-        else:
-            zcls = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])], 0)
-            out = out + ops.switched_apply(
-                x, eff, zcls(a_w1), zcls(a_b1), zcls(a_w2), zcls(a_b2),
-                block_t=block_t, interpret=interpret)
-        # the kernel launches the full static worst-case grid (including
-        # trailing zero tiles past the occupied region), so that is what
-        # executed_rows must count — n+1 classes including the pseudo-class
-        t_pad = ops.worst_case_rows(t, n + 1, block_t)
-        executed = jnp.asarray(exact_cap + t_pad, jnp.int32)
-    else:
-        raise ValueError(f"unknown dispatch backend: {backend!r}")
-
-    caps = jnp.asarray([exact_cap] + [invoke_cap] * n, counts.dtype)
-    dispatched = jnp.minimum(counts, caps)
-    if stats_axes:
-        # inside shard_map: reduce to GLOBAL stats.  Each quantity is a sum
-        # of per-shard terms, so psum of the local values equals the
-        # single-device totals over the same per-shard capacities exactly.
-        ax = tuple(stats_axes)
-        t_total = jax.lax.psum(t_total, ax)
-        counts = jax.lax.psum(counts, ax)
-        dispatched = jax.lax.psum(dispatched, ax)
-        executed = jax.lax.psum(executed, ax)
-    exact_frac = (counts[0] / jnp.maximum(t_total, 1)).astype(jnp.float32)
-    # zero active rows (possible under row_mask): report invocation 0, not
-    # the 1.0 that 1 - 0/1 would claim for a fully idle batch
-    invocation = jnp.where(t_total > 0, 1.0 - exact_frac, 0.0) \
-        .astype(jnp.float32)
-    stats = {
-        "class_counts": counts,
-        "dispatched": dispatched,
-        "dropped": jnp.sum(counts - dispatched),
-        "exact_frac": exact_frac,
-        "invocation": invocation,
-        "executed_rows": executed,
-        "padding_rows": executed - jnp.sum(dispatched).astype(jnp.int32),
-    }
-    return out, stats
+    plan = make_dispatch_plan(logits, row_mask, exact_cap=exact_cap,
+                              invoke_cap=invoke_cap, backend=backend,
+                              block_t=block_t, stats_axes=stats_axes)
+    out = execute_dispatch(plan, x, exact_fn, a_w1, a_b1, a_w2, a_b2,
+                           interpret=interpret,
+                           weights_prepadded=weights_prepadded)
+    return out, plan_invoke_stats(plan)
 
 
 def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,

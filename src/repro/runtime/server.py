@@ -39,9 +39,16 @@ class DecodeServer:
                  max_len: int = 512, eos: int | None = None, greedy=True,
                  seed: int = 0, use_mcma_dispatch: bool = False,
                  mesh=None, autotune=None, drop_budget: float = 0.05,
-                 autotune_kwargs: dict | None = None):
+                 autotune_kwargs: dict | None = None,
+                 route_scope: str | None = None):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len, self.eos = batch, max_len, eos
+        # route_scope: "tick" routes once per decode tick (one DispatchPlan
+        # from the tick-router head, reused by every layer of the scan) —
+        # the per-tick metrics the server (and the autotune controller)
+        # observe are then the single tick-level dispatch decision rather
+        # than a mean of L per-layer ones.  None honors the config.
+        self.route_scope = route_scope
         # use_mcma_dispatch: decode ticks run the ApproxFFN through the
         # MCMA Pallas weight-switch engine (runtime/dispatch.py) and the
         # server accumulates the invocation rate, weighting each tick by
@@ -117,7 +124,8 @@ class DecodeServer:
         return jax.jit(
             steps_lib.make_decode_step(
                 self.cfg, use_mcma_dispatch=self.use_mcma_dispatch,
-                with_stats=self.use_mcma_dispatch, operating_point=point),
+                with_stats=self.use_mcma_dispatch, operating_point=point,
+                route_scope=self.route_scope),
             donate_argnums=(1,))
 
     def _active_step(self):

@@ -45,19 +45,26 @@ def make_train_step(cfg: ModelConfig, *, grad_accum: int = 1,
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch["inputs"], batch["labels"])
         else:
-            # microbatch accumulation: scan over grad_accum slices of B
+            # microbatch accumulation: scan over grad_accum slices of B.
+            # Per-microbatch metrics ride the scan ys and are meaned over
+            # the accumulation axis — equal-sized slices, so the mean of
+            # per-slice means equals the full-batch value for every
+            # token-meaned metric (invocation, router_acc, lm_loss, the
+            # per-class dispatch vectors...); they used to be silently
+            # dropped whenever grad_accum > 1.
             def mb(carry, sl):
                 acc, lsum = carry
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, sl["inputs"], sl["labels"])
-                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), m
             slices = jax.tree.map(
                 lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum,
                                     *a.shape[1:]), batch)
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, lsum), _ = jax.lax.scan(mb, (zeros, 0.0), slices)
+            (grads, lsum), ms = jax.lax.scan(mb, (zeros, 0.0), slices)
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
-            loss, metrics = lsum / grad_accum, {}
+            loss = lsum / grad_accum
+            metrics = jax.tree.map(lambda v: jnp.mean(v, axis=0), ms)
 
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         lr = cosine_schedule(state["step"], base_lr=base_lr, warmup=warmup,
@@ -113,7 +120,8 @@ def serve_mesh_context(mesh):
 
 
 def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
-                     with_stats: bool = False, operating_point=None):
+                     with_stats: bool = False, operating_point=None,
+                     route_scope: str | None = None):
     """``use_mcma_dispatch`` swaps the serve-mode FFN engine to the MCMA
     Pallas dispatch; ``with_stats`` makes the step also return the
     layer-meaned dispatch metrics (invocation rate etc.) per tick.
@@ -124,11 +132,25 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
     step per rung and the autotuner switches between them (never
     retraces a live one).
 
+    ``route_scope`` overrides ``cfg.approx.route_scope``: "tick" makes
+    the step route ONCE per tick (one DispatchPlan from the tick-router
+    head, hoisted above the layer scan and reused by every layer — the
+    paper's per-input decision); "layer" keeps per-layer routing.  Under
+    ``with_stats`` a tick-scope step's metrics are the single tick-level
+    observation (every layer reports the same plan), so an autotuner
+    consumes one exact sample per tick instead of L noisy per-layer ones.
+
     The returned step takes an optional trailing ``row_mask`` ((B,) bool
     of ACTIVE slots); pass it on partially-full slot tables so idle rows
     never bias the dispatch stats (the free-slot router-bias fix)."""
     if use_mcma_dispatch:
         cfg = mcma_serve_config(cfg)
+    if route_scope is not None:
+        if route_scope not in ("layer", "tick"):
+            raise ValueError(f"unknown route_scope: {route_scope!r} "
+                             "(expected 'layer' or 'tick')")
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, route_scope=route_scope))
     if operating_point is not None:
         pt = operating_point
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(

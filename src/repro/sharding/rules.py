@@ -120,6 +120,11 @@ def _param_rule(mesh, path: str, arr, report) -> P:
     if "approx/" in path and name in ("a_w1", "a_w2", "router",
                                       "a_b1", "a_b2"):
         return P(*([None] * nd))
+    # the tick-router head (models/model.py, route_scope="tick") is one
+    # (d, n+1) classifier applied once per decode tick — replicated for
+    # the same reason the per-layer routers are
+    if name == "tick_router":
+        return P(*([None] * nd))
     # count leading stack dims: params under blocks/ carry 1 (uniform) or 2
     # (xlstm/hybrid inner) scan dims; detect by path prefix
     lead = 0
@@ -223,12 +228,46 @@ def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None,
     return {"in": ins, "out": (row, P())}
 
 
-def approx_serve_specs(mesh: Mesh, *, gated: bool) -> dict:
+def dispatch_plan_specs(mesh: Mesh, like=None, *, data_axes=None,
+                        n_approx=None, exact_cap=None, invoke_cap=None,
+                        block_t=None, backend=None):
+    """PartitionSpecs for a ``runtime/dispatch.DispatchPlan`` built and
+    consumed inside the same shard_map region over the data axes.
+
+    Row-shaped fields (``cls``/``rank``/``eff``/``order``/``pos``/
+    ``exact_keep``/``exact_slot``) are row-sharded — their values are
+    SHARD-LOCAL indices, which is exactly what re-entering a shard_map
+    with the same row sharding restores; ``tile_cls`` shards its per-shard
+    tile runs the same way; the psum-reduced count fields (``counts``/
+    ``dispatched``/``t_total``/``executed``) are replicated.  Returns a
+    DispatchPlan-of-specs (the spec tree a shard_map in/out position
+    needs), carrying the same static metadata — pass ``like=`` an
+    existing plan to copy its metadata, or give the meta kwargs
+    explicitly when building the out-spec before any plan exists."""
+    from repro.runtime.dispatch import DispatchPlan
+    if like is not None:
+        n_approx, exact_cap, invoke_cap, block_t, backend = (
+            like.n_approx, like.exact_cap, like.invoke_cap, like.block_t,
+            like.backend)
+    dp = tuple(data_axes) if data_axes is not None else _dp_axes(mesh)
+    row, rep = P(dp), P()
+    return DispatchPlan(cls=row, rank=row, eff=row, order=row, pos=row,
+                        tile_cls=row, exact_keep=row, exact_slot=row,
+                        counts=rep, dispatched=rep, t_total=rep,
+                        executed=rep, n_approx=n_approx,
+                        exact_cap=exact_cap, invoke_cap=invoke_cap,
+                        block_t=block_t, backend=backend)
+
+
+def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None) -> dict:
     """Specs for the manual ApproxFFN serve path (models/approx_ffn.py):
     exact FFN weights Megatron-TP over "model" + FSDP over the data axes;
     router/approximators replicated (tiny — TP would only buy per-layer
     all-reduces, §Perf C.2); tokens batch-sharded with their (B,)
-    active-slot mask; stats replicated."""
+    active-slot mask; stats replicated.  ``plan`` (a DispatchPlan, tick
+    scope) swaps the mask+stats plumbing for the precomputed plan: in =
+    (weights, x, plan), out = y only (the plan already carries the global
+    stats, so none leave the region)."""
     dp = _dp_axes(mesh)
     ffn = {"w_in": P(dp, "model"), "w_out": P("model", dp)}
     if gated:
@@ -236,6 +275,10 @@ def approx_serve_specs(mesh: Mesh, *, gated: bool) -> dict:
     weights = {"ffn": ffn, "router": P(None, None),
                "a_w1": P(None, None, None), "a_b1": P(None, None),
                "a_w2": P(None, None, None), "a_b2": P(None, None)}
+    if plan is not None:
+        return {"in": (weights, P(dp, None, None),
+                       dispatch_plan_specs(mesh, plan, data_axes=dp)),
+                "out": P(dp, None, None)}
     return {"in": (weights, P(dp, None, None), P(dp)),
             "out": (P(dp, None, None), P())}
 
