@@ -6,7 +6,7 @@ PY ?= python
 MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
 .PHONY: test test-tier1 test-multidevice bench-quick bench-dispatch \
-	bench-dispatch-sharded bench-autotune bench-decode-tick \
+	bench-dispatch-sharded bench-autotune bench-decode-tick bench-qos \
 	bench-ci-dispatch deps
 
 deps:
@@ -19,10 +19,11 @@ test:
 	$(PY) -m pytest -q
 
 # mirrors the CI "multidevice" leg: shard_map tests (incl. the tick-scope
-# mesh decode) + the sharded dispatch microbench on 8 virtual CPU devices
+# mesh decode + the QoS tier-mix module) + the sharded dispatch microbench
+# on 8 virtual CPU devices
 test-multidevice:
-	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py
-	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick
+	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick --qos
 
 bench-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only kernels,dispatch
@@ -45,7 +46,14 @@ bench-autotune:
 bench-decode-tick:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --decode-tick
 
+# per-request QoS tier-mix sweep: mixed error-bound batches at several
+# operating points, oracle-gated per mix; asserts loose-bound rows serve
+# strictly more invocation than tight-bound rows at every visited point
+bench-qos:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --qos
+
 # the CI dispatch.csv artifact leg: base shapes + autotune trajectory +
-# decode-tick rows in ONE csv (separate invocations would overwrite it)
+# decode-tick + QoS tier-mix rows in ONE csv (separate invocations would
+# overwrite it)
 bench-ci-dispatch:
-	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick --qos

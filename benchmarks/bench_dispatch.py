@@ -40,8 +40,17 @@ counts per tick (jaxpr walk, scan-length aware) — the leg asserts tick
 scope runs strictly fewer sorts (1 plan vs L) and gates the Pallas
 backend against the XLA oracle at both scopes.
 
+``--qos`` adds the per-request QoS tier-mix sweep: batches mixing
+error-bound tiers (tight/base/loose exact-logit margins, a traced
+vector — one compiled program per operating point serves every mix) run
+at several capacity rungs including an asymmetric per-class one; each
+mix is pallas-vs-xla gated and the leg asserts loose-bound rows serve
+strictly more invocation than tight-bound rows in the same batch at
+every visited operating point, with per-tier margin/rows/served-
+invocation columns in the CSV.
+
 Writes benchmarks/out/dispatch.csv (modes: single | sharded |
-shard-local | autotune | decode-tick).
+shard-local | autotune | decode-tick | qos).
 """
 from __future__ import annotations
 
@@ -232,6 +241,127 @@ def _autotune_leg(rows, *, quick, devices, drop_budget=0.05):
         "autotune must serve strictly more approximator rows than static"
 
 
+def _qos_leg(rows, *, quick, devices=1):
+    """Per-request QoS tier-mix sweep: one batch mixing error-bound tiers
+    through the tiered engine (exact-logit margins, a traced vector — the
+    jitted program is shared by every mix) at several operating points,
+    including an asymmetric per-class-capacity rung.  Gates pallas vs the
+    XLA oracle per mix, and asserts the QoS contract: loose-bound rows
+    serve STRICTLY more invocation than tight-bound rows in the same
+    batch at every visited operating point."""
+    from repro.runtime.autotune import (OperatingPoint, default_tier_bounds,
+                                        margins_from_bounds)
+    from repro.sharding.rules import shard_capacity
+    t, n = (256, 3) if quick else (1024, 4)
+    d, d_h, d_ff, block_t = (128, 32, 256, 64) if quick \
+        else (256, 64, 1024, 128)
+    on_cpu = jax.default_backend() != "tpu"
+    key = jax.random.PRNGKey(23)
+    x, lg, (w1, b1, w2, b2), (wi, wo) = _make_case(key, t, n, d, d_h, d_ff)
+    exact_fn = lambda xb: jnp.dot(jax.nn.silu(jnp.dot(xb, wi)), wo)
+    exact_fn_p = lambda ep, xb: jnp.dot(jax.nn.silu(jnp.dot(xb, ep[0])),
+                                        ep[1])
+
+    base_bound = 0.10
+    bounds = default_tier_bounds(base_bound)      # tight / base / loose
+    nt = len(bounds)
+    # calibrate the margin scale to THIS router's logit spread so the
+    # tier bias actually moves borderline rows (margins are traced — a
+    # production server recalibrates without recompiling)
+    scale = 1.5 * float(jnp.std(lg)) / float(np.log(2.0))
+    margins = jnp.asarray(margins_from_bounds(bounds, base_bound,
+                                              scale=scale), jnp.float32)
+    # visited operating points: a tight rung where capacity BINDS (drops
+    # visible in the per-tier columns), an ASYMMETRIC per-class rung (hot
+    # class 1 gets the capacity the cold tail gives up), and the
+    # full-capacity escape rung
+    asym = tuple(round(f, 3) for f in np.linspace(0.5, 0.15, n))
+    points = [OperatingPoint(0.5, 0.15),
+              OperatingPoint(0.5, max(asym), invoke_fracs=asym),
+              OperatingPoint(1.0, 1.0)]
+    mixes = [(1, 1, 1), (3, 1, 1), (1, 1, 3)]    # balanced / tight- / loose-heavy
+
+    mesh = jax.make_mesh((devices,), ("data",)) if devices > 1 else None
+    tl = t // devices
+    fns = {}                                  # (rung, backend) -> jitted fn
+
+    def run_point(idx, tier, backend):
+        pt = points[idx]
+        ec = shard_capacity(tl, pt.exact_frac, slack=pt.shard_slack)
+        ic = tuple(shard_capacity(tl, f, slack=pt.shard_slack)
+                   for f in pt.class_fracs(n))
+        interp = on_cpu and backend == "pallas"
+        if (idx, backend) not in fns:
+            if mesh is None:
+                fns[(idx, backend)] = jax.jit(
+                    lambda a, b, tr, tm, be=backend, ip=interp, e=ec, i=ic:
+                    D.mcma_dispatch(a, b, exact_fn, w1, b1, w2, b2,
+                                    exact_cap=e, invoke_cap=i, backend=be,
+                                    block_t=block_t, interpret=ip,
+                                    tier=tr, tier_margins=tm))
+            else:
+                fns[(idx, backend)] = jax.jit(
+                    lambda a, b, tr, tm, be=backend, ip=interp, e=ec, i=ic:
+                    D.mcma_dispatch_sharded(
+                        mesh, a, b, exact_fn_p, (wi, wo), w1, b1, w2, b2,
+                        exact_cap=e, invoke_cap=i, backend=be,
+                        block_t=block_t, interpret=ip,
+                        tier=tr, tier_margins=tm))
+        return fns[(idx, backend)](x, lg, tier, margins)
+
+    for mi, mix in enumerate(mixes):
+        p = np.asarray(mix, float) / sum(mix)
+        tier = jnp.asarray(
+            np.random.default_rng(100 + mi).choice(nt, t, p=p), jnp.int32)
+        for idx, pt in enumerate(points):
+            yx, sx = run_point(idx, tier, "xla")
+            yp, sp = run_point(idx, tier, "pallas")
+            err = float(np.abs(np.asarray(yp) - np.asarray(yx)).max())
+            assert err < 1e-4, \
+                f"pallas-vs-xla divergence at point {pt} mix {mix}: {err}"
+            tc = np.asarray(sx["tier_counts"], float)
+            td = np.asarray(sx["tier_dispatched"], float)
+            trows = tc.sum(-1)
+            assert (trows > 0).all(), (mix, trows)
+            served = td[:, 1:].sum(-1) / trows
+            # the QoS contract this PR ships: a looser bound buys strictly
+            # more SERVED invocation than a tighter one in the same batch
+            assert served[-1] > served[0], \
+                f"loose tier must out-invoke tight at point {pt} mix " \
+                f"{mix}: served={served}"
+            row = {
+                "T": t, "n_approx": n, "d_model": d, "backend": "both",
+                "block_t": block_t, "interpret": on_cpu,
+                "devices": devices, "mode": "qos",
+                "op_index": idx,
+                "op_exact_frac": pt.exact_frac,
+                "op_invoke_frac": pt.invoke_frac,
+                "op_invoke_fracs": "/".join(str(f) for f in
+                                            pt.class_fracs(n)),
+                "tier_mix": ":".join(str(m) for m in mix),
+                "invocation": round(float(sx["invocation"]), 4),
+                "exact_frac": round(float(sx["exact_frac"]), 4),
+                "dropped": int(sx["dropped"]),
+                "max_abs_err_vs_xla": round(err, 7),
+            }
+            for k in range(nt):
+                row[f"tier{k}_bound"] = bounds[k]
+                row[f"tier{k}_margin"] = round(float(margins[k]), 3)
+                row[f"tier{k}_rows"] = int(trows[k])
+                row[f"tier{k}_served_inv"] = round(float(served[k]), 4)
+                row[f"tier{k}_dropped"] = int(
+                    (tc[k] - td[k]).sum())
+            rows.append(row)
+            print(f"qos x{devices} mix={row['tier_mix']:5s} point={idx} "
+                  f"served_inv per tier="
+                  f"{[round(float(s), 3) for s in served]}", flush=True)
+    # margins and tier mixes are traced inputs: every mix above reused
+    # ONE compiled program per (rung, backend)
+    for f in fns.values():
+        if hasattr(f, "_cache_size"):
+            assert f._cache_size() == 1, "tier mix forced a retrace"
+
+
 def _sub_jaxprs(eqn):
     """All jaxpr-valued params of an eqn (pjit/scan/remat/pallas bodies)."""
     out = []
@@ -335,7 +465,8 @@ def _decode_tick_leg(rows, *, quick):
 
 
 def main(quick: bool = False, iters: int | None = None, devices: int = 1,
-         autotune: bool = False, decode_tick: bool = False):
+         autotune: bool = False, decode_tick: bool = False,
+         qos: bool = False):
     os.makedirs(OUT, exist_ok=True)
     on_cpu = jax.default_backend() != "tpu"
     if devices > 1 and len(jax.devices()) < devices:
@@ -423,6 +554,8 @@ def main(quick: bool = False, iters: int | None = None, devices: int = 1,
 
     if autotune:
         _autotune_leg(rows, quick=quick, devices=devices)
+    if qos:
+        _qos_leg(rows, quick=quick, devices=devices)
     if decode_tick:
         _decode_tick_leg(rows, quick=quick)
 
@@ -455,6 +588,13 @@ if __name__ == "__main__":
                          "(per-tick wall + dynamic sort/scatter op counts; "
                          "asserts 1 class-sort per tick under tick scope "
                          "and pallas==xla at both scopes)")
+    ap.add_argument("--qos", action="store_true",
+                    help="add the per-request QoS tier-mix sweep: mixed "
+                         "error-bound batches at several operating points "
+                         "(incl. an asymmetric per-class-capacity rung), "
+                         "pallas-vs-xla gated per mix; asserts loose-bound "
+                         "rows serve strictly more invocation than "
+                         "tight-bound rows at every visited point")
     args = ap.parse_args()
     if args.devices > 1 and "host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -463,4 +603,5 @@ if __name__ == "__main__":
             os.environ.get("XLA_FLAGS", "") +
             f" --xla_force_host_platform_device_count={args.devices}").strip()
     main(quick=args.quick, iters=args.iters, devices=args.devices,
-         autotune=args.autotune, decode_tick=args.decode_tick)
+         autotune=args.autotune, decode_tick=args.decode_tick,
+         qos=args.qos)

@@ -31,12 +31,17 @@ def main(argv=None):
     ap.add_argument("--autotune", action="store_true",
                     help="adapt serve capacities online from the served "
                          "invoke_stats (implies --mcma-dispatch)")
+    ap.add_argument("--qos", action="store_true",
+                    help="per-request QoS: submit a mixed error-bound wave "
+                         "(tight/default/loose tiers in one batch) and "
+                         "report served invocation per tier (implies "
+                         "--mcma-dispatch)")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(get_config(args.arch))
-    if args.autotune:
+    if args.autotune or args.qos:
         args.mcma_dispatch = True
     if args.approx or args.mcma_dispatch:
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
@@ -45,16 +50,22 @@ def main(argv=None):
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     server = DecodeServer(cfg, params, batch=args.batch, max_len=96,
                           use_mcma_dispatch=args.mcma_dispatch,
-                          autotune=args.autotune)
+                          autotune=args.autotune,
+                          qos_tiers=True if args.qos else None)
 
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 20))
+        eb = None
+        if args.qos:   # cycle tight / default / loose / unspecified
+            eb = (list(server.tier_bounds) + [None])[
+                i % (len(server.tier_bounds) + 1)]
         reqs.append(Request(rid=i,
                             prompt=rng.integers(0, cfg.vocab, plen)
                             .astype(np.int32),
-                            max_new=int(rng.integers(8, 24))))
+                            max_new=int(rng.integers(8, 24)),
+                            error_bound=eb))
         server.submit(reqs[-1])
     stats = server.run_until_drained()
     for r in reqs[:4]:
@@ -72,6 +83,11 @@ def main(argv=None):
         print(f"served invocation rate (approx rows executed): "
               f"{stats['served_invocation_rate']:.3f}; dropped "
               f"{stats['dropped_rows']:.1f} rows")
+    if "per_tier" in stats:
+        for p in stats["per_tier"]:
+            print(f"tier {p['tier']} (bound {p['error_bound']:.3f}): "
+                  f"served invocation {p['served_invocation_rate']:.3f} "
+                  f"over {p['rows']:.0f} rows")
     if "autotune" in stats:
         a = stats["autotune"]
         print(f"autotune: {len(a['switches'])} switches, final point "

@@ -27,6 +27,22 @@ class ApproxConfig:
     # approximator.  FLOP savings vs dense FFN = 1 - exact_frac.
     exact_frac: float = 0.5
     invoke_frac: float = 0.4
+    # asymmetric per-class capacity fractions (len n_approx) — () keeps the
+    # shared invoke_frac for every class.  Heavy-tailed served mixes derive
+    # these from per-class count quantiles (runtime/autotune.
+    # ladder_from_counts) so a hot approximator gets capacity a cold one
+    # would waste as padding.
+    invoke_fracs: tuple = ()
+    # per-request QoS tiers: n_tiers is the STATIC tier count (shapes of
+    # the per-tier invoke stats); tier_bounds are the ascending per-tier
+    # error bounds a server quantizes Request.error_bound against (() =
+    # single-tier, the global error_bound above); tier_margins are the
+    # default per-tier exact-logit router margins — a TRACED input at
+    # serve time (runtime/dispatch.route), these are only the static
+    # fallback when a caller passes a tier vector without margins.
+    n_tiers: int = 1
+    tier_bounds: tuple = ()
+    tier_margins: tuple = ()
     # per-shard capacity over-provisioning under a mesh (the engine
     # dispatches each data shard's rows against its own budgets, so a
     # class hot on one shard drops rows even when another shard has

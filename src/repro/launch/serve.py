@@ -38,6 +38,22 @@ def main(argv=None):
                          "reused by every layer of the scan — the paper's "
                          "per-input decision); 'layer' routes per layer "
                          "(default: the config's route_scope)")
+    ap.add_argument("--qos", action="store_true",
+                    help="per-request QoS tiers (implies --mcma-dispatch): "
+                         "each request carries an error_bound, validated "
+                         "and quantized onto the tier table at submit "
+                         "time; the request wave mixes tiers and the "
+                         "drain summary reports served invocation + "
+                         "dropped_frac per tier")
+    ap.add_argument("--qos-app", default=None,
+                    help="apps/registry.py app whose quality.py error "
+                         "bound anchors the QoS tier table and the "
+                         "submit-time validation (implies --qos; default "
+                         "anchor: the config's approx.error_bound)")
+    ap.add_argument("--tier-bounds", default=None,
+                    help="comma-separated ascending error bounds "
+                         "overriding the default (tight, base, loose) "
+                         "tier table, e.g. 0.05,0.1,0.2")
     ap.add_argument("--data", type=int, default=0,
                     help="mesh data-axis size (0 = no mesh, single device)")
     ap.add_argument("--model", type=int, default=1,
@@ -59,7 +75,9 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
-    if args.autotune:
+    if args.qos_app or args.tier_bounds:
+        args.qos = True
+    if args.autotune or args.qos:
         args.mcma_dispatch = True
     if args.approx or args.mcma_dispatch:
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
@@ -71,17 +89,28 @@ def main(argv=None):
         assert args.batch % args.data == 0, \
             "--batch must divide by --data for the sharded dispatch path"
     params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
+    qos_tiers = True if args.qos else None
+    if args.tier_bounds:
+        qos_tiers = tuple(float(b) for b in args.tier_bounds.split(","))
     server = DecodeServer(cfg, params, batch=args.batch, max_len=args.max_len,
                           use_mcma_dispatch=args.mcma_dispatch, mesh=mesh,
                           autotune=args.autotune,
                           drop_budget=args.drop_budget,
-                          route_scope=args.route_scope)
+                          route_scope=args.route_scope,
+                          qos_tiers=qos_tiers, qos_app=args.qos_app)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, args.prompt_len)
                     .astype(np.int32), max_new=args.max_new)
             for i in range(args.requests)]
+    if args.qos:
+        # mixed-tier request wave: cycle the tier table's bounds (plus a
+        # default-tier request) so one batch carries every QoS level
+        bounds = server.tier_bounds
+        for i, r in enumerate(reqs):
+            choices = list(bounds) + [None]
+            r.error_bound = choices[i % len(choices)]
     for r in reqs:
         server.submit(r)
     stats = server.run_until_drained()
@@ -99,10 +128,23 @@ def main(argv=None):
         print(f"served invocation rate: {stats['served_invocation_rate']:.3f}"
               f" (dropped {stats['dropped_rows']:.1f} rows,"
               f" frac {stats['dropped_frac']:.4f})")
+    if "per_tier" in stats:
+        for p in stats["per_tier"]:
+            print(f"tier {p['tier']} (bound {p['error_bound']:.3f}, "
+                  f"margin {p['margin']:+.2f}): {p['rows']:.0f} rows, "
+                  f"served invocation {p['served_invocation_rate']:.3f}, "
+                  f"dropped_frac {p['dropped_frac']:.4f}")
     if "autotune" in stats:
         a = stats["autotune"]
         print(f"autotune: final point {a['final_point']} after "
               f"{len(a['switches'])} switches")
+        if server.routed_history:
+            lad = server.derived_ladder()
+            print("ladder_from_counts (served class-count quantiles -> "
+                  "asymmetric per-class rungs for the next deployment):")
+            for r in lad:
+                print(f"  exact_frac={r.exact_frac:.3f} "
+                      f"invoke_fracs={tuple(round(f, 3) for f in r.invoke_fracs)}")
     assert done == len(reqs), "server failed to drain"
     return stats
 

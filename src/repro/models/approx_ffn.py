@@ -145,21 +145,63 @@ def _manual_serve_ctx(cfg: ModelConfig, b: int):
     return None, (), 1
 
 
+def serve_caps(cfg: ModelConfig, t_local: int):
+    """(exact_cap, invoke_cap) for a shard of ``t_local`` rows — the ONE
+    place the config's capacity fractions become row budgets.  With
+    ``approx.invoke_fracs`` set (asymmetric per-class capacities, e.g.
+    from runtime/autotune.ladder_from_counts) ``invoke_cap`` is the
+    per-class tuple the engine accepts."""
+    from repro.sharding.rules import shard_capacity
+    a = cfg.approx
+    ec = shard_capacity(t_local, a.exact_frac, slack=a.shard_slack)
+    if a.invoke_fracs:
+        assert len(a.invoke_fracs) == a.n_approx, \
+            (a.invoke_fracs, a.n_approx)
+        return ec, tuple(shard_capacity(t_local, f, slack=a.shard_slack)
+                         for f in a.invoke_fracs)
+    return ec, shard_capacity(t_local, a.invoke_frac, slack=a.shard_slack)
+
+
+def _default_margins(cfg: ModelConfig) -> jax.Array:
+    """The config's static per-tier margin fallback (zeros when unset) —
+    the ONE definition every serve path defaults from when a caller
+    passes tiers without a margins vector."""
+    a = cfg.approx
+    return jnp.asarray(a.tier_margins or (0.0,) * a.n_tiers, jnp.float32)
+
+
+def _tier_args(cfg: ModelConfig, tier, tier_margins, s: int):
+    """Normalize the per-slot QoS args for an (B, S) row batch: expand the
+    (B,) tier vector to (B*S,) rows and default the margins vector from
+    the config when the caller passed tiers without one."""
+    if tier is None:
+        return None, None
+    tr = jnp.repeat(tier.astype(jnp.int32), s)
+    if tier_margins is None:
+        tier_margins = _default_margins(cfg)
+    return tr, tier_margins
+
+
 def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
-                   row_mask: jax.Array | None = None):
+                   row_mask: jax.Array | None = None,
+                   tier: jax.Array | None = None,
+                   tier_margins: jax.Array | None = None):
     """One DispatchPlan per decode tick (route_scope="tick").
 
     Classifies with the model's TICK-router head (``params["tick_router"]``,
     co-trained on the across-layer competitive labels) on the pre-layer
     hidden state ``x`` (B, S=1, d), runs capacity + class-sort once, and
     returns the plan every layer of the decode scan executes against.
-    Under a distributed trace context the plan is built per data shard
-    inside a shard_map — the identical sharding the per-layer manual serve
-    path consumes it with — and its count fields are psum-reduced to
+    ``tier`` ((B,) int32 per-slot QoS tier) + ``tier_margins`` ((n_tiers,)
+    traced) apply the per-request exact-logit margins to the ONE tick
+    decision, so a mixed-tier batch routes each row at its own quality
+    bound; the plan then carries the per-tier invoke-stat split for every
+    layer.  Under a distributed trace context the plan is built per data
+    shard inside a shard_map — the identical sharding the per-layer manual
+    serve path consumes it with — and its count fields are psum-reduced to
     global totals, so the autotuner reads ONE exact observation per tick.
     """
     from repro.runtime.dispatch import make_dispatch_plan
-    from repro.sharding.rules import shard_capacity
     a = cfg.approx
     b, s, d = x.shape
     t = b * s
@@ -175,57 +217,77 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
         from repro.sharding.compat import shard_map_compat
         from repro.sharding.rules import dispatch_plan_specs
         tl = t // g
-        ec = shard_capacity(tl, a.exact_frac, slack=a.shard_slack)
-        ic = shard_capacity(tl, a.invoke_frac, slack=a.shard_slack)
+        ec, ic = serve_caps(cfg, tl)
         if row_mask is None:
             row_mask = jnp.ones((b,), bool)
+        has_tier = tier is not None
+        if has_tier and tier_margins is None:
+            tier_margins = _default_margins(cfg)
+        nt = int(tier_margins.shape[0]) if has_tier else 1
 
-        def local(rt, x_l, m_l):
+        def local(rt, x_l, m_l, *qos):
             bl, sl, _ = x_l.shape
             xt = x_l.reshape(bl * sl, d)
             lg = jnp.dot(xt, rt.astype(xt.dtype)).astype(jnp.float32)
+            t_l, tm = qos if qos else (None, None)
             return make_dispatch_plan(
                 lg, jnp.repeat(m_l.astype(bool), sl), exact_cap=ec,
                 invoke_cap=ic, backend=a.backend, block_t=a.block_t,
-                stats_axes=dp)
+                stats_axes=dp,
+                tier=None if t_l is None else jnp.repeat(t_l, sl),
+                tier_margins=tm)
 
+        in_specs = (P(None, None), P(dp, None, None), P(dp))
+        args = (router, x, row_mask)
+        if has_tier:
+            in_specs = in_specs + (P(dp), P(None))
+            args = args + (tier.astype(jnp.int32), tier_margins)
         fn = shard_map_compat(
-            local, mesh=mesh,
-            in_specs=(P(None, None), P(dp, None, None), P(dp)),
+            local, mesh=mesh, in_specs=in_specs,
             out_specs=dispatch_plan_specs(
                 mesh, data_axes=dp, n_approx=a.n_approx, exact_cap=ec,
-                invoke_cap=ic, block_t=a.block_t, backend=a.backend),
+                invoke_cap=ic, block_t=a.block_t, backend=a.backend,
+                n_tiers=nt),
             axis_names=frozenset(tuple(dp) + ("model",)), check=False)
-        return fn(router, x, row_mask)
+        return fn(*args)
 
     xt = x.reshape(t, d)
     logits = jnp.dot(xt, router.astype(xt.dtype)).astype(jnp.float32)
     rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
+    tr, tier_margins = _tier_args(cfg, tier, tier_margins, s)
+    ec, ic = serve_caps(cfg, t)
     return make_dispatch_plan(
-        logits, rm,
-        exact_cap=shard_capacity(t, a.exact_frac, slack=a.shard_slack),
-        invoke_cap=shard_capacity(t, a.invoke_frac, slack=a.shard_slack),
-        backend=a.backend, block_t=a.block_t)
+        logits, rm, exact_cap=ec, invoke_cap=ic,
+        backend=a.backend, block_t=a.block_t,
+        tier=tr, tier_margins=tier_margins)
 
 
 def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
-                     row_mask: jax.Array | None = None, plan=None):
+                     row_mask: jax.Array | None = None, plan=None,
+                     tier: jax.Array | None = None,
+                     tier_margins: jax.Array | None = None):
     """Serving path with capacity dispatch.  x: (B, S, d) -> (out, aux).
 
     Exact FFN runs on ``exact_frac``·T tokens only — the paper's invocation
     gain realized as a FLOP reduction.  invoke capacity per approximator is
-    sized for a balanced dispatch with slack.
+    sized for a balanced dispatch with slack (or per class via
+    ``approx.invoke_fracs``).
 
     ``row_mask`` (optional, (B,) bool) marks the ACTIVE batch rows — a
     decode server's occupied slots.  Idle rows are excluded from dispatch
     and from every invoke stat, so invocation/exact_frac (and any capacity
     autotuner reading them) stay exact on partially-full slot tables.
 
+    ``tier`` (optional, (B,) int32) + ``tier_margins`` ((n_tiers,)
+    traced): per-request QoS — each slot routes at its own error-bound
+    tier via the exact-logit margin (runtime/dispatch.route) and the
+    invoke stats gain the per-tier split.
+
     ``plan`` (optional, a runtime/dispatch.DispatchPlan): tick-scope
     routing — the decision was made ONCE above the layer scan
     (make_tick_plan) and this layer only executes against it; no router
-    matmul, sort, or stats collective runs here, and ``row_mask`` is
-    ignored (the plan already embeds it).
+    matmul, sort, or stats collective runs here, and ``row_mask``/
+    ``tier`` are ignored (the plan already embeds them).
 
     The engine is ``runtime/dispatch.mcma_dispatch`` (classify -> capacity
     -> class-sort -> weight-switch kernel / XLA oracle -> exact -> scatter);
@@ -237,14 +299,14 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
     """
     from repro.runtime.dispatch import (execute_dispatch, mcma_dispatch,
                                         plan_invoke_stats)
-    from repro.sharding.rules import shard_capacity
     a = cfg.approx
     b, s, d = x.shape
     t = b * s
     mesh, dp, _ = _manual_serve_ctx(cfg, b)
     if mesh is not None:
         return _approx_serve_manual(cfg, p, x, mesh, dp,
-                                    row_mask=row_mask, plan=plan)
+                                    row_mask=row_mask, plan=plan,
+                                    tier=tier, tier_margins=tier_margins)
 
     if plan is not None:
         out = execute_dispatch(
@@ -255,14 +317,16 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
     else:
         xt = x.reshape(t, d)
         rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
+        tr, tier_margins = _tier_args(cfg, tier, tier_margins, s)
+        ec, ic = serve_caps(cfg, t)
         logits = jnp.dot(xt, p["router"].astype(x.dtype)).astype(jnp.float32)
         out, stats = mcma_dispatch(
             xt, logits, lambda xb: ffn_fwd(cfg, p["ffn"], xb),
             p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"],
-            exact_cap=shard_capacity(t, a.exact_frac, slack=a.shard_slack),
-            invoke_cap=shard_capacity(t, a.invoke_frac, slack=a.shard_slack),
+            exact_cap=ec, invoke_cap=ic,
             backend=a.backend, block_t=a.block_t, interpret=a.interpret,
-            row_mask=rm, weights_prepadded=True)
+            row_mask=rm, weights_prepadded=True,
+            tier=tr, tier_margins=tier_margins)
 
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
@@ -272,7 +336,7 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
 
 
 def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
-                         plan=None):
+                         plan=None, tier=None, tier_margins=None):
     """Shard_map-native serve dispatch: the SAME ``mcma_dispatch`` engine
     as the single-device path, run per data shard (each shard classifies /
     capacities / class-sorts / weight-switches its OWN tokens — no
@@ -289,11 +353,16 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
     so each shard executes its local rows against its local plan fields;
     the plan's count fields are already psum-reduced global totals, so
     the stats come straight off the plan with no collective here.
+
+    ``tier``/``tier_margins`` (layer scope only — a tick plan already
+    embeds the tiers): the (B,) per-slot QoS tiers ride through the
+    shard_map batch-sharded like the mask, the margins replicated, and
+    the per-tier stats psum-reduce with the rest.
     """
     from repro.runtime.dispatch import (execute_dispatch, mcma_dispatch,
                                         plan_invoke_stats)
     from repro.sharding.compat import shard_map_compat
-    from repro.sharding.rules import approx_serve_specs, shard_capacity
+    from repro.sharding.rules import approx_serve_specs
     a = cfg.approx
     b, s, d = x.shape
     axes = tuple(dp) + ("model",)
@@ -337,32 +406,40 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
         out = fn(weights, x, plan)
         stats = plan_invoke_stats(plan)
     else:
-        specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"])
+        has_tier = tier is not None
+        specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"],
+                                   with_tier=has_tier)
         if row_mask is None:
             row_mask = jnp.ones((b,), bool)
+        if has_tier and tier_margins is None:
+            tier_margins = _default_margins(cfg)
 
-        def local(p_loc, x_loc, m_loc):
+        def local(p_loc, x_loc, m_loc, *qos):
             bl, sl, _ = x_loc.shape
             tl = bl * sl
             xt = x_loc.reshape(tl, d)
             rm = jnp.repeat(m_loc.astype(bool), sl)
+            t_l, tm = qos if qos else (None, None)
+            ec, ic = serve_caps(cfg, tl)
             logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype)) \
                 .astype(jnp.float32)
             out, stats = mcma_dispatch(
                 xt, logits, tp_exact_fn(p_loc),
                 p_loc["a_w1"], p_loc["a_b1"], p_loc["a_w2"], p_loc["a_b2"],
-                exact_cap=shard_capacity(tl, a.exact_frac,
-                                         slack=a.shard_slack),
-                invoke_cap=shard_capacity(tl, a.invoke_frac,
-                                          slack=a.shard_slack),
+                exact_cap=ec, invoke_cap=ic,
                 backend=a.backend, block_t=a.block_t, interpret=a.interpret,
-                stats_axes=dp, row_mask=rm, weights_prepadded=True)
+                stats_axes=dp, row_mask=rm, weights_prepadded=True,
+                tier=None if t_l is None else jnp.repeat(t_l, sl),
+                tier_margins=tm)
             return out.reshape(bl, sl, d), stats
 
         fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
                               out_specs=specs["out"],
                               axis_names=frozenset(axes), check=False)
-        out, stats = fn(weights, x, row_mask)
+        args = (weights, x, row_mask)
+        if has_tier:
+            args = args + (tier.astype(jnp.int32), tier_margins)
+        out, stats = fn(*args)
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
            "router_acc": jnp.zeros((), jnp.float32),
@@ -371,7 +448,10 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
 
 
 def approx_ffn_fwd(cfg: ModelConfig, p, x: jax.Array, *, serve: bool = False,
-                   row_mask: jax.Array | None = None, plan=None):
+                   row_mask: jax.Array | None = None, plan=None,
+                   tier: jax.Array | None = None,
+                   tier_margins: jax.Array | None = None):
     if serve:
-        return approx_ffn_serve(cfg, p, x, row_mask=row_mask, plan=plan)
+        return approx_ffn_serve(cfg, p, x, row_mask=row_mask, plan=plan,
+                                tier=tier, tier_margins=tier_margins)
     return approx_ffn_train(cfg, p, x)

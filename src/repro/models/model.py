@@ -54,12 +54,15 @@ def _init_dense_block(key, cfg: ModelConfig):
 
 
 def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False,
-                 row_mask=None, dispatch_plan=None):
+                 row_mask=None, dispatch_plan=None, tier=None,
+                 tier_margins=None):
     """One transformer block.  Returns (x, new_cache, aux_loss, aux_metrics).
 
     ``dispatch_plan`` (serve + route_scope="tick"): the per-tick
     DispatchPlan built above the layer scan — this block's ApproxFFN
-    executes against it instead of routing its own tokens."""
+    executes against it instead of routing its own tokens.  ``tier``/
+    ``tier_margins`` (serve, layer scope): per-slot QoS tiers for this
+    block's own routing decision (a tick plan already embeds them)."""
     h, new_cache = L.attention_fwd(cfg, p["attn"], L.norm_fwd(cfg, p["ln1"], x),
                                    positions, cache)
     aux = jnp.zeros((), jnp.float32)
@@ -67,25 +70,27 @@ def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False,
     if cfg.parallel_block:
         # stablelm-2 style: FFN in parallel with attention, one residual
         f = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln1"], x), serve, row_mask,
-                      dispatch_plan)
+                      dispatch_plan, tier, tier_margins)
         f, aux, metrics = f
         x = x + h + f
     else:
         x = x + h
         f, aux, metrics = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln2"], x),
-                                    serve, row_mask, dispatch_plan)
+                                    serve, row_mask, dispatch_plan, tier,
+                                    tier_margins)
         x = x + f
     return x, new_cache, aux, metrics
 
 
 def _ffn_part(cfg: ModelConfig, p, xn, serve, row_mask=None,
-              dispatch_plan=None):
+              dispatch_plan=None, tier=None, tier_margins=None):
     if cfg.moe.n_experts:
         y, aux = moe.moe_fwd(cfg, p["moe"], xn)
         return y, aux, {}
     if cfg.approx.enable:
         y, a = approx_ffn_fwd(cfg, p["approx"], xn, serve=serve,
-                              row_mask=row_mask, plan=dispatch_plan)
+                              row_mask=row_mask, plan=dispatch_plan,
+                              tier=tier, tier_margins=tier_margins)
         m = {"invocation": a["invocation"], "router_acc": a["router_acc"]}
         if "label_votes" in a:  # train path: per-token competitive labels,
             # summed over the layer scan to supervise the tick-router head
@@ -102,6 +107,12 @@ def _ffn_part(cfg: ModelConfig, p, xn, serve, row_mask=None,
             m["class_counts"] = st["class_counts"].astype(jnp.float32)
             m["dispatched"] = st["dispatched"].astype(jnp.float32)
             m["dropped_rows"] = st["dropped"].astype(jnp.float32)
+            # per-tier QoS split: (n_tiers, n+1) routed / post-capacity
+            # counts — the server attributes served invocation and drops
+            # to each request's error-bound tier from these
+            m["tier_counts"] = st["tier_counts"].astype(jnp.float32)
+            m["tier_dispatched"] = st["tier_dispatched"] \
+                .astype(jnp.float32)
         return y, a["loss"], m
     return L.ffn_fwd(cfg, p["ffn"], xn), jnp.zeros((), jnp.float32), {}
 
@@ -393,7 +404,9 @@ def pad_cache(cfg: ModelConfig, cache, max_len: int):
 
 def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
            serve: bool = True, collect_metrics: bool = False,
-           row_mask: jax.Array | None = None):
+           row_mask: jax.Array | None = None,
+           tier: jax.Array | None = None,
+           tier_margins: jax.Array | None = None):
     """One decode step.  inputs: tokens (B, 1) or embeds (B, 1, d).
     Returns (logits (B, V), new_cache), or (logits, new_cache, metrics)
     when ``collect_metrics`` — layer-meaned per-step block metrics (e.g.
@@ -403,6 +416,13 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
     continuous-batching server.  Idle slots (fed dummy token 0) are
     excluded from the serve-mode dispatch and its invoke stats, so the
     reported invocation/exact_frac are exact on partially-full tables.
+
+    ``tier`` (optional, (B,) int32) + ``tier_margins`` ((n_tiers,)
+    float32, TRACED — margin changes never retrace): per-slot QoS tiers.
+    Each slot's row routes at its own error-bound tier via the
+    exact-logit margin (runtime/dispatch.route), one batch mixing tiers
+    freely, and the metrics gain the per-tier invoke-stat split.  With
+    ``tier=None`` the step traces the margin-free program unchanged.
 
     ``cfg.approx.route_scope="tick"``: the MCMA routing decision is made
     ONCE per tick — a DispatchPlan built from the tick-router head on the
@@ -426,7 +446,9 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
         if (cfg.approx.route_scope == "tick" and not cfg.moe.n_experts
                 and topo.kind in ("uniform", "hybrid")):
             from repro.models.approx_ffn import make_tick_plan
-            plan = make_tick_plan(cfg, params, x, row_mask)
+            plan = make_tick_plan(cfg, params, x, row_mask, tier=tier,
+                                  tier_margins=tier_margins)
+            tier = tier_margins = None   # the plan embeds the tiers
 
     if topo.kind == "uniform":
         # The cache is CARRIED and updated in place (dynamic-update-slice
@@ -438,7 +460,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             blk, i = blk_i
             lc = {"k": ck[i], "v": cv[i], "pos": pos}
             x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
-                                       row_mask=row_mask, dispatch_plan=plan)
+                                       row_mask=row_mask, dispatch_plan=plan,
+                                       tier=tier, tier_margins=tier_margins)
             m.pop("_label_votes", None)   # train-only co-training signal
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)
@@ -482,7 +505,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             lc = {"k": ck[gi], "v": cv[gi], "pos": pos}
             x, nc, _, m = _dense_block(cfg, shared, x, positions, lc,
                                        serve=serve, row_mask=row_mask,
-                                       dispatch_plan=plan)
+                                       dispatch_plan=plan, tier=tier,
+                                       tier_margins=tier_margins)
             m.pop("_label_votes", None)   # train-only co-training signal
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], gi, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], gi, 0)

@@ -78,15 +78,36 @@ class OperatingPoint:
     ``exact_frac``/``invoke_frac`` are the capacity fractions baked into
     the jitted step's shapes; ``shard_slack`` over-provisions per-shard
     budgets against cross-shard class skew (sharding/rules.shard_capacity).
+
+    ``invoke_fracs`` (optional, length n_approx) replaces the single
+    shared ``invoke_frac`` with an ASYMMETRIC per-class capacity vector —
+    ``ladder_from_counts`` derives these from served class-count
+    quantiles so a heavy-tailed mix buys its hot class capacity instead
+    of padding every cold one.  ``tier_margins`` are the per-tier
+    exact-logit router margins of this rung; unlike the capacity fields
+    they are TRACED inputs of the decode step (margins change routing,
+    not shapes), so two rungs differing only in margins share one
+    compiled program — the CapacityController invariant "capacities are
+    shapes, precompiled per rung" is untouched.
     """
 
     exact_frac: float
     invoke_frac: float
     shard_slack: float = 1.0
+    invoke_fracs: tuple = ()
+    tier_margins: tuple = ()
+
+    def class_fracs(self, n_approx: int) -> tuple:
+        """Per-class invoke fractions, length ``n_approx``."""
+        if self.invoke_fracs:
+            assert len(self.invoke_fracs) == n_approx, \
+                (self.invoke_fracs, n_approx)
+            return tuple(self.invoke_fracs)
+        return (self.invoke_frac,) * n_approx
 
     def cost(self, n_approx: int) -> float:
         """Relative executed capacity (rows of compute per input row)."""
-        return (self.exact_frac + n_approx * self.invoke_frac) \
+        return (self.exact_frac + sum(self.class_fracs(n_approx))) \
             * self.shard_slack
 
 
@@ -121,11 +142,84 @@ def point_caps(pt: OperatingPoint, t_local: int, n_approx: int,
                n_shards: int = 1) -> np.ndarray:
     """GLOBAL per-class capacity vector (n_approx + 1,) of a rung — the
     same per-shard formula the dispatch paths use
-    (sharding/rules.shard_capacity), summed over shards."""
+    (sharding/rules.shard_capacity), summed over shards.  Asymmetric
+    rungs (``invoke_fracs``) yield per-class entries."""
     from repro.sharding.rules import shard_capacity
     ec = shard_capacity(t_local, pt.exact_frac, slack=pt.shard_slack)
-    ic = shard_capacity(t_local, pt.invoke_frac, slack=pt.shard_slack)
-    return np.asarray([ec * n_shards] + [ic * n_shards] * n_approx, float)
+    ics = [shard_capacity(t_local, f, slack=pt.shard_slack)
+           for f in pt.class_fracs(n_approx)]
+    return np.asarray([ec * n_shards] + [ic * n_shards for ic in ics],
+                      float)
+
+
+def ladder_from_counts(class_counts, t: int, *,
+                       quantiles=(0.5, 0.75, 0.95), headroom: float = 1.1,
+                       shard_slack: float = 1.0,
+                       tier_margins: tuple = ()) \
+        -> tuple[OperatingPoint, ...]:
+    """Derive a capacity ladder from the SERVED class-count distribution.
+
+    ``class_counts``: (ticks, n_approx + 1) per-tick routed counts (a
+    server's ``routed_per_class`` history; a single (n_approx + 1,)
+    vector is treated as one observation); ``t`` is the row count the
+    counts were observed over (the server's batch).  For each quantile
+    ``q`` one rung is built whose PER-CLASS capacity fraction is that
+    class's q-quantile demand (x ``headroom``), so a heavy-tailed mix
+    gets an asymmetric ``invoke_fracs`` vector — the hot class's budget
+    grows while cold classes stop paying for padding the hand-picked
+    shared ``invoke_frac`` forced on them (closes the ROADMAP "autotune
+    the ladder itself" item).  A full-capacity escape rung is always
+    appended; rungs are cost-ordered and deduped, exactly the contract
+    ``CapacityController`` expects of ``default_ladder``.
+    """
+    c = np.asarray(class_counts, float)
+    if c.ndim == 1:
+        c = c[None]
+    assert c.ndim == 2 and c.shape[1] >= 2, c.shape
+    assert t > 0
+    n = c.shape[1] - 1
+    floor = 1.0 / t                         # shard_capacity's min of 1 row
+    rungs = []
+    for q in sorted(quantiles):
+        demand = np.quantile(c, q, axis=0) * headroom / t
+        ef = float(np.clip(demand[0], floor, 1.0))
+        ifs = tuple(float(np.clip(v, floor, 1.0)) for v in demand[1:])
+        rungs.append(OperatingPoint(ef, max(ifs), shard_slack,
+                                    invoke_fracs=ifs,
+                                    tier_margins=tuple(tier_margins)))
+    rungs.append(OperatingPoint(1.0, 1.0, shard_slack,
+                                invoke_fracs=(1.0,) * n,
+                                tier_margins=tuple(tier_margins)))
+    out: list[OperatingPoint] = []
+    for r in sorted(rungs, key=lambda r: r.cost(n)):
+        if not out or r != out[-1]:
+            out.append(r)
+    return tuple(out)
+
+
+def margins_from_bounds(bounds, base_bound: float,
+                        scale: float = 4.0) -> tuple[float, ...]:
+    """Per-tier exact-logit margins from per-tier error bounds.
+
+    The router was co-trained with labels computed at ``base_bound``, so
+    its logits encode "best approximator beats the bound" at that one
+    quality level.  A tier demanding a TIGHTER bound should win more
+    borderline rows for the exact path (positive margin), a looser one
+    fewer (negative): ``margin = scale * log(base_bound / bound)`` is the
+    monotone log-odds-style map (zero exactly at the trained bound).
+    ``scale`` calibrates logit units per factor-of-e of bound; the
+    margins are traced serve inputs, so recalibrating never recompiles.
+    """
+    assert base_bound > 0
+    return tuple(float(scale * np.log(base_bound / b)) for b in bounds)
+
+
+def default_tier_bounds(base_bound: float,
+                        spread: float = 2.0) -> tuple[float, ...]:
+    """Ascending (tight, base, loose) error-bound rungs bracketing a
+    trained/base quality bound — the server's default QoS tier table."""
+    assert base_bound > 0 and spread > 1.0
+    return (base_bound / spread, base_bound, base_bound * spread)
 
 
 @dataclasses.dataclass

@@ -42,6 +42,14 @@ shard's local stats on one device.  ``mcma_dispatch_sharded`` is the
 ready-made wrapper for flat row batches; the model layers
 (models/approx_ffn.py) embed the engine in their own shard_map instead.
 
+Per-request QoS: quality is a per-ROW runtime value, not a config
+constant.  Every row may carry a tier (``tier``, (T,) int32) indexing a
+TRACED ``(n_tiers,)`` vector of exact-logit margins (``route``): tight
+error bounds bias borderline rows to the exact path, loose bounds hand
+them to their best approximator — one compiled program serves every
+margin setting, and the invoke_stats split routed/dispatched/dropped
+per tier so servers can report served invocation per QoS class.
+
 Plan/execute split: the route -> capacity -> class-sort half of the
 pipeline is ``make_dispatch_plan`` and returns a ``DispatchPlan`` (class
 ids, within-class ranks, the class-sort permutation, keep/slot buffers,
@@ -66,9 +74,25 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 
-def route(logits: jax.Array) -> jax.Array:
-    """Router/classifier logits (T, n+1) -> class ids (T,); 0 = exact."""
-    return jnp.argmax(logits.astype(jnp.float32), -1).astype(jnp.int32)
+def route(logits: jax.Array, tier: jax.Array | None = None,
+          tier_margins: jax.Array | None = None) -> jax.Array:
+    """Router/classifier logits (T, n+1) -> class ids (T,); 0 = exact.
+
+    Per-request QoS: ``tier`` ((T,) int32 in [0, n_tiers)) indexes
+    ``tier_margins`` ((n_tiers,) float32, a TRACED vector — margins change
+    per call without retracing), a per-tier bias added to the EXACT-path
+    logit before the argmax.  A positive margin makes the exact path win
+    ties it would otherwise lose (tighter error bound, less invocation); a
+    negative margin hands borderline rows to their best approximator
+    (looser bound, more invocation).  ``tier=None`` — or any tier whose
+    margin is 0.0 — reproduces the plain argmax bit-for-bit (x + 0.0
+    changes no float comparison), so a uniform default-tier batch routes
+    exactly as the margin-free engine did.
+    """
+    lg = logits.astype(jnp.float32)
+    if tier is not None and tier_margins is not None:
+        lg = lg.at[:, 0].add(tier_margins.astype(jnp.float32)[tier])
+    return jnp.argmax(lg, -1).astype(jnp.int32)
 
 
 def apply_approximator(xb: jax.Array, w1: jax.Array, b1: jax.Array,
@@ -181,11 +205,22 @@ class DispatchPlan:
       dispatched  (n_approx + 1,) post-capacity executed rows per class
       t_total     () int32 active rows
       executed    () int32 rows of compute the executor will launch
+      tier        (T,) int32 per-row QoS tier (zeros when the plan was
+                  built without a tier vector)
+      tier_counts (n_tiers, n_approx + 1) routed rows per tier per class
+                  (sums over tiers to ``counts``)
+      tier_dispatched  (n_tiers, n_approx + 1) post-capacity executed
+                  rows per tier per class (sums over tiers to
+                  ``dispatched`` — capacity is tier-blind arrival order,
+                  the split just attributes the kept rows)
 
-    ``counts``/``dispatched``/``t_total``/``executed`` are psum-reduced
-    GLOBAL totals when the plan is built with ``stats_axes`` inside a
-    shard_map; the row-shaped fields stay shard-local.  Static metadata
-    (pytree aux): ``n_approx``, the capacities, ``block_t``, ``backend``.
+    ``counts``/``dispatched``/``t_total``/``executed`` and the per-tier
+    count matrices are psum-reduced GLOBAL totals when the plan is built
+    with ``stats_axes`` inside a shard_map; the row-shaped fields stay
+    shard-local.  Static metadata (pytree aux): ``n_approx``, the
+    capacities (``invoke_cap`` is an int for the uniform budget or a
+    per-class tuple for asymmetric ones — ``class_caps`` normalizes),
+    ``block_t``, ``backend``, ``n_tiers``.
     """
 
     cls: jax.Array
@@ -200,17 +235,31 @@ class DispatchPlan:
     dispatched: jax.Array
     t_total: jax.Array
     executed: jax.Array
+    tier: jax.Array
+    tier_counts: jax.Array
+    tier_dispatched: jax.Array
     n_approx: int
     exact_cap: int
-    invoke_cap: int
+    invoke_cap: int | tuple
     block_t: int
     backend: str
+    n_tiers: int
+
+    @property
+    def class_caps(self) -> tuple:
+        """Per-class invoke capacities, length ``n_approx`` (normalizes
+        the uniform-int and asymmetric-tuple forms of ``invoke_cap``)."""
+        ic = self.invoke_cap
+        return tuple(ic) if isinstance(ic, (tuple, list)) \
+            else (ic,) * self.n_approx
 
 
 _PLAN_DATA = ("cls", "rank", "eff", "order", "pos", "tile_cls",
               "exact_keep", "exact_slot", "counts", "dispatched",
-              "t_total", "executed")
-_PLAN_META = ("n_approx", "exact_cap", "invoke_cap", "block_t", "backend")
+              "t_total", "executed", "tier", "tier_counts",
+              "tier_dispatched")
+_PLAN_META = ("n_approx", "exact_cap", "invoke_cap", "block_t", "backend",
+              "n_tiers")
 
 jax.tree_util.register_pytree_node(
     DispatchPlan,
@@ -222,21 +271,34 @@ jax.tree_util.register_pytree_node(
 def make_dispatch_plan(logits: jax.Array,
                        row_mask: jax.Array | None = None, *,
                        exact_cap: int | None = None,
-                       invoke_cap: int | None = None,
+                       invoke_cap=None,
                        operating_point=None, backend: str = "xla",
                        block_t: int = 128,
-                       stats_axes: tuple = ()) -> DispatchPlan:
+                       stats_axes: tuple = (),
+                       tier: jax.Array | None = None,
+                       tier_margins: jax.Array | None = None,
+                       n_tiers: int | None = None) -> DispatchPlan:
     """classify -> capacity -> class-sort, once, as a reusable plan.
 
     logits: (T, n_approx + 1) router/classifier scores (class 0 = exact);
     ``row_mask`` marks ACTIVE rows exactly as in ``mcma_dispatch``.
-    Capacities come either from explicit ``exact_cap``/``invoke_cap`` or
-    from an ``operating_point`` (runtime/autotune.OperatingPoint, applied
-    to this batch's row count via sharding/rules.shard_capacity).
-    ``stats_axes`` psum-reduces the count fields to global totals when
-    building inside a shard_map — build and consume the plan inside the
-    same shard_map region (sharding/rules.dispatch_plan_specs describes
-    how its fields shard between the two).
+    Capacities come either from explicit ``exact_cap``/``invoke_cap``
+    (``invoke_cap`` is an int shared by every class or a length-n_approx
+    tuple of asymmetric per-class budgets) or from an ``operating_point``
+    (runtime/autotune.OperatingPoint, applied to this batch's row count
+    via sharding/rules.shard_capacity; its ``invoke_fracs`` yield the
+    per-class form).  ``stats_axes`` psum-reduces the count fields to
+    global totals when building inside a shard_map — build and consume
+    the plan inside the same shard_map region
+    (sharding/rules.dispatch_plan_specs describes how its fields shard
+    between the two).
+
+    Per-request QoS: ``tier`` ((T,) int32) + ``tier_margins`` ((n_tiers,)
+    float32, TRACED — one compiled program serves every margin setting)
+    replace the plain argmax with the tier-indexed exact-logit margin
+    (see ``route``), and the plan's ``tier_counts``/``tier_dispatched``
+    split the routed/executed rows per tier.  ``tier=None`` keeps the
+    margin-free routing bit-for-bit and records everything as tier 0.
     """
     t = logits.shape[0]
     n = logits.shape[-1] - 1
@@ -246,23 +308,55 @@ def make_dispatch_plan(logits: jax.Array,
             "pass capacities OR an operating_point, not both"
         exact_cap = shard_capacity(t, operating_point.exact_frac,
                                    slack=operating_point.shard_slack)
-        invoke_cap = shard_capacity(t, operating_point.invoke_frac,
-                                    slack=operating_point.shard_slack)
-    cls = route(logits)
+        if operating_point.invoke_fracs:
+            invoke_cap = tuple(
+                shard_capacity(t, f, slack=operating_point.shard_slack)
+                for f in operating_point.class_fracs(n))
+        else:
+            invoke_cap = shard_capacity(t, operating_point.invoke_frac,
+                                        slack=operating_point.shard_slack)
+    if isinstance(invoke_cap, list):
+        invoke_cap = tuple(invoke_cap)      # hashable pytree meta
+    class_caps = tuple(invoke_cap) if isinstance(invoke_cap, tuple) \
+        else (int(invoke_cap),) * n
+    assert len(class_caps) == n, (
+        f"per-class invoke_cap tuple (len {len(class_caps)}) must carry "
+        f"one budget per approximator (n_approx={n})")
+
+    # tier bookkeeping: the static tier count comes from the margins
+    # vector (or the explicit n_tiers override); tier-less plans carry a
+    # single tier 0 so the per-tier stats schema is backend- and
+    # caller-independent.  A tier vector without either is refused: the
+    # per-tier bincount would silently drop every tier >= 1 row (and no
+    # margin would apply), corrupting the QoS stats instead of failing.
+    assert tier is None or tier_margins is not None or n_tiers is not None, \
+        "tiered dispatch needs the (n_tiers,) tier_margins vector (or an " \
+        "explicit n_tiers) alongside the tier ids"
+    nt = int(tier_margins.shape[0]) if tier_margins is not None \
+        else int(n_tiers or 1)
+    tier_ids = jnp.zeros((t,), jnp.int32) if tier is None \
+        else tier.astype(jnp.int32)
+
+    cls = route(logits, None if tier is None else tier_ids, tier_margins)
     if row_mask is not None:
         mask = row_mask.astype(bool)
         # inactive rows: class 0 so they never claim an approximator rank;
         # the exact keep below additionally excludes them via the mask,
         # and the sentinel class n+1 keeps them out of counts.
         cls = jnp.where(mask, cls, 0)
-        counts = jnp.bincount(jnp.where(mask, cls, n + 1),
-                              length=n + 2)[:n + 1]
+        routed_col = jnp.where(mask, cls, n + 1)
+        counts = jnp.bincount(routed_col, length=n + 2)[:n + 1]
         exact_mask = (cls == 0) & mask
         t_total = jnp.sum(mask.astype(jnp.int32))
     else:
+        routed_col = cls
         counts = jnp.bincount(cls, length=n + 1)
         exact_mask = cls == 0
         t_total = jnp.asarray(t, jnp.int32)
+    # per-tier routed split (sentinel column n+1 absorbs inactive rows)
+    tier_counts = jnp.bincount(tier_ids * (n + 2) + routed_col,
+                               length=nt * (n + 2)) \
+        .reshape(nt, n + 2)[:, :n + 1]
 
     # approximator side: capacity first, then the single-class-tile sort
     # of the effective classes (kept rows keep cls-1; exact/over-capacity/
@@ -272,7 +366,8 @@ def make_dispatch_plan(logits: jax.Array,
     # placeholders of the same shapes instead of paying a dead argsort —
     # the plan SCHEMA is backend-independent, the sort work is not.
     rank = _rank_in_class(cls, n + 1)
-    kept = (cls > 0) & (rank < invoke_cap)
+    cap_of = jnp.asarray((0,) + class_caps, jnp.int32)
+    kept = (cls > 0) & (rank < cap_of[cls])
     eff = jnp.where(kept, cls - 1, n).astype(jnp.int32)
     if backend == "pallas":
         order, pos, tile_cls, _, _ = ops.class_sort_plan(eff, n + 1, block_t)
@@ -286,8 +381,15 @@ def make_dispatch_plan(logits: jax.Array,
     exact_keep = exact_mask & (epos < exact_cap)
     exact_slot = jnp.where(exact_keep, epos, exact_cap)
 
-    caps = jnp.asarray([exact_cap] + [invoke_cap] * n, counts.dtype)
+    caps = jnp.asarray([exact_cap, *class_caps], counts.dtype)
     dispatched = jnp.minimum(counts, caps)
+    # per-tier dispatched split: capacity keeps rows by tier-blind arrival
+    # rank, so attributing the KEPT rows (exact_keep | kept) to their tier
+    # sums back to ``dispatched`` per class exactly
+    disp_col = jnp.where(exact_keep | kept, cls, n + 1)
+    tier_dispatched = jnp.bincount(tier_ids * (n + 2) + disp_col,
+                                   length=nt * (n + 2)) \
+        .reshape(nt, n + 2)[:, :n + 1]
     if backend == "pallas":
         # the kernel launches the full static worst-case grid (including
         # trailing zero tiles past the occupied region) — n+1 classes
@@ -295,7 +397,7 @@ def make_dispatch_plan(logits: jax.Array,
         executed = jnp.asarray(
             exact_cap + ops.worst_case_rows(t, n + 1, block_t), jnp.int32)
     elif backend == "xla":
-        executed = jnp.asarray(exact_cap + n * invoke_cap, jnp.int32)
+        executed = jnp.asarray(exact_cap + sum(class_caps), jnp.int32)
     else:
         raise ValueError(f"unknown dispatch backend: {backend!r}")
     if stats_axes:
@@ -307,13 +409,18 @@ def make_dispatch_plan(logits: jax.Array,
         counts = jax.lax.psum(counts, ax)
         dispatched = jax.lax.psum(dispatched, ax)
         executed = jax.lax.psum(executed, ax)
+        tier_counts = jax.lax.psum(tier_counts, ax)
+        tier_dispatched = jax.lax.psum(tier_dispatched, ax)
     return DispatchPlan(cls=cls, rank=rank, eff=eff, order=order, pos=pos,
                         tile_cls=tile_cls, exact_keep=exact_keep,
                         exact_slot=exact_slot, counts=counts,
                         dispatched=dispatched, t_total=t_total,
-                        executed=executed, n_approx=n, exact_cap=exact_cap,
+                        executed=executed, tier=tier_ids,
+                        tier_counts=tier_counts,
+                        tier_dispatched=tier_dispatched,
+                        n_approx=n, exact_cap=exact_cap,
                         invoke_cap=invoke_cap, block_t=block_t,
-                        backend=backend)
+                        backend=backend, n_tiers=nt)
 
 
 def plan_invoke_stats(plan: DispatchPlan) -> dict:
@@ -327,6 +434,7 @@ def plan_invoke_stats(plan: DispatchPlan) -> dict:
     # the 1.0 that 1 - 0/1 would claim for a fully idle batch
     invocation = jnp.where(plan.t_total > 0, 1.0 - exact_frac, 0.0) \
         .astype(jnp.float32)
+    tier_rows = jnp.sum(plan.tier_counts, -1)
     return {
         "class_counts": plan.counts,
         "dispatched": plan.dispatched,
@@ -336,6 +444,17 @@ def plan_invoke_stats(plan: DispatchPlan) -> dict:
         "executed_rows": plan.executed,
         "padding_rows": plan.executed
         - jnp.sum(plan.dispatched).astype(jnp.int32),
+        # per-tier QoS split (tier 0 only on tier-less plans): routed /
+        # post-capacity per class, dropped rows, and the SERVED invocation
+        # per tier — approximator rows actually executed over that tier's
+        # active rows, the quantity a loose error bound buys more of
+        "tier_counts": plan.tier_counts,
+        "tier_dispatched": plan.tier_dispatched,
+        "tier_dropped": jnp.sum(plan.tier_counts - plan.tier_dispatched,
+                                -1),
+        "tier_served_invocation": (
+            jnp.sum(plan.tier_dispatched[:, 1:], -1)
+            / jnp.maximum(tier_rows, 1)).astype(jnp.float32),
     }
 
 
@@ -365,7 +484,7 @@ def execute_dispatch(plan: DispatchPlan, x: jax.Array,
 
     if plan.backend == "xla":
         d_out = out.shape[-1]
-        for i in range(n):
+        for i, cap_i in enumerate(plan.class_caps):
             if weights_prepadded:
                 # logical views of the padded stacks; padded regions are
                 # exact zeros, so the sliced math is unchanged
@@ -378,9 +497,9 @@ def execute_dispatch(plan: DispatchPlan, x: jax.Array,
                 def approx_i(xb, i=i):
                     return apply_approximator(xb, a_w1[i], a_b1[i],
                                               a_w2[i], a_b2[i])
-            keep = (plan.cls == i + 1) & (plan.rank < plan.invoke_cap)
-            slot = jnp.where(keep, plan.rank, plan.invoke_cap)
-            xb = scatter_rows(x, slot, keep, plan.invoke_cap)
+            keep = (plan.cls == i + 1) & (plan.rank < cap_i)
+            slot = jnp.where(keep, plan.rank, cap_i)
+            xb = scatter_rows(x, slot, keep, cap_i)
             out = out + gather_rows(approx_i(xb), slot, keep)
     else:  # pallas — validated by make_dispatch_plan
         # one grouped kernel launch over ALL rows on the plan's precomputed
@@ -406,10 +525,12 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
                   exact_fn: Callable[[jax.Array], jax.Array],
                   a_w1: jax.Array, a_b1: jax.Array,
                   a_w2: jax.Array, a_b2: jax.Array, *,
-                  exact_cap: int, invoke_cap: int, backend: str = "xla",
+                  exact_cap: int, invoke_cap, backend: str = "xla",
                   block_t: int = 128, interpret: bool = False,
                   stats_axes: tuple = (), row_mask: jax.Array | None = None,
-                  weights_prepadded: bool = False):
+                  weights_prepadded: bool = False,
+                  tier: jax.Array | None = None,
+                  tier_margins: jax.Array | None = None):
     """Full MCMA invocation pipeline over a flat row batch.
 
     x: (T, d); logits: (T, n_approx+1) router scores (class 0 = exact);
@@ -439,6 +560,14 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
     feature dims lane-padded), so the Pallas path ships them to the kernel
     with zero per-call copies and the XLA oracle slices logical views.
 
+    ``tier``/``tier_margins``: per-request QoS (see ``route`` /
+    ``make_dispatch_plan``) — the per-row tier indexes a traced per-tier
+    exact-logit margin, and the returned stats gain the per-tier
+    ``tier_counts``/``tier_dispatched``/``tier_dropped``/
+    ``tier_served_invocation`` split.  ``invoke_cap`` may be a per-class
+    tuple (asymmetric capacities, e.g. from
+    runtime/autotune.ladder_from_counts).
+
     Returns ``(y, invoke_stats)`` with y: (T, d_out) in the original row
     order and invoke_stats a dict of jnp scalars/vectors:
 
@@ -465,7 +594,8 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
         "prepadded stacks must come from ops.prepad_switched_weights")
     plan = make_dispatch_plan(logits, row_mask, exact_cap=exact_cap,
                               invoke_cap=invoke_cap, backend=backend,
-                              block_t=block_t, stats_axes=stats_axes)
+                              block_t=block_t, stats_axes=stats_axes,
+                              tier=tier, tier_margins=tier_margins)
     out = execute_dispatch(plan, x, exact_fn, a_w1, a_b1, a_w2, a_b2,
                            interpret=interpret,
                            weights_prepadded=weights_prepadded)
@@ -477,11 +607,13 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
                           exact_params,
                           a_w1: jax.Array, a_b1: jax.Array,
                           a_w2: jax.Array, a_b2: jax.Array, *,
-                          exact_cap: int, invoke_cap: int,
+                          exact_cap: int, invoke_cap,
                           backend: str = "xla", block_t: int = 128,
                           interpret: bool = False, data_axes=None,
                           row_mask: jax.Array | None = None,
-                          weights_prepadded: bool = False):
+                          weights_prepadded: bool = False,
+                          tier: jax.Array | None = None,
+                          tier_margins: jax.Array | None = None):
     """``mcma_dispatch`` shard_mapped over a mesh's data axes.
 
     x/logits are row-sharded over the data axes (specs from
@@ -493,7 +625,10 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
     through shard_map as an explicit (replicated) argument rather than a
     closure.  ``row_mask`` (optional, (T,) bool, row-sharded like x) marks
     active rows; inactive rows are excluded from dispatch and from the
-    psum-reduced stats on every shard.
+    psum-reduced stats on every shard.  ``tier`` (optional, (T,) int32,
+    row-sharded like x) + ``tier_margins`` ((n_tiers,) float32,
+    replicated) apply the per-request QoS margins per shard; the per-tier
+    stats are psum-reduced like every other count.
 
     Returns ``(y, invoke_stats)``: y row-sharded like x, invoke_stats
     psum-reduced to the global totals (replicated on every shard).
@@ -502,20 +637,29 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
     from repro.sharding.rules import dp_axes, mcma_dispatch_specs
     dp = tuple(data_axes) if data_axes is not None else dp_axes(mesh)
     specs = mcma_dispatch_specs(mesh, data_axes=dp,
-                                with_mask=row_mask is not None)
+                                with_mask=row_mask is not None,
+                                with_tier=tier is not None)
+    has_mask, has_tier = row_mask is not None, tier is not None
 
-    def local(x_l, lg_l, ep, w1, b1, w2, b2, *m_l):
+    def local(x_l, lg_l, ep, w1, b1, w2, b2, *extra):
+        extra = list(extra)
+        m_l = extra.pop(0) if has_mask else None
+        t_l, tm = (extra.pop(0), extra.pop(0)) if has_tier else (None, None)
         return mcma_dispatch(
             x_l, lg_l, partial(exact_fn, ep), w1, b1, w2, b2,
             exact_cap=exact_cap, invoke_cap=invoke_cap, backend=backend,
             block_t=block_t, interpret=interpret, stats_axes=dp,
-            row_mask=m_l[0] if m_l else None,
-            weights_prepadded=weights_prepadded)
+            row_mask=m_l, weights_prepadded=weights_prepadded,
+            tier=t_l, tier_margins=tm)
 
     fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
                           out_specs=specs["out"],
                           axis_names=frozenset(dp), check=False)
     args = (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2)
-    if row_mask is not None:
+    if has_mask:
         args = args + (row_mask,)
+    if has_tier:
+        assert tier_margins is not None, \
+            "sharded tiered dispatch needs the (n_tiers,) margins vector"
+        args = args + (tier, tier_margins)
     return fn(*args)

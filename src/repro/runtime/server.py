@@ -30,6 +30,11 @@ class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,) int32
     max_new: int = 32
+    # per-request QoS: the requested relative-error bound (validated and
+    # quantized onto the server's tier table at submit time), or a tier
+    # index directly.  None = the deployment's default tier.
+    error_bound: float | None = None
+    tier: int | None = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -40,9 +45,51 @@ class DecodeServer:
                  seed: int = 0, use_mcma_dispatch: bool = False,
                  mesh=None, autotune=None, drop_budget: float = 0.05,
                  autotune_kwargs: dict | None = None,
-                 route_scope: str | None = None):
+                 route_scope: str | None = None,
+                 qos_tiers=None, qos_app: str | None = None,
+                 qos_margin_scale: float = 4.0):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len, self.eos = batch, max_len, eos
+        # qos_tiers: per-request error-bound tiers.  True -> the default
+        # (tight, trained, loose) table bracketing the config's (or the
+        # registry app's) error bound; a tuple of ascending bounds -> that
+        # table.  Each tier maps to an exact-logit router margin
+        # (autotune.margins_from_bounds) that is a TRACED input of the one
+        # compiled decode step — mixing tiers in a batch, or recalibrating
+        # margins, never retraces.  ``qos_app`` names an apps/registry.py
+        # app whose quality.py bound anchors the table and the submit-time
+        # validation.
+        self.tier_bounds = None
+        self.qos_app = None
+        if qos_app is not None:
+            from repro.apps.registry import get_app
+            self.qos_app = get_app(qos_app)
+            if qos_tiers is None:
+                qos_tiers = True
+        if qos_tiers:
+            from repro.runtime import autotune as at
+            assert use_mcma_dispatch, \
+                "per-request QoS tiers route through the dispatch engine; " \
+                "needs use_mcma_dispatch"
+            base = self.qos_app.error_bound if self.qos_app is not None \
+                else cfg.approx.error_bound
+            if qos_tiers is True:
+                qos_tiers = cfg.approx.tier_bounds \
+                    or at.default_tier_bounds(base)
+            self.tier_bounds = tuple(sorted(float(b) for b in qos_tiers))
+            assert self.tier_bounds[0] > 0, self.tier_bounds
+            self.tier_margins = np.asarray(
+                at.margins_from_bounds(self.tier_bounds, base,
+                                       scale=qos_margin_scale), np.float32)
+            # requests without a bound serve at the tier closest to the
+            # bound the router was trained at
+            self.default_tier = int(np.argmin(
+                [abs(b - base) for b in self.tier_bounds]))
+            cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+                cfg.approx, n_tiers=len(self.tier_bounds),
+                tier_bounds=self.tier_bounds,
+                tier_margins=tuple(float(m) for m in self.tier_margins)))
+            self.cfg = cfg
         # route_scope: "tick" routes once per decode tick (one DispatchPlan
         # from the tick-router head, reused by every layer of the scan) —
         # the per-tick metrics the server (and the autotune controller)
@@ -101,6 +148,14 @@ class DecodeServer:
         self.dropped_sum = 0.0       # layer-mean dropped rows over ticks
         self.dispatched_sum = None   # (n+1,) layer-mean dispatched rows
         self.routed_sum = None       # (n+1,) layer-mean routed rows
+        self.routed_history = []     # per-tick (n+1,) routed counts — the
+                                     # ladder_from_counts signal; bounded
+                                     # to the most recent window so a
+                                     # long-lived server never grows
+                                     # memory linearly in ticks
+        self.routed_history_cap = 4096
+        self.tier_routed_sum = None      # (n_tiers, n+1) per-tier routed
+        self.tier_dispatched_sum = None  # (n_tiers, n+1) per-tier served
         self.cache = M.init_cache(cfg, batch, max_len)
         if mesh is not None:
             self.params = self._shard_params(params)
@@ -160,6 +215,46 @@ class DecodeServer:
             return self._active_step()(*args)
 
     def submit(self, req: Request):
+        """Queue a request; per-request QoS is validated HERE, loudly.
+
+        ``req.error_bound`` is checked against the deployment's tier table
+        (anchored on the registry app's quality.py bound when ``qos_app``
+        was given): a bound tighter than the tightest tier cannot be
+        honored and raises, as does a non-positive/non-finite one; a valid
+        bound quantizes onto the largest tier bound <= the request (served
+        at-or-tighter than asked, never looser).  ``req.tier`` selects a
+        tier index directly and must be in range."""
+        if (req.error_bound is not None or req.tier is not None) \
+                and self.tier_bounds is None:
+            raise ValueError(
+                f"request {req.rid} carries a QoS error_bound/tier but this "
+                "server has no tier table — construct DecodeServer("
+                "qos_tiers=...) (or qos_app=...) to serve per-request "
+                "quality")
+        if req.error_bound is not None:
+            eb = float(req.error_bound)
+            lo = self.tier_bounds[0]
+            app = f" (app '{self.qos_app.name}' registry quality bound " \
+                  f"{self.qos_app.error_bound})" if self.qos_app else ""
+            if not np.isfinite(eb) or eb <= 0.0:
+                raise ValueError(f"request {req.rid}: error_bound {eb!r} "
+                                 f"is not a positive finite relative "
+                                 f"error{app}")
+            if eb < lo - 1e-12:
+                raise ValueError(
+                    f"request {req.rid}: error_bound {eb} is tighter than "
+                    f"the tightest served tier {lo} — out of range for "
+                    f"tiers {self.tier_bounds}{app}")
+            # largest tier bound <= the request: at-or-tighter than asked
+            # (a bound looser than every tier clamps to the loosest)
+            req.tier = max(i for i, b in enumerate(self.tier_bounds)
+                           if b <= eb + 1e-12)
+        elif req.tier is not None:
+            if not 0 <= int(req.tier) < len(self.tier_bounds):
+                raise ValueError(
+                    f"request {req.rid}: tier {req.tier} out of range for "
+                    f"{len(self.tier_bounds)} tiers {self.tier_bounds}")
+            req.tier = int(req.tier)
         self.queue.append(req)
 
     def _admit(self):
@@ -199,8 +294,19 @@ class DecodeServer:
             # and its stats inside the step (the free-slot bias fix), so
             # every metric below is exact for the occupied slots only
             mask = jnp.asarray([s is not None for s in self.slots])
-            logits, self.cache, m = self._decode(self.params, self.cache,
-                                                 jnp.asarray(toks), mask)
+            if self.tier_bounds is not None:
+                # per-slot QoS tier vector, riding next to the mask; the
+                # margins vector is a traced input — one compiled step
+                # serves every tier mix
+                tiers = np.asarray(
+                    [self.default_tier if s is None or s.tier is None
+                     else s.tier for s in self.slots], np.int32)
+                logits, self.cache, m = self._decode(
+                    self.params, self.cache, jnp.asarray(toks), mask,
+                    jnp.asarray(tiers), jnp.asarray(self.tier_margins))
+            else:
+                logits, self.cache, m = self._decode(self.params, self.cache,
+                                                     jnp.asarray(toks), mask)
             if "invocation" in m:
                 active = sum(s is not None for s in self.slots)
                 self.invocation_sum += float(m["invocation"]) * active
@@ -213,6 +319,18 @@ class DecodeServer:
                     else self.dispatched_sum + disp
                 self.routed_sum = routed if self.routed_sum is None \
                     else self.routed_sum + routed
+                self.routed_history.append(routed)
+                if len(self.routed_history) > self.routed_history_cap:
+                    del self.routed_history[0]
+                if "tier_counts" in m:
+                    tc = np.asarray(m["tier_counts"], float)
+                    td = np.asarray(m["tier_dispatched"], float)
+                    self.tier_routed_sum = tc \
+                        if self.tier_routed_sum is None \
+                        else self.tier_routed_sum + tc
+                    self.tier_dispatched_sum = td \
+                        if self.tier_dispatched_sum is None \
+                        else self.tier_dispatched_sum + td
                 if self.controller is not None:
                     self.controller.observe(
                         {"class_counts": routed, "dropped": m["dropped_rows"]})
@@ -262,6 +380,42 @@ class DecodeServer:
                 # just routed) — what capacity autotuning maximizes
                 stats["served_invocation_rate"] = \
                     float(self.dispatched_sum[1:].sum()) / total
+            if self.tier_bounds is not None \
+                    and self.tier_routed_sum is not None:
+                # the drain summary's QoS ledger: served invocation and
+                # dropped fraction attributed to each error-bound tier
+                per = []
+                for k, bound in enumerate(self.tier_bounds):
+                    routed_k = self.tier_routed_sum[k]
+                    disp_k = self.tier_dispatched_sum[k]
+                    rows = float(routed_k.sum())
+                    per.append({
+                        "tier": k,
+                        "error_bound": float(bound),
+                        "margin": float(self.tier_margins[k]),
+                        "rows": rows,
+                        "served_invocation_rate":
+                            float(disp_k[1:].sum()) / max(rows, 1.0),
+                        "routed_invocation_rate":
+                            float(routed_k[1:].sum()) / max(rows, 1.0),
+                        "dropped_rows": float((routed_k - disp_k).sum()),
+                        "dropped_frac":
+                            float((routed_k - disp_k).sum()) / max(rows, 1.0),
+                    })
+                stats["per_tier"] = per
         if self.controller is not None:
             stats["autotune"] = self.controller.summary()
         return stats
+
+    def derived_ladder(self, **kwargs):
+        """runtime/autotune.ladder_from_counts over this server's served
+        per-tick ``routed_per_class`` history: capacity rungs whose
+        per-class budgets track the observed class-count quantiles — the
+        asymmetric ladder to deploy for the NEXT run of this mix."""
+        from repro.runtime import autotune as at
+        assert self.routed_history, \
+            "no served invoke stats yet (needs use_mcma_dispatch ticks)"
+        return at.ladder_from_counts(
+            np.asarray(self.routed_history), self.batch,
+            tier_margins=tuple(float(m) for m in self.tier_margins)
+            if self.tier_bounds is not None else (), **kwargs)

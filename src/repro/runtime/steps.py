@@ -142,7 +142,11 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
 
     The returned step takes an optional trailing ``row_mask`` ((B,) bool
     of ACTIVE slots); pass it on partially-full slot tables so idle rows
-    never bias the dispatch stats (the free-slot router-bias fix)."""
+    never bias the dispatch stats (the free-slot router-bias fix).  It
+    also takes optional ``tier`` ((B,) int32 per-slot QoS tier) +
+    ``tier_margins`` ((n_tiers,) float32) — both TRACED inputs, so one
+    compiled step serves every tier mix and margin setting; only the
+    capacity fields of an operating point (shapes) force a recompile."""
     if use_mcma_dispatch:
         cfg = mcma_serve_config(cfg)
     if route_scope is not None:
@@ -155,9 +159,13 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
         pt = operating_point
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
             cfg.approx, exact_frac=pt.exact_frac,
-            invoke_frac=pt.invoke_frac, shard_slack=pt.shard_slack))
+            invoke_frac=pt.invoke_frac, shard_slack=pt.shard_slack,
+            invoke_fracs=tuple(pt.invoke_fracs),
+            tier_margins=tuple(pt.tier_margins) or cfg.approx.tier_margins))
 
-    def decode_step(params, cache, inputs, row_mask=None):
+    def decode_step(params, cache, inputs, row_mask=None, tier=None,
+                    tier_margins=None):
         return M.decode(cfg, params, cache, inputs, serve=True,
-                        collect_metrics=with_stats, row_mask=row_mask)
+                        collect_metrics=with_stats, row_mask=row_mask,
+                        tier=tier, tier_margins=tier_margins)
     return decode_step

@@ -211,63 +211,75 @@ def shard_capacity(t_local: int, frac: float, *, slack: float = 1.0) -> int:
 
 
 def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None,
-                        with_mask: bool = False) -> dict:
+                        with_mask: bool = False,
+                        with_tier: bool = False) -> dict:
     """Specs for ``runtime/dispatch.mcma_dispatch_sharded`` on flat (T, d)
     row batches: x/logits/y row-sharded over the data axes; exact params,
     router logits producer, and the stacked approximator weights
     replicated; invoke_stats replicated out (psum-reduced inside).
-    ``with_mask`` appends the (T,) active-row mask, row-sharded like x."""
+    ``with_mask`` appends the (T,) active-row mask, row-sharded like x;
+    ``with_tier`` appends the (T,) QoS tier vector (row-sharded) plus the
+    (n_tiers,) traced margins vector (replicated — every shard applies
+    the same tier->margin map to its own rows)."""
     dp = tuple(data_axes) if data_axes is not None else _dp_axes(mesh)
     row = P(dp, None)
-    # in: (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2[, row_mask]);
+    # in: (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2[, row_mask]
+    #      [, tier, tier_margins]);
     # P() prefixes cover arbitrary exact_params pytrees.
     ins = (row, row, P(), P(None, None, None), P(None, None),
            P(None, None, None), P(None, None))
     if with_mask:
         ins = ins + (P(dp),)
+    if with_tier:
+        ins = ins + (P(dp), P(None))
     return {"in": ins, "out": (row, P())}
 
 
 def dispatch_plan_specs(mesh: Mesh, like=None, *, data_axes=None,
                         n_approx=None, exact_cap=None, invoke_cap=None,
-                        block_t=None, backend=None):
+                        block_t=None, backend=None, n_tiers=1):
     """PartitionSpecs for a ``runtime/dispatch.DispatchPlan`` built and
     consumed inside the same shard_map region over the data axes.
 
     Row-shaped fields (``cls``/``rank``/``eff``/``order``/``pos``/
-    ``exact_keep``/``exact_slot``) are row-sharded — their values are
-    SHARD-LOCAL indices, which is exactly what re-entering a shard_map
-    with the same row sharding restores; ``tile_cls`` shards its per-shard
-    tile runs the same way; the psum-reduced count fields (``counts``/
-    ``dispatched``/``t_total``/``executed``) are replicated.  Returns a
-    DispatchPlan-of-specs (the spec tree a shard_map in/out position
-    needs), carrying the same static metadata — pass ``like=`` an
-    existing plan to copy its metadata, or give the meta kwargs
+    ``exact_keep``/``exact_slot``/``tier``) are row-sharded — their
+    values are SHARD-LOCAL indices, which is exactly what re-entering a
+    shard_map with the same row sharding restores; ``tile_cls`` shards
+    its per-shard tile runs the same way; the psum-reduced count fields
+    (``counts``/``dispatched``/``t_total``/``executed`` and the per-tier
+    ``tier_counts``/``tier_dispatched`` matrices) are replicated.
+    Returns a DispatchPlan-of-specs (the spec tree a shard_map in/out
+    position needs), carrying the same static metadata — pass ``like=``
+    an existing plan to copy its metadata, or give the meta kwargs
     explicitly when building the out-spec before any plan exists."""
     from repro.runtime.dispatch import DispatchPlan
     if like is not None:
-        n_approx, exact_cap, invoke_cap, block_t, backend = (
+        n_approx, exact_cap, invoke_cap, block_t, backend, n_tiers = (
             like.n_approx, like.exact_cap, like.invoke_cap, like.block_t,
-            like.backend)
+            like.backend, like.n_tiers)
     dp = tuple(data_axes) if data_axes is not None else _dp_axes(mesh)
     row, rep = P(dp), P()
     return DispatchPlan(cls=row, rank=row, eff=row, order=row, pos=row,
                         tile_cls=row, exact_keep=row, exact_slot=row,
                         counts=rep, dispatched=rep, t_total=rep,
-                        executed=rep, n_approx=n_approx,
+                        executed=rep, tier=row, tier_counts=rep,
+                        tier_dispatched=rep, n_approx=n_approx,
                         exact_cap=exact_cap, invoke_cap=invoke_cap,
-                        block_t=block_t, backend=backend)
+                        block_t=block_t, backend=backend, n_tiers=n_tiers)
 
 
-def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None) -> dict:
+def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None,
+                       with_tier: bool = False) -> dict:
     """Specs for the manual ApproxFFN serve path (models/approx_ffn.py):
     exact FFN weights Megatron-TP over "model" + FSDP over the data axes;
     router/approximators replicated (tiny — TP would only buy per-layer
     all-reduces, §Perf C.2); tokens batch-sharded with their (B,)
-    active-slot mask; stats replicated.  ``plan`` (a DispatchPlan, tick
+    active-slot mask; stats replicated.  ``with_tier`` appends the (B,)
+    QoS tier vector (batch-sharded like the mask) and the (n_tiers,)
+    traced margins vector (replicated).  ``plan`` (a DispatchPlan, tick
     scope) swaps the mask+stats plumbing for the precomputed plan: in =
     (weights, x, plan), out = y only (the plan already carries the global
-    stats, so none leave the region)."""
+    stats — and the tier split, so no tier args re-enter)."""
     dp = _dp_axes(mesh)
     ffn = {"w_in": P(dp, "model"), "w_out": P("model", dp)}
     if gated:
@@ -279,8 +291,10 @@ def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None) -> dict:
         return {"in": (weights, P(dp, None, None),
                        dispatch_plan_specs(mesh, plan, data_axes=dp)),
                 "out": P(dp, None, None)}
-    return {"in": (weights, P(dp, None, None), P(dp)),
-            "out": (P(dp, None, None), P())}
+    ins = (weights, P(dp, None, None), P(dp))
+    if with_tier:
+        ins = ins + (P(dp), P(None))
+    return {"in": ins, "out": (P(dp, None, None), P())}
 
 
 def moe_manual_specs(mesh: Mesh, *, gated: bool) -> dict:
