@@ -7,7 +7,7 @@ MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
 .PHONY: test test-tier1 test-multidevice bench-quick bench-dispatch \
 	bench-dispatch-sharded bench-autotune bench-decode-tick bench-qos \
-	bench-ci-dispatch deps
+	bench-ci-dispatch bench-serve bench-serve-sharded deps
 
 deps:
 	$(PY) -m pip install "jax[cpu]" pytest hypothesis
@@ -22,8 +22,9 @@ test:
 # mesh decode + the QoS tier-mix module) + the sharded dispatch microbench
 # on 8 virtual CPU devices
 test-multidevice:
-	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py
+	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py tests/test_serving.py
 	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick --qos
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_serve --quick --devices 8 --n-reqs 6
 
 bench-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only kernels,dispatch
@@ -57,3 +58,13 @@ bench-qos:
 # overwrite it)
 bench-ci-dispatch:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick --qos
+
+# serving-scheduler arrival replay: Poisson/bursty streams, chunked
+# prefill vs token-by-token, p50/p99 TTFT + tokens/sec per offered load;
+# gates chunked==token greedy tokens, chunked TTFT wins on long prompts,
+# and pallas==xla at the server level.  Writes benchmarks/out/serve.csv.
+bench-serve:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_serve --quick
+
+bench-serve-sharded:
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_serve --quick --devices 8 --n-reqs 6

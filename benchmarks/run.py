@@ -23,12 +23,12 @@ def main(argv=None):
                     help="paper-scale dataset sizes (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: paper,errorbound,alloc,distribution,"
-                         "kernels,dispatch,roofline")
+                         "kernels,dispatch,serve,roofline")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_alloc, bench_dispatch, bench_distribution,
                             bench_errorbound, bench_kernels, bench_nablation,
-                            bench_paper)
+                            bench_paper, bench_serve)
 
     if args.quick:
         kw = dict(n_train=2_000, n_test=1_000, epochs=200)
@@ -50,6 +50,7 @@ def main(argv=None):
             epochs=kw["epochs"]),
         "kernels": lambda: bench_kernels.main(),
         "dispatch": lambda: bench_dispatch.main(quick=args.quick),
+        "serve": lambda: bench_serve.main(quick=args.quick),
         "nablation": lambda: bench_nablation.main(
             epochs=min(kw["epochs"], 800)),
         "roofline": _roofline,

@@ -38,6 +38,13 @@ def main(argv=None):
                          "--mcma-dispatch)")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked prefill: S prompt tokens per prefill "
+                         "tick, interleaved with decode (0 = token-by-"
+                         "token reference mode)")
+    ap.add_argument("--admission", choices=("cost", "fifo"), default="cost",
+                    help="queue admission: cost model (prompt length x "
+                         "QoS tier, with aging) or strict FIFO")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(get_config(args.arch))
@@ -51,7 +58,9 @@ def main(argv=None):
     server = DecodeServer(cfg, params, batch=args.batch, max_len=96,
                           use_mcma_dispatch=args.mcma_dispatch,
                           autotune=args.autotune,
-                          qos_tiers=True if args.qos else None)
+                          qos_tiers=True if args.qos else None,
+                          prefill_chunk=args.prefill_chunk,
+                          admission=args.admission)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -75,7 +84,12 @@ def main(argv=None):
     path = ("MCMA-dispatch" if args.mcma_dispatch
             else "approx-FFN" if args.approx else "exact-FFN")
     print(f"\n{done}/{len(reqs)} requests served in {stats['ticks']} ticks "
+          f"({stats['prefill_ticks']} prefill, chunk={server.prefill_chunk}) "
           f"with a {args.batch}-slot table ({path} path)")
+    ttft = [r.first_token_tick - r.arrival_tick for r in reqs
+            if r.first_token_tick is not None]
+    if ttft:
+        print(f"ttft: mean {np.mean(ttft):.1f} ticks, max {max(ttft)}")
     if "invocation_rate" in stats:
         print(f"mean invocation rate (fraction of tokens approximated): "
               f"{stats['invocation_rate']:.3f}")

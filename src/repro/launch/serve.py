@@ -63,6 +63,22 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked prefill: S prompt tokens per prefill "
+                         "tick through the compiled chunk step, "
+                         "interleaved with decode ticks (0 = token-by-"
+                         "token reference mode; non-uniform families "
+                         "fall back automatically)")
+    ap.add_argument("--admission", choices=("cost", "fifo"), default="cost",
+                    help="queue admission: 'cost' = prompt length x QoS "
+                         "tier multiplier with aging (default), 'fifo' = "
+                         "strict arrival order")
+    ap.add_argument("--overflow", choices=("reject", "trim"),
+                    default="reject",
+                    help="submit-time policy when prompt + max_new "
+                         "exceeds max_len: reject loudly (default) or "
+                         "trim the prompt to its last max_len - max_new "
+                         "tokens")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -97,7 +113,9 @@ def main(argv=None):
                           autotune=args.autotune,
                           drop_budget=args.drop_budget,
                           route_scope=args.route_scope,
-                          qos_tiers=qos_tiers, qos_app=args.qos_app)
+                          qos_tiers=qos_tiers, qos_app=args.qos_app,
+                          prefill_chunk=args.prefill_chunk,
+                          admission=args.admission, overflow=args.overflow)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -117,8 +135,17 @@ def main(argv=None):
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens, "
-          f"{stats['ticks']} ticks, {stats['wall_s']:.1f}s "
+          f"{stats['ticks']} ticks ({stats['prefill_ticks']} prefill, "
+          f"chunk={server.prefill_chunk}), {stats['wall_s']:.1f}s "
           f"({toks / max(stats['wall_s'], 1e-9):.1f} tok/s aggregate)")
+    ttft = [r.first_token_tick - r.arrival_tick for r in reqs
+            if r.first_token_tick is not None]
+    if ttft:
+        print(f"ttft: mean {np.mean(ttft):.1f} ticks, "
+              f"max {max(ttft)} ticks")
+    if stats["undrained_queued"] or stats["undrained_inflight"]:
+        print(f"WARNING: undrained — {stats['undrained_queued']} queued, "
+              f"{stats['undrained_inflight']} in flight marked aborted")
     if mesh is not None:
         print(f"mesh: data={args.data} model={args.model} "
               f"({len(jax.devices())} devices, shard_map-native dispatch)")

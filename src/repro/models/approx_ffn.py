@@ -170,6 +170,17 @@ def _default_margins(cfg: ModelConfig) -> jax.Array:
     return jnp.asarray(a.tier_margins or (0.0,) * a.n_tiers, jnp.float32)
 
 
+def _row_mask_tokens(row_mask, s: int):
+    """Normalize an active mask to per-ROW (B*S,) bools.  Accepts the
+    server's per-slot (B,) mask (every token of a slot shares its state)
+    or a chunked-prefill TOKEN mask (B, S) (each slot live only up to its
+    ``n_valid`` tokens this chunk)."""
+    if row_mask is None:
+        return None
+    rm = row_mask.astype(bool)
+    return rm.reshape(-1) if rm.ndim == 2 else jnp.repeat(rm, s)
+
+
 def _tier_args(cfg: ModelConfig, tier, tier_margins, s: int):
     """Normalize the per-slot QoS args for an (B, S) row batch: expand the
     (B,) tier vector to (B*S,) rows and default the margins vector from
@@ -220,6 +231,7 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
         ec, ic = serve_caps(cfg, tl)
         if row_mask is None:
             row_mask = jnp.ones((b,), bool)
+        mask2d = row_mask.ndim == 2
         has_tier = tier is not None
         if has_tier and tier_margins is None:
             tier_margins = _default_margins(cfg)
@@ -231,13 +243,14 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
             lg = jnp.dot(xt, rt.astype(xt.dtype)).astype(jnp.float32)
             t_l, tm = qos if qos else (None, None)
             return make_dispatch_plan(
-                lg, jnp.repeat(m_l.astype(bool), sl), exact_cap=ec,
+                lg, _row_mask_tokens(m_l, sl), exact_cap=ec,
                 invoke_cap=ic, backend=a.backend, block_t=a.block_t,
                 stats_axes=dp,
                 tier=None if t_l is None else jnp.repeat(t_l, sl),
                 tier_margins=tm)
 
-        in_specs = (P(None, None), P(dp, None, None), P(dp))
+        in_specs = (P(None, None), P(dp, None, None),
+                    P(dp, None) if mask2d else P(dp))
         args = (router, x, row_mask)
         if has_tier:
             in_specs = in_specs + (P(dp), P(None))
@@ -253,7 +266,7 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
 
     xt = x.reshape(t, d)
     logits = jnp.dot(xt, router.astype(xt.dtype)).astype(jnp.float32)
-    rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
+    rm = _row_mask_tokens(row_mask, s)
     tr, tier_margins = _tier_args(cfg, tier, tier_margins, s)
     ec, ic = serve_caps(cfg, t)
     return make_dispatch_plan(
@@ -316,7 +329,7 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
         stats = plan_invoke_stats(plan)
     else:
         xt = x.reshape(t, d)
-        rm = None if row_mask is None else jnp.repeat(row_mask.astype(bool), s)
+        rm = _row_mask_tokens(row_mask, s)
         tr, tier_margins = _tier_args(cfg, tier, tier_margins, s)
         ec, ic = serve_caps(cfg, t)
         logits = jnp.dot(xt, p["router"].astype(x.dtype)).astype(jnp.float32)
@@ -407,10 +420,11 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
         stats = plan_invoke_stats(plan)
     else:
         has_tier = tier is not None
-        specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"],
-                                   with_tier=has_tier)
         if row_mask is None:
             row_mask = jnp.ones((b,), bool)
+        specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"],
+                                   with_tier=has_tier,
+                                   mask2d=row_mask.ndim == 2)
         if has_tier and tier_margins is None:
             tier_margins = _default_margins(cfg)
 
@@ -418,7 +432,7 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
             bl, sl, _ = x_loc.shape
             tl = bl * sl
             xt = x_loc.reshape(tl, d)
-            rm = jnp.repeat(m_loc.astype(bool), sl)
+            rm = _row_mask_tokens(m_loc, sl)
             t_l, tm = qos if qos else (None, None)
             ec, ic = serve_caps(cfg, tl)
             logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype)) \

@@ -222,11 +222,48 @@ def flash_attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
     return o.swapaxes(0, 1).reshape(b, sq, h, hd)
 
 
+def _attention_chunk(cfg: ModelConfig, q, k, v, cache):
+    """Chunked-prefill attention against the DECODE cache layout.
+
+    q/k/v: (B, S, ·, hd) — S prompt tokens per slot, each slot at its own
+    sequence offset ``cache["pos"]`` with ``cache["n_valid"]`` (B,) real
+    tokens this chunk (the tail is padding).  Writes are a per-slot scatter
+    with ``mode="drop"``: padded tokens and any index at/past the cache end
+    write NOWHERE, so the cache can never be clamp-corrupted by an
+    oversized prompt — the overflow family's model-level guarantee.  The
+    causal mask is per-query (kpos <= pos + i), so a chunk's logits match
+    feeding its tokens one decode tick at a time.  Returns (out, new_cache)
+    with ``pos`` advanced by ``n_valid``.
+    """
+    b, sq = q.shape[0], q.shape[1]
+    pos, nv = cache["pos"], cache["n_valid"]
+    skv = cache["k"].shape[1]
+    off = jnp.arange(sq)
+    tok_ok = off[None, :] < nv[:, None]                     # (B, Sq)
+    idx = jnp.where(tok_ok, pos[:, None] + off[None, :], skv)
+    write = jax.vmap(lambda c, new, i: c.at[i].set(new, mode="drop"))
+    ck = write(cache["k"], k.astype(cache["k"].dtype), idx)
+    cv = write(cache["v"], v.astype(cache["v"].dtype), idx)
+    qpos = pos[:, None] + off[None, :]                      # (B, Sq)
+    valid = jnp.arange(skv)[None, None, :] <= qpos[:, :, None]  # (B, Sq, Skv)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, sq, cfg.n_kv_heads, rep, cfg.hd)
+    s_ = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ck).astype(jnp.float32) \
+        * cfg.hd ** -0.5
+    s_ = jnp.where(valid[:, None, None, :, :], s_, -1e30)
+    w = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", w, cv)
+    o = o.reshape(b, sq, cfg.n_heads, cfg.hd)
+    return o, {"k": ck, "v": cv, "pos": pos + nv}
+
+
 def attention_fwd(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
                   cache: dict | None = None):
     """Self-attention.  Without a cache: full-sequence flash attention
     (train/prefill).  With a cache: single-step decode — update the cache at
-    ``positions`` and attend over it.
+    ``positions`` and attend over it.  A cache carrying ``n_valid`` takes
+    the chunked-prefill path instead (S tokens per slot appended at per-slot
+    offsets; dense caches only — ring buffers feed token-by-token).
 
     Returns (out, new_cache).
     """
@@ -234,6 +271,14 @@ def attention_fwd(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
     q, k, v = _qkv(cfg, p, x)
     q = apply_rope(cfg, q, positions)
     k = apply_rope(cfg, k, positions)
+
+    if cache is not None and "n_valid" in cache:
+        assert not cfg.sliding_window, \
+            "chunked prefill targets dense decode caches; sliding-window " \
+            "ring buffers feed their prompts token-by-token"
+        o, new_cache = _attention_chunk(cfg, q, k, v, cache)
+        o = o.reshape(b, o.shape[1], cfg.n_heads * cfg.hd)
+        return jnp.dot(o, p["wo"].astype(o.dtype)), new_cache
 
     if cache is None:
         o = flash_attention(cfg, q, _repeat_kv(cfg, k), _repeat_kv(cfg, v))

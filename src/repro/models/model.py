@@ -469,7 +469,13 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
         (x, ks, vs), ms = jax.lax.scan(
             body, (x, cache["k"], cache["v"]),
             (params["blocks"], jnp.arange(cfg.n_layers)))
-        new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+        # ``row_mask`` also gates the position advance: a masked slot HOLDS
+        # its sequence offset (its dummy-token KV write at ``pos`` is
+        # overwritten by the slot's next real token), so a chunked-prefill
+        # scheduler can run decode ticks while other slots sit mid-prompt
+        # without corrupting them.  Unmasked rows see pos + 1 exactly.
+        adv = 1 if row_mask is None else row_mask.astype(jnp.int32)
+        new_cache = {"k": ks, "v": vs, "pos": pos + adv}
         if collect_metrics and ms is not None:
             step_metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}
 
@@ -525,6 +531,73 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
     if collect_metrics:
         return logits[:, 0], new_cache, step_metrics
     return logits[:, 0], new_cache
+
+
+def decode_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                 n_valid: jax.Array, *, serve: bool = True,
+                 collect_metrics: bool = False,
+                 row_mask: jax.Array | None = None,
+                 tier: jax.Array | None = None,
+                 tier_margins: jax.Array | None = None):
+    """One chunked-PREFILL step against the decode cache layout.
+
+    tokens: (B, S) int32 — up to S prompt tokens per slot, appended to each
+    slot's cache at its own offset ``cache["pos"]``; ``n_valid`` (B,) int32
+    counts the real tokens per slot this chunk (0 = slot sits this step
+    out entirely; the tail of its row is padding).  Returns
+    ``(new_cache, metrics)`` with ``pos`` advanced by ``n_valid`` per slot.
+
+    No logits: prefill chunks never sample — the next token after the
+    prompt comes from feeding the FINAL prompt token through the regular
+    decode step (bit-identical to token-by-token serving), so the unembed
+    matmul over all S positions is skipped entirely.
+
+    Uniform (dense-attention) family with a dense KV cache only: SSM and
+    hybrid recurrences, and sliding-window ring buffers, consume their
+    prompts token-by-token (the server's scheduler falls back for them).
+    The serve-mode FFN dispatch (and the tick-scope plan) runs on the
+    B*S chunk rows under a TOKEN-level mask — per-slot activity AND the
+    per-token n_valid bound — so padded rows never touch the router,
+    the capacity dispatch, or any invoke stat.
+    """
+    topo = topology(cfg)
+    assert topo.kind == "uniform" and not cfg.sliding_window, \
+        "decode_chunk needs the uniform family with a dense KV cache " \
+        f"(got family={cfg.family!r}, sliding_window={cfg.sliding_window})"
+    b, s = tokens.shape[0], tokens.shape[1]
+    x = L.embed_fwd(cfg, params["embed"], tokens)
+    pos = cache["pos"]                                   # (B,) per-slot
+    positions = pos[:, None] + jnp.arange(s)[None, :]    # (B, S)
+    tok_mask = jnp.arange(s)[None, :] < n_valid[:, None]
+    if row_mask is not None:
+        tok_mask = tok_mask & row_mask.astype(bool)[:, None]
+    plan = None
+    if serve and cfg.approx.enable:
+        if cfg.approx.route_scope == "tick" and not cfg.moe.n_experts:
+            from repro.models.approx_ffn import make_tick_plan
+            plan = make_tick_plan(cfg, params, x, tok_mask, tier=tier,
+                                  tier_margins=tier_margins)
+            tier = tier_margins = None   # the plan embeds the tiers
+
+    def body(carry, blk_i):
+        x, ck, cv = carry
+        blk, i = blk_i
+        lc = {"k": ck[i], "v": cv[i], "pos": pos, "n_valid": n_valid}
+        x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
+                                   row_mask=tok_mask, dispatch_plan=plan,
+                                   tier=tier, tier_margins=tier_margins)
+        m.pop("_label_votes", None)   # train-only co-training signal
+        ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
+        cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)
+        return (x, ck, cv), (m if collect_metrics else None)
+    (_, ks, vs), ms = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.n_layers)))
+    new_cache = {"k": ks, "v": vs, "pos": pos + n_valid.astype(jnp.int32)}
+    metrics: dict[str, jax.Array] = {}
+    if collect_metrics and ms is not None:
+        metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}
+    return new_cache, metrics
 
 
 # ---------------------------------------------------------------------------

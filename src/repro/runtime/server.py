@@ -1,11 +1,27 @@
 """Batched decode server loop (the inference-side driver).
 
-Continuous-batching-lite: a fixed-size slot table (``batch`` concurrent
-sequences); finished sequences (EOS or max_len) free their slot, queued
-requests fill freed slots each tick; one jitted decode step advances every
-active slot per tick.  Prefill for an incoming request runs through the
-same decode step token-by-token when no prefill step is compiled (small
-models), or via prefill_step when one is.
+Continuous batching over a fixed-size slot table (``batch`` concurrent
+sequences): finished sequences (EOS or max_len) free their slot and queued
+requests fill freed slots each tick, admitted by a cost model (prompt
+length x QoS tier, with aging) rather than FIFO.
+
+Prefill is CHUNKED (``prefill_chunk`` = S > 0): a slot consumes its prompt
+S tokens per tick through a compiled (B, S) prefill-chunk step
+(steps.make_prefill_chunk_step) that writes the same decode cache layout,
+and the scheduler interleaves prefill chunks with decode ticks so in-flight
+decodes keep streaming while new prompts load.  Only the FINAL prompt
+token goes through the decode step — so the first sampled token, and every
+decode-phase computation after it, is bit-identical to token-by-token
+serving (``prefill_chunk=0``, the pre-chunking reference mode, still
+available and used by the bench as the TTFT baseline).  Chunking needs the
+uniform (dense-attention) family with a dense KV cache; SSM/hybrid/
+sliding-window models fall back to token-by-token feeding automatically.
+
+The ``max_len`` contract: the cache is a dense ``(batch, max_len)`` ring
+of nothing — positions are absolute, never recycled (dense paged-KV is a
+follow-up).  ``submit()`` enforces ``len(prompt) + max_new <= max_len``
+loudly (or trims the prompt's HEAD under ``overflow="trim"``), and the
+tick loop aborts — never clamp-writes — any slot whose prompt cannot fit.
 
 This is deliberately the same decode_step the dry-run lowers — the serving
 path at scale IS the lowered cell, just driven by this loop.
@@ -37,6 +53,19 @@ class Request:
     tier: int | None = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # set True when the server gave up on the request instead of finishing
+    # it: stranded at run_until_drained(max_ticks) exhaustion, or an
+    # unservable prompt that bypassed submit() validation.  ``done`` stays
+    # False for stranded requests — aborted is the explicit signal.
+    aborted: bool = False
+    # latency bookkeeping (bench_serve's raw TTFT signal).  arrival_* are
+    # stamped at submit(); first_token_* at the tick that sampled the
+    # request's first output token.  Ticks count BOTH phases, so a
+    # prefill-heavy schedule shows up in TTFT-in-ticks directly.
+    arrival_tick: int | None = None
+    first_token_tick: int | None = None
+    arrival_s: float | None = None
+    first_token_s: float | None = None
 
 
 class DecodeServer:
@@ -47,7 +76,10 @@ class DecodeServer:
                  autotune_kwargs: dict | None = None,
                  route_scope: str | None = None,
                  qos_tiers=None, qos_app: str | None = None,
-                 qos_margin_scale: float = 4.0):
+                 qos_margin_scale: float = 4.0,
+                 prefill_chunk: int = 0, admission: str = "cost",
+                 overflow: str = "reject", aging: float = 0.05,
+                 backend: str | None = None):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len, self.eos = batch, max_len, eos
         # qos_tiers: per-request error-bound tiers.  True -> the default
@@ -103,7 +135,10 @@ class DecodeServer:
         # into the decode step, so free slots (fed token 0) are excluded
         # from the router, the capacity dispatch, and every invoke stat —
         # the rates are exact even on a mostly-idle slot table.
+        # ``backend`` overrides the dispatch engine ("pallas" default,
+        # "xla" = the oracle the benches gate the kernel against).
         self.use_mcma_dispatch = use_mcma_dispatch
+        self.backend = backend
         # mesh: distributed deployment.  Params/cache are sharded by the
         # declarative rules (sharding/rules.py) and every decode step is
         # traced under steps.serve_mesh_context, so the serve-mode FFNs run
@@ -112,6 +147,38 @@ class DecodeServer:
         # data-axis size must divide ``batch`` for the manual path to
         # engage.
         self.mesh = mesh
+        # prefill_chunk: S > 0 turns on chunked prefill — prompts load S
+        # tokens per prefill tick through the (B, S) chunk step, leaving
+        # the final prompt token for the decode step (bit-exact first
+        # sample).  0 = token-by-token reference mode.  Non-uniform
+        # families (SSM recurrences, sliding-window ring buffers) cannot
+        # address the cache positionally and silently fall back.
+        topo = M.topology(cfg)
+        self.chunkable = topo.kind == "uniform" and not cfg.sliding_window
+        self.prefill_chunk = int(prefill_chunk) if self.chunkable else 0
+        assert self.prefill_chunk >= 0, prefill_chunk
+        # admission: "cost" (default) admits the cheapest queued request
+        # into each freed slot — cost = prompt_len x tier multiplier -
+        # aging x queue-age-in-ticks.  Longer prompts and TIGHTER tiers
+        # cost more (a tight tier consumes more exact-FFN capacity per
+        # token), so short/loose work is not stuck behind a long premium
+        # prompt; the aging term guarantees no starvation (any request's
+        # cost eventually goes negative).  Ties break FIFO.  "fifo" keeps
+        # strict arrival order.
+        if admission not in ("cost", "fifo"):
+            raise ValueError(f"unknown admission policy: {admission!r} "
+                             "(expected 'cost' or 'fifo')")
+        self.admission = admission
+        self.aging = float(aging)
+        # overflow: submit()-time policy for prompts that cannot fit the
+        # (batch, max_len) cache next to their max_new budget.  "reject"
+        # (default) raises; "trim" keeps the LAST max_len - max_new prompt
+        # tokens (the recency-biased truncation every fixed-window server
+        # ends up with) and serves the request.
+        if overflow not in ("reject", "trim"):
+            raise ValueError(f"unknown overflow policy: {overflow!r} "
+                             "(expected 'reject' or 'trim')")
+        self.overflow = overflow
         # autotune: online capacity adaptation (runtime/autotune.py).
         # True -> the default ladder around cfg's static operating point;
         # a sequence of OperatingPoints -> that ladder.  One decode step
@@ -142,7 +209,10 @@ class DecodeServer:
             self.controller = at.CapacityController(
                 ladder, caps_fn, drop_budget=drop_budget, **kw)
         self._steps = {}             # ladder index -> jitted decode step
+        self._chunk_steps = {}       # ladder index -> jitted chunk step
         self.decode = self._make_step(None)
+        self.chunk = self._make_chunk_step(None) if self.prefill_chunk \
+            else None
         self.invocation_sum = 0.0    # active-slot-weighted invocation sum
         self.active_sum = 0          # total active slots over all ticks
         self.dropped_sum = 0.0       # layer-mean dropped rows over ticks
@@ -156,6 +226,17 @@ class DecodeServer:
         self.routed_history_cap = 4096
         self.tier_routed_sum = None      # (n_tiers, n+1) per-tier routed
         self.tier_dispatched_sum = None  # (n_tiers, n+1) per-tier served
+        # prefill-phase dispatch stats accumulate SEPARATELY: the
+        # invocation rate, the autotune controller, routed_history and the
+        # QoS ledger are decode-phase signals (the paper's metric is the
+        # per-invocation decode rate) — mixing prompt-chunk rows in would
+        # shift all of them with load shape.
+        self.prefill_invocation_sum = 0.0   # token-weighted, chunk ticks
+        self.prefill_tokens = 0             # real prompt tokens chunked
+        self.prefill_ticks = 0
+        # bounded per-tick trace: (phase, tokens processed, invocation or
+        # None) — the decode-phase stat-equality tests replay it
+        self.tick_log: list[tuple] = []
         self.cache = M.init_cache(cfg, batch, max_len)
         if mesh is not None:
             self.params = self._shard_params(params)
@@ -167,6 +248,8 @@ class DecodeServer:
         self.greedy = greedy
         self.ticks = 0
         self._fresh = None  # lazily-built pristine cache for slot resets
+        self._phase_flip = False  # alternates prefill/decode when both ready
+        self._submit_seq = 0      # FIFO tiebreak for cost admission
 
     def _dp_shards(self) -> int:
         if self.mesh is None:
@@ -180,7 +263,15 @@ class DecodeServer:
             steps_lib.make_decode_step(
                 self.cfg, use_mcma_dispatch=self.use_mcma_dispatch,
                 with_stats=self.use_mcma_dispatch, operating_point=point,
-                route_scope=self.route_scope),
+                route_scope=self.route_scope, backend=self.backend),
+            donate_argnums=(1,))
+
+    def _make_chunk_step(self, point):
+        return jax.jit(
+            steps_lib.make_prefill_chunk_step(
+                self.cfg, use_mcma_dispatch=self.use_mcma_dispatch,
+                with_stats=self.use_mcma_dispatch, operating_point=point,
+                route_scope=self.route_scope, backend=self.backend),
             donate_argnums=(1,))
 
     def _active_step(self):
@@ -193,6 +284,18 @@ class DecodeServer:
         if idx not in self._steps:
             self._steps[idx] = self._make_step(self.controller.ladder[idx])
         return self._steps[idx]
+
+    def _active_chunk_step(self):
+        """Chunk-step twin of _active_step: prefill runs at the SAME
+        ladder rung as decode (one dispatch configuration per tick pair),
+        but its stats never feed the controller."""
+        if self.controller is None:
+            return self.chunk
+        idx = self.controller.index
+        if idx not in self._chunk_steps:
+            self._chunk_steps[idx] = self._make_chunk_step(
+                self.controller.ladder[idx])
+        return self._chunk_steps[idx]
 
     def _named_shardings(self, specs):
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -214,8 +317,21 @@ class DecodeServer:
         with steps_lib.serve_mesh_context(self.mesh):
             return self._active_step()(*args)
 
+    def _prefill(self, *args):
+        with steps_lib.serve_mesh_context(self.mesh):
+            return self._active_chunk_step()(*args)
+
     def submit(self, req: Request):
-        """Queue a request; per-request QoS is validated HERE, loudly.
+        """Queue a request; per-request limits and QoS are validated HERE,
+        loudly — nothing that reaches the tick loop can clamp a cache
+        write or wedge a slot.
+
+        Length contract: the prompt must be non-empty and
+        ``len(prompt) + max_new <= max_len`` must hold (every prompt token
+        and every sampled token occupies one cache position; positions are
+        never recycled).  Overlong prompts raise under the default
+        ``overflow="reject"`` policy; ``overflow="trim"`` keeps the LAST
+        ``max_len - max_new`` prompt tokens instead.
 
         ``req.error_bound`` is checked against the deployment's tier table
         (anchored on the registry app's quality.py bound when ``qos_app``
@@ -224,6 +340,29 @@ class DecodeServer:
         bound quantizes onto the largest tier bound <= the request (served
         at-or-tighter than asked, never looser).  ``req.tier`` selects a
         tier index directly and must be in range."""
+        req.prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if req.prompt.size == 0:
+            raise ValueError(f"request {req.rid}: empty prompt — a request "
+                             "must carry at least one prompt token")
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new {req.max_new} "
+                             "must be >= 1")
+        budget = self.max_len - int(req.max_new)
+        if req.prompt.size > budget:
+            if self.overflow == "reject":
+                raise ValueError(
+                    f"request {req.rid}: prompt ({req.prompt.size} tokens) "
+                    f"+ max_new ({req.max_new}) exceeds max_len "
+                    f"({self.max_len}) — the cache is a dense "
+                    f"(batch, max_len) table with no position recycling; "
+                    f"shorten the prompt/max_new or serve with "
+                    f"overflow='trim'")
+            if budget < 1:
+                raise ValueError(
+                    f"request {req.rid}: max_new ({req.max_new}) leaves no "
+                    f"room for any prompt token within max_len "
+                    f"({self.max_len}) — cannot trim")
+            req.prompt = req.prompt[-budget:]   # trim policy: keep the tail
         if (req.error_bound is not None or req.tier is not None) \
                 and self.tier_bounds is None:
             raise ValueError(
@@ -255,12 +394,35 @@ class DecodeServer:
                     f"request {req.rid}: tier {req.tier} out of range for "
                     f"{len(self.tier_bounds)} tiers {self.tier_bounds}")
             req.tier = int(req.tier)
+        req.arrival_tick = self.ticks
+        req.arrival_s = time.time()
+        req._seq = self._submit_seq          # FIFO tiebreak under "cost"
+        self._submit_seq += 1
         self.queue.append(req)
+
+    def _admission_cost(self, req: Request) -> float:
+        """Cost-model admission key: prompt length scaled by the tier's
+        capacity appetite (tight tiers route more rows to the exact FFN,
+        so a tight-tier token is more expensive to serve), minus an aging
+        credit so queue time eventually dominates any length/tier gap."""
+        mult = 1.0
+        if self.tier_bounds is not None and len(self.tier_bounds) > 1:
+            tier = req.tier if req.tier is not None else self.default_tier
+            n = len(self.tier_bounds)
+            mult = 1.0 + 0.5 * (n - 1 - tier) / (n - 1)   # tightest x1.5
+        age = self.ticks - (req.arrival_tick or 0)
+        return float(len(req.prompt)) * mult - self.aging * age
 
     def _admit(self):
         for i in range(self.batch):
             if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
+                if self.admission == "cost":
+                    j = min(range(len(self.queue)),
+                            key=lambda j: (self._admission_cost(self.queue[j]),
+                                           getattr(self.queue[j], "_seq", j)))
+                else:
+                    j = 0
+                req = self.queue.pop(j)
                 self.slots[i] = req
                 self.remaining_prompt[i] = np.asarray(req.prompt, np.int32)
                 if self._fresh is None:
@@ -269,48 +431,103 @@ class DecodeServer:
                         self._fresh = self._shard_cache(self._fresh)
                 self.cache = M.reset_slot(self.cfg, self.cache, self._fresh, i)
 
-    def _gather_tokens(self) -> np.ndarray:
-        toks = np.zeros((self.batch, 1), np.int32)
+    def _abort_unservable(self):
+        """Defensive wedge guard: abort (never clamp-write) any slot whose
+        remaining prompt cannot fit the cache.  Unreachable through
+        submit() validation — this catches requests injected straight into
+        ``queue``/``slots`` (and any future scheduling bug) BEFORE a
+        single out-of-range KV write happens."""
+        pos = None
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not self.remaining_prompt[i].size:
                 continue
+            if pos is None:
+                pos = np.asarray(self.cache["pos"])
+            if int(pos[i]) + self.remaining_prompt[i].size > self.max_len:
+                req.aborted = True
+                req.done = True
+                self.slots[i] = None
+                self.remaining_prompt[i] = np.zeros((0,), np.int32)
+
+    def _tiers_arr(self) -> np.ndarray:
+        return np.asarray(
+            [self.default_tier if s is None or s.tier is None
+             else s.tier for s in self.slots], np.int32)
+
+    def _prefill_rows(self) -> list[int]:
+        """Slots mid-prompt with more than the final token left — the
+        chunk step's work list (the last token always decodes)."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and self.remaining_prompt[i].size > 1]
+
+    def _prefill_tick(self, rows: list[int]):
+        """One chunked-prefill tick: up to S prompt tokens per listed slot
+        into the decode cache; no logits, no sampling.  Slots not listed
+        have n_valid 0 — the chunk step writes nothing for them and their
+        ``pos`` holds."""
+        S = self.prefill_chunk
+        toks = np.zeros((self.batch, S), np.int32)
+        nv = np.zeros((self.batch,), np.int32)
+        for i in rows:
+            n = min(S, self.remaining_prompt[i].size - 1)
+            toks[i, :n] = self.remaining_prompt[i][:n]
+            self.remaining_prompt[i] = self.remaining_prompt[i][n:]
+            nv[i] = n
+        args = [self.params, self.cache, jnp.asarray(toks), jnp.asarray(nv)]
+        if self.use_mcma_dispatch and self.tier_bounds is not None:
+            args += [None, jnp.asarray(self._tiers_arr()),
+                     jnp.asarray(self.tier_margins)]
+        self.cache, m = self._prefill(*args)
+        tokens = int(nv.sum())
+        inv = None
+        if self.use_mcma_dispatch and "invocation" in m:
+            inv = float(m["invocation"])
+            self.prefill_invocation_sum += inv * tokens
+        self.prefill_tokens += tokens
+        self.prefill_ticks += 1
+        self._log_tick("prefill", tokens, inv)
+
+    def _decode_tick(self, rows: list[int]):
+        """One decode tick for the listed slots; every other slot is
+        masked out (its ``pos`` holds — the row's dummy write is
+        overwritten by its next real token)."""
+        toks = np.zeros((self.batch, 1), np.int32)
+        fed_prompt = [False] * self.batch
+        active = [False] * self.batch
+        for i in rows:
+            req = self.slots[i]
+            active[i] = True
             if self.remaining_prompt[i].size:       # prompt-feeding phase
                 toks[i, 0] = self.remaining_prompt[i][0]
                 self.remaining_prompt[i] = self.remaining_prompt[i][1:]
+                fed_prompt[i] = True
             elif req.out:
                 toks[i, 0] = req.out[-1]
             else:
                 toks[i, 0] = req.prompt[-1]
-        return toks
-
-    def tick(self):
-        """One decode step for all active slots."""
-        self._admit()
-        if not any(s is not None for s in self.slots):
-            return False
-        toks = self._gather_tokens()
+        mask = jnp.asarray(active)
         if self.use_mcma_dispatch:
-            # active-slot mask: idle slots are excluded from the dispatch
-            # and its stats inside the step (the free-slot bias fix), so
-            # every metric below is exact for the occupied slots only
-            mask = jnp.asarray([s is not None for s in self.slots])
+            # active-row mask: idle and mid-prefill slots are excluded
+            # from the dispatch and its stats inside the step (the
+            # free-slot bias fix), so every metric below is exact for the
+            # decoding slots only
             if self.tier_bounds is not None:
                 # per-slot QoS tier vector, riding next to the mask; the
                 # margins vector is a traced input — one compiled step
                 # serves every tier mix
-                tiers = np.asarray(
-                    [self.default_tier if s is None or s.tier is None
-                     else s.tier for s in self.slots], np.int32)
                 logits, self.cache, m = self._decode(
                     self.params, self.cache, jnp.asarray(toks), mask,
-                    jnp.asarray(tiers), jnp.asarray(self.tier_margins))
+                    jnp.asarray(self._tiers_arr()),
+                    jnp.asarray(self.tier_margins))
             else:
                 logits, self.cache, m = self._decode(self.params, self.cache,
                                                      jnp.asarray(toks), mask)
+            n_active = sum(active)
+            inv = None
             if "invocation" in m:
-                active = sum(s is not None for s in self.slots)
-                self.invocation_sum += float(m["invocation"]) * active
-                self.active_sum += active
+                inv = float(m["invocation"])
+                self.invocation_sum += inv * n_active
+                self.active_sum += n_active
             if "dropped_rows" in m:
                 self.dropped_sum += float(m["dropped_rows"])
                 disp = np.asarray(m["dispatched"], float)
@@ -334,26 +551,57 @@ class DecodeServer:
                 if self.controller is not None:
                     self.controller.observe(
                         {"class_counts": routed, "dropped": m["dropped_rows"]})
+            self._log_tick("decode", n_active, inv)
         else:
             logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(toks))
+                                              jnp.asarray(toks), mask)
+            self._log_tick("decode", sum(active), None)
         if self.greedy:
             nxt = np.asarray(jnp.argmax(logits, -1))
         else:
             self.key, k = jax.random.split(self.key)
             nxt = np.asarray(jax.random.categorical(k, logits))
         pos = np.asarray(self.cache["pos"])           # (B,) per-slot
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            if self.remaining_prompt[i].size:
+        now = None
+        for i in rows:
+            req = self.slots[i]
+            if fed_prompt[i] and self.remaining_prompt[i].size:
                 continue                              # still consuming prompt
             req.out.append(int(nxt[i]))
+            if req.first_token_tick is None:
+                req.first_token_tick = self.ticks + 1   # tick about to close
+                now = time.time() if now is None else now
+                req.first_token_s = now
             if (self.eos is not None and req.out[-1] == self.eos) \
                     or len(req.out) >= req.max_new \
                     or int(pos[i]) >= self.max_len - 1:
                 req.done = True
                 self.slots[i] = None
+
+    def _log_tick(self, phase: str, tokens: int, invocation):
+        self.tick_log.append((phase, tokens, invocation))
+        if len(self.tick_log) > self.routed_history_cap:
+            del self.tick_log[0]
+
+    def tick(self):
+        """One scheduler tick: admit, then run ONE compiled step — a
+        prefill chunk or a decode step.  When both phases have work the
+        scheduler alternates them, so queued prompts load S tokens per
+        prefill tick while in-flight decodes keep streaming (neither
+        phase can starve the other)."""
+        self._admit()
+        self._abort_unservable()
+        if not any(s is not None for s in self.slots):
+            return False
+        prefill_rows = self._prefill_rows() if self.prefill_chunk else []
+        decode_rows = [i for i, s in enumerate(self.slots)
+                       if s is not None and i not in prefill_rows]
+        if prefill_rows and (not decode_rows or not self._phase_flip):
+            self._phase_flip = True
+            self._prefill_tick(prefill_rows)
+        else:
+            self._phase_flip = False
+            self._decode_tick(decode_rows)
         self.ticks += 1
         return True
 
@@ -363,13 +611,30 @@ class DecodeServer:
                 and self.ticks < max_ticks:
             self.tick()
         stats = {"ticks": self.ticks, "wall_s": time.time() - t0}
+        # tick-budget exhaustion is NOT a quiet success: stranded requests
+        # are marked aborted (done stays False) and counted here, so a
+        # caller can never mistake a truncated drain for a finished one
+        undrained_inflight = sum(s is not None for s in self.slots)
+        for s in self.slots:
+            if s is not None:
+                s.aborted = True
+        for r in self.queue:
+            r.aborted = True
+        stats["undrained_queued"] = len(self.queue)
+        stats["undrained_inflight"] = undrained_inflight
+        stats["prefill_ticks"] = self.prefill_ticks
+        stats["prefill_tokens"] = self.prefill_tokens
         if self.use_mcma_dispatch:
             stats["invocation_rate"] = \
                 self.invocation_sum / max(self.active_sum, 1)
+            if self.prefill_tokens:
+                stats["prefill_invocation_rate"] = \
+                    self.prefill_invocation_sum / self.prefill_tokens
             # the autotuner's objective, observable from server stats:
             # global dropped rows and per-class routed/dispatched counts
             # (layer-mean per tick, summed over ticks; mesh runs report
-            # psum-reduced global totals)
+            # psum-reduced global totals).  Decode-phase only — prefill
+            # chunks report into the prefill_* accumulators above.
             stats["dropped_rows"] = self.dropped_sum
             if self.routed_sum is not None:
                 stats["routed_per_class"] = self.routed_sum.tolist()

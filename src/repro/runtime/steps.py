@@ -86,14 +86,17 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def mcma_serve_config(cfg: ModelConfig) -> ModelConfig:
-    """Serve-mode cfg routing the ApproxFFN through the Pallas weight-switch
-    dispatch engine (runtime/dispatch.py).  Off-TPU the kernel runs in
-    interpreter mode so the same step compiles in CI/CPU runs."""
+def mcma_serve_config(cfg: ModelConfig, *, backend: str | None = None) -> ModelConfig:
+    """Serve-mode cfg routing the ApproxFFN through the MCMA weight-switch
+    dispatch engine (runtime/dispatch.py).  Default backend is the Pallas
+    kernel (interpreter mode off-TPU so the same step compiles in CI/CPU
+    runs); ``backend="xla"`` swaps in the pure-XLA dispatch — the oracle
+    the benches gate the kernel against."""
     assert cfg.approx.enable, "MCMA dispatch requires cfg.approx.enable"
+    backend = backend or "pallas"
     return dataclasses.replace(cfg, approx=dataclasses.replace(
-        cfg.approx, backend="pallas",
-        interpret=jax.default_backend() != "tpu"))
+        cfg.approx, backend=backend,
+        interpret=backend == "pallas" and jax.default_backend() != "tpu"))
 
 
 @contextlib.contextmanager
@@ -119,9 +122,35 @@ def serve_mesh_context(mesh):
         yield mesh
 
 
+def _serve_cfg(cfg: ModelConfig, *, use_mcma_dispatch: bool,
+               operating_point, route_scope: str | None,
+               backend: str | None) -> ModelConfig:
+    """Shared cfg munging for the serve-mode steps (decode + prefill
+    chunk): MCMA backend selection, route-scope override, operating-point
+    capacity replacement.  Both steps MUST come out of the same cfg or
+    the prefill chunk and the decode tick would disagree on dispatch."""
+    if use_mcma_dispatch:
+        cfg = mcma_serve_config(cfg, backend=backend)
+    if route_scope is not None:
+        if route_scope not in ("layer", "tick"):
+            raise ValueError(f"unknown route_scope: {route_scope!r} "
+                             "(expected 'layer' or 'tick')")
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, route_scope=route_scope))
+    if operating_point is not None:
+        pt = operating_point
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, exact_frac=pt.exact_frac,
+            invoke_frac=pt.invoke_frac, shard_slack=pt.shard_slack,
+            invoke_fracs=tuple(pt.invoke_fracs),
+            tier_margins=tuple(pt.tier_margins) or cfg.approx.tier_margins))
+    return cfg
+
+
 def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
                      with_stats: bool = False, operating_point=None,
-                     route_scope: str | None = None):
+                     route_scope: str | None = None,
+                     backend: str | None = None):
     """``use_mcma_dispatch`` swaps the serve-mode FFN engine to the MCMA
     Pallas dispatch; ``with_stats`` makes the step also return the
     layer-meaned dispatch metrics (invocation rate etc.) per tick.
@@ -146,22 +175,13 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
     also takes optional ``tier`` ((B,) int32 per-slot QoS tier) +
     ``tier_margins`` ((n_tiers,) float32) — both TRACED inputs, so one
     compiled step serves every tier mix and margin setting; only the
-    capacity fields of an operating point (shapes) force a recompile."""
-    if use_mcma_dispatch:
-        cfg = mcma_serve_config(cfg)
-    if route_scope is not None:
-        if route_scope not in ("layer", "tick"):
-            raise ValueError(f"unknown route_scope: {route_scope!r} "
-                             "(expected 'layer' or 'tick')")
-        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
-            cfg.approx, route_scope=route_scope))
-    if operating_point is not None:
-        pt = operating_point
-        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
-            cfg.approx, exact_frac=pt.exact_frac,
-            invoke_frac=pt.invoke_frac, shard_slack=pt.shard_slack,
-            invoke_fracs=tuple(pt.invoke_fracs),
-            tier_margins=tuple(pt.tier_margins) or cfg.approx.tier_margins))
+    capacity fields of an operating point (shapes) force a recompile.
+
+    ``backend`` (with ``use_mcma_dispatch``) overrides the dispatch
+    backend: default "pallas", or "xla" for the oracle engine."""
+    cfg = _serve_cfg(cfg, use_mcma_dispatch=use_mcma_dispatch,
+                     operating_point=operating_point,
+                     route_scope=route_scope, backend=backend)
 
     def decode_step(params, cache, inputs, row_mask=None, tier=None,
                     tier_margins=None):
@@ -169,3 +189,40 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
                         collect_metrics=with_stats, row_mask=row_mask,
                         tier=tier, tier_margins=tier_margins)
     return decode_step
+
+
+def make_prefill_chunk_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
+                            with_stats: bool = False, operating_point=None,
+                            route_scope: str | None = None,
+                            backend: str | None = None):
+    """Chunked-prefill step: consume up to S prompt tokens per slot into
+    the SAME decode cache layout ``make_decode_step`` advances, without
+    computing logits (the final prompt token always goes through the
+    decode step, so the first sampled token is bit-identical to
+    token-by-token prefill).
+
+    Signature: ``prefill_chunk_step(params, cache, tokens, n_valid,
+    row_mask=None, tier=None, tier_margins=None) -> (cache, metrics)``
+    with ``tokens`` (B, S) int32 right-padded per row and ``n_valid``
+    (B,) int32 counting real tokens (0 = slot not prefilling this tick —
+    nothing is written for that row).  KV writes use scatter-with-drop
+    indexing, so a row can never clamp-corrupt the last cache position.
+
+    Shares ``_serve_cfg`` with ``make_decode_step`` so both phases run
+    the identical dispatch configuration; chunk-phase dispatch metrics
+    come back under the same keys but must be accumulated SEPARATELY
+    from decode ticks (the autotuner's signal is decode-phase only).
+    Uniform (dense-attention) models only — SSM/hybrid/sliding-window
+    caches are not positionally addressable, the server falls back to
+    token-by-token feeding for those."""
+    cfg = _serve_cfg(cfg, use_mcma_dispatch=use_mcma_dispatch,
+                     operating_point=operating_point,
+                     route_scope=route_scope, backend=backend)
+
+    def prefill_chunk_step(params, cache, tokens, n_valid, row_mask=None,
+                           tier=None, tier_margins=None):
+        return M.decode_chunk(cfg, params, cache, tokens, n_valid,
+                              serve=True, collect_metrics=with_stats,
+                              row_mask=row_mask, tier=tier,
+                              tier_margins=tier_margins)
+    return prefill_chunk_step

@@ -269,14 +269,17 @@ def dispatch_plan_specs(mesh: Mesh, like=None, *, data_axes=None,
 
 
 def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None,
-                       with_tier: bool = False) -> dict:
+                       with_tier: bool = False,
+                       mask2d: bool = False) -> dict:
     """Specs for the manual ApproxFFN serve path (models/approx_ffn.py):
     exact FFN weights Megatron-TP over "model" + FSDP over the data axes;
     router/approximators replicated (tiny — TP would only buy per-layer
     all-reduces, §Perf C.2); tokens batch-sharded with their (B,)
     active-slot mask; stats replicated.  ``with_tier`` appends the (B,)
     QoS tier vector (batch-sharded like the mask) and the (n_tiers,)
-    traced margins vector (replicated).  ``plan`` (a DispatchPlan, tick
+    traced margins vector (replicated).  ``mask2d`` declares the mask as
+    the chunked-prefill TOKEN mask (B, S) — batch-sharded on its leading
+    dim like the tokens it gates.  ``plan`` (a DispatchPlan, tick
     scope) swaps the mask+stats plumbing for the precomputed plan: in =
     (weights, x, plan), out = y only (the plan already carries the global
     stats — and the tier split, so no tier args re-enter)."""

@@ -9,6 +9,6 @@ import sys
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _ROOT = os.path.dirname(_HERE)
 
-for _p in (os.path.join(_ROOT, "src"), _HERE):
+for _p in (os.path.join(_ROOT, "src"), _HERE, _ROOT):
     if _p not in sys.path:
         sys.path.insert(0, _p)

@@ -1,0 +1,352 @@
+"""Serving scheduler: chunked prefill + cost-model admission, and the
+prompt-overflow bugfix family.
+
+Pins, per the PR's acceptance criteria:
+  * submit() rejects empty prompts and prompts that cannot fit
+    ``max_len`` next to their ``max_new`` budget (or trims the prompt's
+    head under ``overflow="trim"``) — no clamped cache writes, no wedged
+    slot;
+  * a request injected past submit() validation (straight into the
+    queue) is ABORTED by the tick loop before any out-of-range KV write,
+    and the slot is freed — the pre-PR behavior was an infinite
+    prompt-feeding loop with silent KV corruption at the last cache
+    position;
+  * ``run_until_drained(max_ticks)`` exhaustion reports
+    ``undrained_queued``/``undrained_inflight`` and marks stranded
+    requests aborted instead of returning quietly;
+  * chunked prefill produces greedy tokens BIT-IDENTICAL to
+    token-by-token serving, and identical decode-phase invoke stats, on
+    1 device and on the 8-virtual-device mesh (the servers run at a
+    no-clip operating point: capacity contention is batch-mix-dependent
+    by design, so the equality contract holds when prefill capacity
+    never binds — docs/serving.md);
+  * a bursty mixed-length mixed-tier arrival replay drains cleanly with
+    the per-tier QoS ledger intact;
+  * cost-model admission orders the queue by prompt length x tier
+    multiplier and ages starved requests to the front.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models import model as M
+from repro.runtime.server import DecodeServer, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def _cfg(**over):
+    cfg = smoke_config(get_config("internlm2-1.8b"))
+    return dataclasses.replace(cfg, approx=dataclasses.replace(
+        cfg.approx, enable=True, **over))
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    key = (cfg.approx.exact_frac, cfg.approx.invoke_frac)
+    if key not in _PARAMS:
+        _PARAMS[key] = M.init_model(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[key]
+
+
+# ---------------------------------------------------------------------------
+# submit-time validation (the overflow / empty-prompt bugfixes)
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_empty_prompt():
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=1, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.submit(Request(rid=0, prompt=np.zeros((0,), np.int32)))
+    assert not srv.queue
+
+
+def test_submit_rejects_prompt_overflow():
+    """A prompt of length max_len + k (and anything whose prompt+max_new
+    cannot fit) is rejected at submit — the regression the pre-chunking
+    loop turned into silent KV corruption plus a wedged slot."""
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=1, max_len=32)
+    for plen in (33, 40, 30):      # max_len + 1, + 8, and 30 + max_new > 32
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            srv.submit(Request(rid=0, prompt=np.ones(plen, np.int32),
+                               max_new=4))
+    with pytest.raises(ValueError, match="max_new"):
+        srv.submit(Request(rid=1, prompt=np.ones(3, np.int32), max_new=0))
+    assert not srv.queue
+    # the boundary case fits exactly and is served
+    r = Request(rid=2, prompt=np.ones(28, np.int32), max_new=4)
+    srv.submit(r)
+    stats = srv.run_until_drained(200)
+    assert r.done and not r.aborted and len(r.out) == 4
+    assert stats["undrained_queued"] == stats["undrained_inflight"] == 0
+
+
+def test_submit_trim_policy_keeps_prompt_tail():
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=1, max_len=32,
+                       overflow="trim")
+    prompt = np.arange(1, 41, dtype=np.int32)          # 40 > 32 - 4
+    r = Request(rid=0, prompt=prompt.copy(), max_new=4)
+    srv.submit(r)
+    assert r.prompt.size == 28                          # max_len - max_new
+    assert (r.prompt == prompt[-28:]).all()             # the TAIL survives
+    srv.run_until_drained(200)
+    assert r.done and not r.aborted and len(r.out) == 4
+
+
+def test_wedge_guard_aborts_queue_injected_overflow():
+    """Bypassing submit() must not wedge the slot table: the tick loop
+    aborts the unservable request BEFORE any clamped cache write, frees
+    the slot, and keeps serving.  Pre-PR this looped forever (the
+    max_len check sat below the prompt-feeding continue)."""
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=1, max_len=32)
+    bad = Request(rid=0, prompt=np.ones(40, np.int32), max_new=4)
+    good = Request(rid=1, prompt=np.ones(5, np.int32), max_new=4)
+    srv.queue.append(bad)                # straight past validation
+    srv.submit(good)
+    stats = srv.run_until_drained(200)
+    assert bad.aborted and bad.done and not bad.out
+    assert good.done and not good.aborted and len(good.out) == 4
+    assert stats["ticks"] < 200          # no infinite prompt-feeding loop
+    assert stats["undrained_queued"] == stats["undrained_inflight"] == 0
+
+
+def test_run_until_drained_reports_stranded_requests():
+    """max_ticks exhaustion is not a quiet success: stranded requests are
+    counted in the stats and marked aborted (done stays False)."""
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=1, max_len=64)
+    reqs = [Request(rid=i, prompt=np.ones(8, np.int32), max_new=8)
+            for i in range(4)]
+    for r in reqs:
+        srv.submit(r)
+    stats = srv.run_until_drained(max_ticks=10)   # enough for ~0 requests
+    assert stats["undrained_queued"] + stats["undrained_inflight"] >= 2
+    stranded = [r for r in reqs if not r.done]
+    assert stranded and all(r.aborted for r in stranded)
+    done = [r for r in reqs if r.done]
+    assert all(not r.aborted for r in done)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill == token-by-token, bit for bit
+# ---------------------------------------------------------------------------
+
+def _mixed_requests(vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = (40, 5, 23, 9, 3)
+    return [Request(rid=i, prompt=rng.integers(1, vocab, n).astype(np.int32),
+                    max_new=5, tier=int(rng.integers(0, 3)))
+            for i, n in enumerate(lens)]
+
+
+def _serve(cfg, *, prefill_chunk, admission, reqs, mesh=None):
+    srv = DecodeServer(cfg, _params(cfg), batch=2, max_len=64,
+                       use_mcma_dispatch=True, route_scope="tick",
+                       qos_tiers=(0.05, 0.10, 0.20), mesh=mesh,
+                       prefill_chunk=prefill_chunk, admission=admission)
+    for r in reqs:
+        srv.submit(r)
+    stats = srv.run_until_drained(1000)
+    return srv, stats
+
+
+def test_chunked_prefill_bitexact_tokens_and_decode_stats():
+    """Same request stream, token-by-token vs chunked: identical greedy
+    tokens per request AND identical decode-phase invoke stats (the
+    chunked run's decode ticks replay the token run's sampling ticks
+    exactly; prefill-chunk stats live in their own accumulators)."""
+    # no-clip operating point: the bit-exactness contract's precondition
+    cfg = _cfg(exact_frac=1.0, invoke_frac=1.0)
+    a = _mixed_requests(cfg.vocab)
+    b = _mixed_requests(cfg.vocab)
+    srv_t, st_t = _serve(cfg, prefill_chunk=0, admission="fifo", reqs=a)
+    srv_c, st_c = _serve(cfg, prefill_chunk=8, admission="fifo", reqs=b)
+    assert all(r.done for r in a + b)
+    for ra, rb in zip(a, b):
+        assert ra.out == rb.out, (ra.rid, ra.out, rb.out)
+    assert st_c["prefill_ticks"] > 0
+    assert st_c["ticks"] < st_t["ticks"]      # chunking saves whole ticks
+    # single-request decode-phase stat equality: batch=1 keeps tick rows
+    # aligned, so the chunked run's decode-tick invocation sequence must
+    # equal the tail of the token run's (from the first sampling tick on)
+    cfg1 = cfg
+    prompt = np.arange(1, 34, dtype=np.int32)
+    outs, logs = [], []
+    for chunk in (0, 8):
+        srv = DecodeServer(cfg1, _params(cfg1), batch=1, max_len=64,
+                           use_mcma_dispatch=True, route_scope="tick",
+                           prefill_chunk=chunk)
+        r = Request(rid=0, prompt=prompt.copy(), max_new=6)
+        srv.submit(r)
+        srv.run_until_drained(200)
+        outs.append(r.out)
+        logs.append(srv.tick_log)
+    assert outs[0] == outs[1]
+    dec_token = [inv for ph, _, inv in logs[0] if ph == "decode"]
+    dec_chunk = [inv for ph, _, inv in logs[1] if ph == "decode"]
+    # token mode: P-1 prompt-feeding ticks + 6 sampling ticks, all
+    # "decode"; chunk mode: only the 6 sampling ticks are "decode"
+    assert len(dec_chunk) == 6
+    assert dec_token[-6:] == dec_chunk, (dec_token[-6:], dec_chunk)
+
+
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8); covered by the CI multidevice leg")
+
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import dataclasses, json
+    import numpy as np
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.configs.registry import get_config, smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.runtime.server import DecodeServer, Request
+
+    cfg = smoke_config(get_config("internlm2-1.8b"))
+    cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+        cfg.approx, enable=True, exact_frac=1.0, invoke_frac=1.0))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    mesh = make_host_mesh(data=2, model=4)
+    rng = np.random.default_rng(0)
+    out = {}
+    for chunk in (0, 8):
+        reqs = [Request(rid=i,
+                        prompt=rng1.integers(1, cfg.vocab, n)
+                        .astype(np.int32), max_new=4, tier=i % 3)
+                for rng1 in [np.random.default_rng(0)]
+                for i, n in enumerate((25, 4, 17))]
+        srv = DecodeServer(cfg, params, batch=2, max_len=64,
+                           use_mcma_dispatch=True, route_scope="tick",
+                           qos_tiers=(0.05, 0.10, 0.20), mesh=mesh,
+                           prefill_chunk=chunk, admission="fifo")
+        for r in reqs:
+            srv.submit(r)
+        stats = srv.run_until_drained(500)
+        out[str(chunk)] = {
+            "tokens": {r.rid: r.out for r in reqs},
+            "done": all(r.done for r in reqs),
+            "prefill_ticks": stats["prefill_ticks"],
+        }
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@needs_8_devices
+def test_chunked_prefill_bitexact_on_mesh_inprocess():
+    """CI multidevice leg: the same equality through the shard_map-native
+    serve path (params/cache sharded, chunk + decode steps under the
+    mesh, psum'd invoke stats)."""
+    from repro.launch.mesh import make_host_mesh
+    cfg = _cfg(exact_frac=1.0, invoke_frac=1.0)
+    mesh = make_host_mesh(data=2, model=4)
+    a = _mixed_requests(cfg.vocab)
+    b = _mixed_requests(cfg.vocab)
+    _, st_t = _serve(cfg, prefill_chunk=0, admission="fifo", reqs=a,
+                     mesh=mesh)
+    _, st_c = _serve(cfg, prefill_chunk=8, admission="fifo", reqs=b,
+                     mesh=mesh)
+    assert all(r.done for r in a + b)
+    for ra, rb in zip(a, b):
+        assert ra.out == rb.out, (ra.rid, ra.out, rb.out)
+    assert st_c["prefill_ticks"] > 0
+
+
+def test_chunked_prefill_bitexact_on_mesh_subprocess():
+    """Same mesh equality via subprocess (8 forced virtual devices), so
+    the single-device tier-1 run still covers the mesh path."""
+    r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=_ENV)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.split("RESULT")[1])
+    assert out["0"]["done"] and out["8"]["done"]
+    assert out["0"]["tokens"] == out["8"]["tokens"]
+    assert out["8"]["prefill_ticks"] > 0
+    assert out["0"]["prefill_ticks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# bursty mixed-tier e2e + admission cost model
+# ---------------------------------------------------------------------------
+
+def test_bursty_mixed_tier_replay_drains():
+    from benchmarks.bench_serve import gen_stream, replay
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=2, max_len=160,
+                       use_mcma_dispatch=True, route_scope="tick",
+                       qos_tiers=(0.05, 0.10, 0.20),
+                       prefill_chunk=16, admission="cost")
+    stream = gen_stream("bursty", 0.25, 8, cfg.vocab, n_tiers=3)
+    assert any(len(a.prompt) >= 64 for a in stream)    # mixed lengths
+    reqs, stats = replay(srv, stream)
+    assert all(r.done and not r.aborted for r in reqs)
+    assert stats["undrained_queued"] == stats["undrained_inflight"] == 0
+    assert stats["prefill_ticks"] > 0
+    assert "per_tier" in stats                          # QoS ledger intact
+    assert sum(p["rows"] for p in stats["per_tier"]) > 0
+
+
+def test_admission_cost_orders_queue():
+    """Cost admission: shorter prompts first; a tighter tier is more
+    expensive (x1.5 at the tightest); aging eventually promotes a
+    starved request over fresher cheaper ones."""
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=1, max_len=64,
+                       use_mcma_dispatch=True,
+                       qos_tiers=(0.05, 0.10, 0.20), aging=0.05)
+    long_loose = Request(rid=0, prompt=np.ones(40, np.int32), tier=2,
+                         max_new=2)
+    short_tight = Request(rid=1, prompt=np.ones(10, np.int32), tier=0,
+                          max_new=2)
+    short_loose = Request(rid=2, prompt=np.ones(10, np.int32), tier=2,
+                          max_new=2)
+    for r in (long_loose, short_tight, short_loose):
+        srv.submit(r)
+    # same length: the loose tier is cheaper than the tight one; both
+    # beat the long prompt
+    costs = {r.rid: srv._admission_cost(r)
+             for r in (long_loose, short_tight, short_loose)}
+    assert costs[2] < costs[1] < costs[0]
+    # aging: a starved request eventually beats a FRESH cheaper one (it
+    # cannot beat its own cohort — equal ages cancel)
+    srv.ticks = int(1 + (costs[0] - costs[2]) / srv.aging)
+    fresh = Request(rid=3, prompt=np.ones(10, np.int32), tier=2, max_new=2)
+    srv.submit(fresh)                       # arrival_tick = srv.ticks
+    assert srv._admission_cost(long_loose) < srv._admission_cost(fresh)
+    srv.queue.remove(fresh)
+    # _admit honors the ordering (slot 0 takes the cheapest: rid 2)
+    srv.ticks = 0
+    srv._admit()
+    assert srv.slots[0] is long_loose or srv.slots[0].rid == 2
+    assert srv.slots[0].rid == 2
+
+
+def test_fifo_admission_preserved():
+    cfg = _cfg()
+    srv = DecodeServer(cfg, _params(cfg), batch=1, max_len=64,
+                       admission="fifo")
+    a = Request(rid=0, prompt=np.ones(30, np.int32), max_new=2)
+    b = Request(rid=1, prompt=np.ones(3, np.int32), max_new=2)
+    srv.submit(a)
+    srv.submit(b)
+    srv._admit()
+    assert srv.slots[0].rid == 0
