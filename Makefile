@@ -7,7 +7,7 @@ MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
 .PHONY: test test-tier1 test-multidevice bench-quick bench-dispatch \
 	bench-dispatch-sharded bench-autotune bench-decode-tick bench-qos \
-	bench-ci-dispatch bench-serve bench-serve-sharded deps
+	bench-library bench-ci-dispatch bench-serve bench-serve-sharded deps
 
 deps:
 	$(PY) -m pip install "jax[cpu]" pytest hypothesis
@@ -22,8 +22,8 @@ test:
 # mesh decode + the QoS tier-mix module) + the sharded dispatch microbench
 # on 8 virtual CPU devices
 test-multidevice:
-	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py tests/test_serving.py
-	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick --qos
+	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py tests/test_serving.py tests/test_library.py
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick --qos --library
 	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_serve --quick --devices 8 --n-reqs 6
 
 bench-quick:
@@ -53,11 +53,19 @@ bench-decode-tick:
 bench-qos:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --qos
 
+# approximator-library residency: 16-member library, 4 resident slots,
+# phase-shifting demand; the ResidencyController-tuned hot set must serve
+# strictly more approximator rows than the static first-4 baseline at the
+# same capacities, pallas==xla at every visited residency set, zero
+# retraces across swaps
+bench-library:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --library
+
 # the CI dispatch.csv artifact leg: base shapes + autotune trajectory +
-# decode-tick + QoS tier-mix rows in ONE csv (separate invocations would
-# overwrite it)
+# decode-tick + QoS tier-mix + library-residency rows in ONE csv
+# (separate invocations would overwrite it)
 bench-ci-dispatch:
-	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick --qos
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick --qos --library
 
 # serving-scheduler arrival replay: Poisson/bursty streams, chunked
 # prefill vs token-by-token, p50/p99 TTFT + tokens/sec per offered load;

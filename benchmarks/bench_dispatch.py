@@ -362,6 +362,166 @@ def _qos_leg(rows, *, quick, devices=1):
             assert f._cache_size() == 1, "tier mix forced a retrace"
 
 
+def _library_leg(rows, *, quick, devices=1):
+    """Approximator-library residency microbench: a 16-member library
+    with 4 resident slots serves a phase-shifting skewed demand mix.
+    The residency-tuned arm (runtime/autotune.ResidencyController) and a
+    static-first-n baseline run the SAME compiled program at the SAME
+    capacities (same drop budget) — the tuned arm must serve strictly
+    more approximator rows once demand shifts onto off-set classes.
+    Pallas is gated against the XLA oracle at every visited residency
+    set, and the whole trajectory must cost ZERO retraces (a swap is a
+    new traced index vector)."""
+    from repro.kernels import ops
+    from repro.runtime.autotune import ResidencyController
+    from repro.runtime.options import LibrarySpec
+    from repro.sharding.rules import shard_capacity
+
+    lib, n_res = 16, 4
+    t = 256 if quick else 1024
+    d, d_h, d_ff, block_t = (128, 32, 256, 64) if quick \
+        else (256, 64, 1024, 128)
+    on_cpu = jax.default_backend() != "tpu"
+    key = jax.random.PRNGKey(29)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32) * 0.5
+    w1 = jax.random.normal(ks[1], (lib, d, d_h)) * 0.2
+    b1 = jnp.zeros((lib, d_h))
+    w2 = jax.random.normal(ks[2], (lib, d_h, d)) * 0.2
+    b2 = jnp.zeros((lib, d))
+    wi = jax.random.normal(ks[3], (d, d_ff)) * 0.1
+    wo = jax.random.normal(ks[4], (d_ff, d)) * 0.1
+    exact_fn = lambda xb: jnp.dot(jax.nn.silu(jnp.dot(xb, wi)), wo)
+    exact_fn_p = lambda ep, xb: jnp.dot(jax.nn.silu(jnp.dot(xb, ep[0])),
+                                        ep[1])
+    W = ops.prepad_switched_weights(w1, b1, w2, b2)   # full library, once
+
+    mesh = jax.make_mesh((devices,), ("data",)) if devices > 1 else None
+    tl = t // devices
+    ec = shard_capacity(tl, 0.5)
+    ic = shard_capacity(tl, 0.3)                      # per resident slot
+
+    fns = {}
+    for backend in ("xla", "pallas"):
+        interp = on_cpu and backend == "pallas"
+        if mesh is None:
+            fns[backend] = jax.jit(
+                lambda xx, lg, rv, be=backend, ip=interp:
+                D.mcma_dispatch(xx, lg, exact_fn, *W, exact_cap=ec,
+                                invoke_cap=ic, backend=be, block_t=block_t,
+                                interpret=ip, weights_prepadded=True,
+                                residency=rv))
+        else:
+            fns[backend] = jax.jit(
+                lambda xx, lg, rv, be=backend, ip=interp:
+                D.mcma_dispatch_sharded(
+                    mesh, xx, lg, exact_fn_p, (wi, wo), *W, exact_cap=ec,
+                    invoke_cap=ic, backend=be, block_t=block_t,
+                    interpret=ip, weights_prepadded=True, residency=rv))
+
+    spec = LibrarySpec(library_size=lib, n_resident=n_res,
+                       observe_window=2, cooldown=2, ema=0.5)
+    ctrl = ResidencyController(spec)
+    static = jnp.arange(n_res, dtype=jnp.int32)
+
+    # three demand phases: hot class starts resident, then demand shifts
+    # onto two off-set classes — the static arm folds the hot traffic
+    # onto the exact path, the tuned arm swaps the hot weights in
+    phases = [(1, 8), (10, 12), (14, 12)] if quick \
+        else [(1, 10), (10, 20), (14, 20)]
+    tuned_acc = np.zeros(2)                           # served approx, dropped
+    static_acc = np.zeros(2)
+    tick = 0
+    tick_ms = []                                      # (post_swap, ms)
+    for hot_cls, ticks in phases:
+        for _ in range(ticks):
+            lg = _skewed_logits(jax.random.fold_in(key, tick), t, lib,
+                                hot_cls + 1, 0.6)
+            resv = jnp.asarray(ctrl.residency, jnp.int32)
+            swaps_before = len(ctrl.history)
+            t0 = time.perf_counter()
+            yx, sx = fns["xla"](x, lg, resv)
+            jax.block_until_ready(yx)
+            ms = (time.perf_counter() - t0) * 1e3
+            yp, sp = fns["pallas"](x, lg, resv)
+            err = float(np.abs(np.asarray(yp) - np.asarray(yx)).max())
+            assert err < 1e-4, \
+                f"pallas-vs-xla divergence at residency " \
+                f"{ctrl.residency}: {err}"
+            # static baseline: same program, the start residency (free —
+            # residency is a traced input, no second compile)
+            ss = sx if tuple(np.asarray(resv)) == tuple(range(n_res)) \
+                else fns["xla"](x, lg, static)[1]
+            tuned_acc += (float(np.asarray(sx["dispatched"])[1:].sum()),
+                          float(sx["dropped"]))
+            static_acc += (float(np.asarray(ss["dispatched"])[1:].sum()),
+                           float(ss["dropped"]))
+            ctrl.observe(jax.tree.map(np.asarray, sx))
+            post_swap = len(ctrl.history) > swaps_before
+            tick_ms.append((post_swap, ms))
+            rows.append({
+                "T": t, "n_approx": n_res, "d_model": d, "backend": "both",
+                "block_t": block_t, "interpret": on_cpu,
+                "devices": devices, "mode": "library",
+                "tick": tick, "library_size": lib,
+                "residency": "/".join(str(c) for c in
+                                      np.asarray(resv).tolist()),
+                "swap_count": len(ctrl.history),
+                "ms_per_call": round(ms, 3),
+                "invocation": round(float(sx["invocation"]), 4),
+                "exact_frac": round(float(sx["exact_frac"]), 4),
+                "dropped": int(sx["dropped"]),
+                "served_invocation": round(
+                    float(np.asarray(sx["dispatched"])[1:].sum())
+                    / max(float(np.asarray(sx["class_counts"]).sum()), 1),
+                    4),
+                "off_set_exact_rows": int(sx["off_set_exact_rows"]),
+                "static_served_invocation": round(
+                    float(np.asarray(ss["dispatched"])[1:].sum())
+                    / max(float(np.asarray(ss["class_counts"]).sum()), 1),
+                    4),
+                "max_abs_err_vs_xla": round(err, 7),
+            })
+            tick += 1
+
+    # swap economics for the CSV/summary: a swap is a traced-index
+    # update, so post-swap ticks must not pay a recompile
+    steady = [m for p, m in tick_ms[1:] if not p]
+    after = [tick_ms[i + 1][1] for i, (p, _) in enumerate(tick_ms[:-1])
+             if p]
+    swap_cost = (float(np.median(after)) - float(np.median(steady))) \
+        if after and steady else 0.0
+    swap_rate = len(ctrl.history) / tick
+    rows.append({
+        "T": t, "n_approx": n_res, "d_model": d, "backend": "both",
+        "block_t": block_t, "interpret": on_cpu, "devices": devices,
+        "mode": "library-summary", "library_size": lib, "tick": tick,
+        "swap_count": len(ctrl.history),
+        "swap_rate": round(swap_rate, 4),
+        "swap_cost_ms": round(swap_cost, 3),
+        "served_invocation": round(tuned_acc[0] / (tick * t), 4),
+        "static_served_invocation": round(static_acc[0] / (tick * t), 4),
+        "dropped": int(tuned_acc[1]),
+        "residency": "/".join(str(c) for c in ctrl.residency),
+    })
+    print(f"library x{devices}: {len(ctrl.history)} swaps over {tick} "
+          f"ticks (rate {swap_rate:.3f}, post-swap cost "
+          f"{swap_cost:+.2f} ms), served approx rows tuned "
+          f"{tuned_acc[0]:.0f} vs static {static_acc[0]:.0f} "
+          f"(dropped {tuned_acc[1]:.0f} vs {static_acc[1]:.0f})",
+          flush=True)
+    # acceptance gates: the tuned arm must win strictly, the demand shift
+    # must actually stress the static set, and NOTHING may have retraced
+    assert len(ctrl.history) >= 2, \
+        "demand phases failed to trigger residency swaps"
+    assert tuned_acc[0] > static_acc[0], \
+        "residency tuning must serve strictly more approximator rows " \
+        "than the static resident set at the same capacities"
+    for backend, f in fns.items():
+        assert f._cache_size() == 1, \
+            f"{backend}: a residency swap forced a retrace"
+
+
 def _sub_jaxprs(eqn):
     """All jaxpr-valued params of an eqn (pjit/scan/remat/pallas bodies)."""
     out = []
@@ -466,7 +626,7 @@ def _decode_tick_leg(rows, *, quick):
 
 def main(quick: bool = False, iters: int | None = None, devices: int = 1,
          autotune: bool = False, decode_tick: bool = False,
-         qos: bool = False):
+         qos: bool = False, library: bool = False):
     os.makedirs(OUT, exist_ok=True)
     on_cpu = jax.default_backend() != "tpu"
     if devices > 1 and len(jax.devices()) < devices:
@@ -556,6 +716,8 @@ def main(quick: bool = False, iters: int | None = None, devices: int = 1,
         _autotune_leg(rows, quick=quick, devices=devices)
     if qos:
         _qos_leg(rows, quick=quick, devices=devices)
+    if library:
+        _library_leg(rows, quick=quick, devices=devices)
     if decode_tick:
         _decode_tick_leg(rows, quick=quick)
 
@@ -588,6 +750,14 @@ if __name__ == "__main__":
                          "(per-tick wall + dynamic sort/scatter op counts; "
                          "asserts 1 class-sort per tick under tick scope "
                          "and pallas==xla at both scopes)")
+    ap.add_argument("--library", action="store_true",
+                    help="add the approximator-library residency leg: a "
+                         "16-member library with 4 resident slots over a "
+                         "phase-shifting skewed mix; the controller-tuned "
+                         "residency must serve strictly more approximator "
+                         "rows than the static first-4 set at the same "
+                         "capacities, pallas==xla at every visited "
+                         "residency set, zero retraces across swaps")
     ap.add_argument("--qos", action="store_true",
                     help="add the per-request QoS tier-mix sweep: mixed "
                          "error-bound batches at several operating points "
@@ -604,4 +774,4 @@ if __name__ == "__main__":
             f" --xla_force_host_platform_device_count={args.devices}").strip()
     main(quick=args.quick, iters=args.iters, devices=args.devices,
          autotune=args.autotune, decode_tick=args.decode_tick,
-         qos=args.qos)
+         qos=args.qos, library=args.library)

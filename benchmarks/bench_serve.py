@@ -156,10 +156,11 @@ def _tokens_by_rid(reqs) -> dict:
 
 
 def main(quick: bool = False, devices: int = 1, chunk: int = 16,
-         n_reqs: int | None = None):
+         n_reqs: int | None = None, base_options=None):
     import jax
     from repro.configs.registry import get_config, smoke_config
     from repro.models import model as M
+    from repro.runtime.options import ServeOptions
     from repro.runtime.server import DecodeServer
 
     os.makedirs(OUT, exist_ok=True)
@@ -193,13 +194,17 @@ def main(quick: bool = False, devices: int = 1, chunk: int = 16,
     processes = ["poisson", "bursty"]
     tiers = (0.05, 0.10, 0.20)
 
+    # the bench's fixed cell geometry overrides whatever the shared CLI
+    # surface supplied; per-mode scheduling knobs land per server below
+    base = base_options or ServeOptions()
+
     def server(mode: str, backend: str | None = None):
-        return DecodeServer(
-            cfg, params, batch=batch, max_len=max_len,
+        return DecodeServer(cfg, params, options=dataclasses.replace(
+            base, batch=batch, max_len=max_len,
             use_mcma_dispatch=True, mesh=mesh, qos_tiers=tiers,
             route_scope="tick", backend=backend,
             prefill_chunk=0 if mode == "token" else chunk,
-            admission="fifo" if mode == "token" else "cost")
+            admission="fifo" if mode == "token" else "cost"))
 
     rows, gated = [], False
     for process in processes:
@@ -265,6 +270,8 @@ def main(quick: bool = False, devices: int = 1, chunk: int = 16,
 
 
 if __name__ == "__main__":
+    from repro.runtime.cli import add_serve_options
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--devices", type=int, default=1,
@@ -273,6 +280,10 @@ if __name__ == "__main__":
     ap.add_argument("--chunk", type=int, default=16,
                     help="prefill chunk size S for the chunked servers")
     ap.add_argument("--n-reqs", type=int, default=None)
+    # the shared serving surface (runtime/cli.py): the bench pins its own
+    # cell geometry (batch/max_len/chunking per mode) but any OTHER knob
+    # registered there reaches the replayed servers via base_options
+    add_serve_options(ap)
     args = ap.parse_args()
     if args.devices > 1 and "host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -280,5 +291,6 @@ if __name__ == "__main__":
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "") +
             f" --xla_force_host_platform_device_count={args.devices}").strip()
+    from repro.runtime.options import ServeOptions
     main(quick=args.quick, devices=args.devices, chunk=args.chunk,
-         n_reqs=args.n_reqs)
+         n_reqs=args.n_reqs, base_options=ServeOptions.from_args(args))

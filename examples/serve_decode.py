@@ -8,6 +8,12 @@ and (optionally) the MCMA ApproxFFN serve path with capacity dispatch.
     PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
     PYTHONPATH=src python examples/serve_decode.py --approx
     PYTHONPATH=src python examples/serve_decode.py --approx --mcma-dispatch
+    PYTHONPATH=src python examples/serve_decode.py --library-size 8 \\
+        --n-resident 2
+
+Serving flags are the shared ``runtime/cli.add_serve_options`` inventory
+folded into a ``ServeOptions`` — the same surface as launch/serve.py and
+benchmarks/bench_serve.py.
 """
 import argparse
 import dataclasses
@@ -17,6 +23,8 @@ import numpy as np
 
 from repro.configs.registry import get_config, smoke_config
 from repro.models import model as M
+from repro.runtime.cli import add_serve_options
+from repro.runtime.options import ServeOptions
 from repro.runtime.server import DecodeServer, Request
 
 
@@ -25,49 +33,27 @@ def main(argv=None):
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--approx", action="store_true",
                     help="serve through the MCMA ApproxFFN capacity path")
-    ap.add_argument("--mcma-dispatch", action="store_true",
-                    help="route the ApproxFFN through the Pallas "
-                         "weight-switch dispatch engine (implies --approx)")
-    ap.add_argument("--autotune", action="store_true",
-                    help="adapt serve capacities online from the served "
-                         "invoke_stats (implies --mcma-dispatch)")
-    ap.add_argument("--qos", action="store_true",
-                    help="per-request QoS: submit a mixed error-bound wave "
-                         "(tight/default/loose tiers in one batch) and "
-                         "report served invocation per tier (implies "
-                         "--mcma-dispatch)")
     ap.add_argument("--requests", type=int, default=10)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prefill-chunk", type=int, default=16,
-                    help="chunked prefill: S prompt tokens per prefill "
-                         "tick, interleaved with decode (0 = token-by-"
-                         "token reference mode)")
-    ap.add_argument("--admission", choices=("cost", "fifo"), default="cost",
-                    help="queue admission: cost model (prompt length x "
-                         "QoS tier, with aging) or strict FIFO")
+    add_serve_options(ap, batch=4, max_len=96)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(get_config(args.arch))
-    if args.autotune or args.qos:
-        args.mcma_dispatch = True
-    if args.approx or args.mcma_dispatch:
+    options = ServeOptions.from_args(args)
+    if args.approx or options.use_mcma_dispatch:
         cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
-            cfg.approx, enable=True))
+            cfg.approx, enable=True,
+            library_size=options.library.library_size
+            if options.library else cfg.approx.library_size))
     assert cfg.input_mode == "tokens", "serve demo expects token models"
     params = M.init_model(jax.random.PRNGKey(0), cfg)
-    server = DecodeServer(cfg, params, batch=args.batch, max_len=96,
-                          use_mcma_dispatch=args.mcma_dispatch,
-                          autotune=args.autotune,
-                          qos_tiers=True if args.qos else None,
-                          prefill_chunk=args.prefill_chunk,
-                          admission=args.admission)
+    server = DecodeServer(cfg, params, options=options)
 
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 20))
         eb = None
-        if args.qos:   # cycle tight / default / loose / unspecified
+        if options.qos_tiers:   # cycle tight / default / loose / unspecified
             eb = (list(server.tier_bounds) + [None])[
                 i % (len(server.tier_bounds) + 1)]
         reqs.append(Request(rid=i,
@@ -81,7 +67,7 @@ def main(argv=None):
         print(f"req {r.rid}: prompt_len={len(r.prompt)} -> "
               f"{len(r.out)} new tokens: {r.out[:8]}...")
     done = sum(r.done for r in reqs)
-    path = ("MCMA-dispatch" if args.mcma_dispatch
+    path = ("MCMA-dispatch" if options.use_mcma_dispatch
             else "approx-FFN" if args.approx else "exact-FFN")
     print(f"\n{done}/{len(reqs)} requests served in {stats['ticks']} ticks "
           f"({stats['prefill_ticks']} prefill, chunk={server.prefill_chunk}) "
@@ -102,6 +88,11 @@ def main(argv=None):
             print(f"tier {p['tier']} (bound {p['error_bound']:.3f}): "
                   f"served invocation {p['served_invocation_rate']:.3f} "
                   f"over {p['rows']:.0f} rows")
+    if "residency" in stats:
+        r = stats["residency"]
+        print(f"residency: final hot set {r['final_residency']} after "
+              f"{r['swap_count']} swaps "
+              f"(off-set exact rows {stats['off_set_exact_rows']:.1f})")
     if "autotune" in stats:
         a = stats["autotune"]
         print(f"autotune: {len(a['switches'])} switches, final point "

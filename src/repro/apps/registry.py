@@ -145,6 +145,26 @@ def get_app(name: str) -> App:
     return APPS[name]
 
 
+def function_zoo(domain: str | None = None,
+                 names: tuple | None = None) -> tuple[App, ...]:
+    """The registry as the approximator-library function zoo.
+
+    A library deployment (runtime/options.LibrarySpec) co-hosts the
+    specialists for many invocation sites; this returns the apps whose
+    kernels make up that zoo, in a stable (sorted-by-name) order so zoo
+    index == library class id is reproducible across runs.  Filter by
+    ``domain`` (e.g. "Signal Processing") or an explicit ``names`` tuple.
+    Sizing rule of thumb: ``LibrarySpec.library_size`` covers the zoo
+    (one or more specialists per app, core/mcma.train_library), while
+    ``n_resident`` tracks however many apps are hot at once."""
+    if names is not None:
+        return tuple(APPS[n] for n in names)
+    apps = sorted(APPS.values(), key=lambda a: a.name)
+    if domain is not None:
+        apps = [a for a in apps if a.domain == domain]
+    return tuple(apps)
+
+
 def make_dataset(app: App, key: jax.Array, n_train: int | None = None,
                  n_test: int | None = None):
     """Generate (x_train, y_train, x_test, y_test) for an app.

@@ -18,6 +18,15 @@ class ApproxConfig:
 
     enable: bool = False
     n_approx: int = 3
+    # approximator-library residency: 0 disables (n_approx approximators,
+    # all resident — the historic engine).  > 0 trains/stores a LIBRARY of
+    # library_size approximators while only n_approx of them occupy the
+    # prepadded weight stacks at any moment: routing happens over the full
+    # library (router/tick-router heads carry library_size + 1 logits), a
+    # runtime residency map folds library classes onto resident slots, and
+    # off-set classes fall back to the exact path until promoted
+    # (runtime/autotune.ResidencyController).  Must be >= n_approx.
+    library_size: int = 0
     d_hidden: int = 256          # approximator hidden width (<< d_ff)
     error_bound: float = 0.10    # relative L2 error vs the exact FFN
     scheme: str = "competitive"  # label scheme for router co-training
@@ -61,6 +70,15 @@ class ApproxConfig:
     route_scope: str = "layer"
     block_t: int = 128           # Pallas dispatch row-tile size
     interpret: bool = False      # Pallas interpreter mode (CPU/CI runs)
+
+    @property
+    def n_live(self) -> int:
+        """Trained approximator count: the library size when a library is
+        configured, else n_approx (the historic all-resident engine).
+        Weight stacks and router/tick-router heads are sized by THIS;
+        capacities and the dispatch plan stay sized by n_approx (the
+        resident slots)."""
+        return self.library_size or self.n_approx
 
 
 @dataclasses.dataclass(frozen=True)

@@ -149,3 +149,103 @@ def train_mcma(app: "App", key: jax.Array, x, y, *, n_approx: int = 3,
         a_params = new_params
 
     return MCMA(app, a_params, c, history, scheme)
+
+
+def _error_clusters(key: jax.Array, x: jax.Array, err: jax.Array,
+                    k: int, iters: int = 10) -> jax.Array:
+    """K-means partition over (inputs, probe-error) features.
+
+    Samples a single global fit serves BADLY cluster together (the error
+    coordinate dominates exactly where the probe struggles), so the
+    specialists a residency deployment needs for rare-but-hard regions
+    exist from round 0 instead of hoping hyper-param diversity finds
+    them.  Returns the (n,) int32 cluster assignment."""
+    xs = (x - x.mean(0)) / jnp.maximum(x.std(0), 1e-6)
+    es = (err - err.mean()) / jnp.maximum(err.std(), 1e-6)
+    z = jnp.concatenate([xs, 2.0 * es[:, None]], -1)
+    mu = z[jax.random.choice(key, z.shape[0], (k,), replace=False)]
+    for _ in range(iters):
+        d = jnp.sum((z[:, None, :] - mu[None]) ** 2, -1)      # (n, k)
+        assign = jnp.argmin(d, -1)
+        onehot = jax.nn.one_hot(assign, k)                    # (n, k)
+        cnt = onehot.sum(0)
+        mu = jnp.where(cnt[:, None] > 0,
+                       (onehot.T @ z) / jnp.maximum(cnt, 1.0)[:, None], mu)
+    return jnp.argmin(jnp.sum((z[:, None, :] - mu[None]) ** 2, -1), -1)
+
+
+def train_library(app: "App", key: jax.Array, x, y, *,
+                  library_size: int = 8, scheme: str = "competitive",
+                  iters: int = 3, epochs: int = 1500, lr: float = 1e-2,
+                  cluster_iters: int = 10) -> MCMA:
+    """Co-train a LIBRARY of approximators — MCMA at library scale.
+
+    ``train_mcma`` trains the handful of approximators a deployment keeps
+    permanently resident; this trains ``library_size`` of them (more than
+    the prepadded weight stacks hold at once) for the residency runtime:
+    routing happens over the full library and a ResidencyController
+    (runtime/autotune.py) hot-swaps which ``n_resident`` occupy the
+    stacks (runtime/options.LibrarySpec).
+
+    Initialization is ERROR-CLUSTERED instead of train_mcma's
+    hyper-param diversification — with 8-16 members, diversified inits
+    collapse onto the same few local minima.  A probe approximator is
+    fit on all data, each sample gets a (whitened input, probe residual
+    error) feature vector, and k-means over those partitions the input
+    space into ``library_size`` territories; each member initializes on
+    its own territory.  The usual competitive/complementary co-training
+    loop then runs with a ``(library_size + 1)``-way classifier.
+
+    Returns an ``MCMA`` whose ``a_params`` has ``library_size`` entries;
+    the serving config carries the same number in
+    ``ApproxConfig.library_size`` (so stacks and router heads are sized
+    by ``n_live``) while ``n_approx`` stays the resident-slot count."""
+    assert scheme in ("competitive", "complementary")
+    assert library_size >= 1
+    aspec = app.approx_spec
+    cspec = app.cls_spec(library_size + 1)
+    keys = jax.random.split(key, library_size + 3)
+    kc, kp, kk, kas = keys[0], keys[1], keys[2], keys[3:]
+
+    # ----- error-clustered initialization ----------------------------------
+    probe = train_mlp(init_mlp(kp, aspec), x, y, aspec, epochs=epochs, lr=lr)
+    probe_err = quality.approx_errors(app, probe, aspec, x, y)
+    assign = _error_clusters(kk, x, probe_err, library_size,
+                             iters=cluster_iters)
+    a_params = []
+    for i in range(library_size):
+        w = (assign == i).astype(jnp.float32)
+        # a starved cluster falls back to a faint global fit (same guard
+        # as train_mcma territories) rather than training on nothing
+        w = jnp.where(jnp.sum(w) < 8, 0.05 * jnp.ones_like(w), w)
+        a = init_mlp(kas[i], aspec, scale=0.3 * (1 + i % 3))
+        a_params.append(train_mlp(a, x, y, aspec, weights=w,
+                                  epochs=epochs, lr=lr))
+
+    label_fn = _labels_complementary if scheme == "complementary" \
+        else _labels_competitive
+    c = init_mlp(kc, cspec)
+    history = []
+    labels = None
+
+    # ----- iterative co-training (same loop shape as train_mcma) -----------
+    for it in range(iters):
+        errs = jnp.stack([quality.approx_errors(app, a, aspec, x, y)
+                          for a in a_params])
+        labels = label_fn(errs, app.error_bound, labels)
+        c = train_mlp(c, x, labels, cspec, loss="xent", epochs=epochs, lr=lr,
+                      weights=_balanced_weights(labels, library_size + 1))
+        pred = jnp.argmax(mlp_logits(c, x, cspec), -1)
+        history.append(float(jnp.mean(pred < library_size)))
+        if it == iters - 1:
+            break
+        new_params = []
+        for i, a in enumerate(a_params):
+            w = ((pred == i).astype(jnp.float32)
+                 + 0.25 * (errs[i] <= app.error_bound).astype(jnp.float32))
+            w = jnp.where(jnp.sum(w) < 8, 0.05 * jnp.ones_like(w), w)
+            new_params.append(train_mlp(a, x, y, aspec, weights=w,
+                                        epochs=epochs, lr=lr))
+        a_params = new_params
+
+    return MCMA(app, a_params, c, history, scheme)

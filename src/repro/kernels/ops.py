@@ -76,6 +76,30 @@ def prepad_switched_weights(w1: jax.Array, b1: jax.Array, w2: jax.Array,
             jnp.pad(b2, ((0, z), (0, d_out_p - d_out))))
 
 
+def gather_resident_stacks(w1: jax.Array, b1: jax.Array, w2: jax.Array,
+                           b2: jax.Array, residency: jax.Array):
+    """Resident view of a LIBRARY weight stack — the runtime hot-set swap.
+
+    The full library lives prepadded (prepad_switched_weights: leading dim
+    ``library_size + 1``, the zero pseudo-class last).  ``residency`` is a
+    TRACED (n_resident,) int32 vector of library ids; this gathers those
+    rows plus the pseudo-class row into ``(n_resident + 1, ...)`` stacks —
+    exactly the serving form ``switched_apply(prepadded=True)`` and the
+    XLA oracle consume.  Resident slot ``i`` serves library class
+    ``residency[i]``; the trailing row stays the zero pseudo-class.
+
+    Because ``residency`` is traced data (never a shape), a promotion/
+    demotion is a new int vector through the SAME compiled program — the
+    shapes-are-static invariant the capacity-autotune ladder exploits,
+    applied to weight residency.  Cost per call: an ``n_resident + 1``-row
+    gather per stack (tiny next to one layer's matmuls).
+    """
+    lib = w1.shape[0] - 1                       # library_size (pseudo last)
+    idx = jnp.concatenate([residency.astype(jnp.int32),
+                           jnp.asarray([lib], jnp.int32)])
+    return w1[idx], b1[idx], w2[idx], b2[idx]
+
+
 def class_sort_plan(cls: jax.Array, n: int, block_t: int):
     """Static-shape plan grouping rows by class into single-class row-tiles.
 

@@ -8,11 +8,19 @@ declarative rules and serve every decode tick through the
 shard_map-native MCMA dispatch when ``--mcma-dispatch`` is on (on 8 CPU
 devices: XLA_FLAGS=--xla_force_host_platform_device_count=8 and
 ``--data 4 --model 2``).
+
+Serving flags come from the shared ``runtime/cli.add_serve_options``
+inventory (one surface with examples/serve_decode.py and
+benchmarks/bench_serve.py) and fold into a ``ServeOptions`` via
+``ServeOptions.from_args`` — only launcher-specific knobs (arch, mesh
+shape, workload) are declared here.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+
+from repro.runtime.cli import add_serve_options
 
 
 def main(argv=None):
@@ -20,109 +28,47 @@ def main(argv=None):
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--approx", action="store_true")
-    ap.add_argument("--mcma-dispatch", action="store_true",
-                    help="serve the ApproxFFN through the Pallas "
-                         "weight-switch dispatch engine (implies --approx)")
-    ap.add_argument("--autotune", action="store_true",
-                    help="adapt serve capacities online from the served "
-                         "invoke_stats (runtime/autotune.py; implies "
-                         "--mcma-dispatch): the controller walks a ladder "
-                         "of precompiled operating points targeting "
-                         "--drop-budget dropped rows at max invocation")
-    ap.add_argument("--drop-budget", type=float, default=0.05,
-                    help="autotune target: max fraction of routed rows "
-                         "dropped over capacity (default 0.05)")
-    ap.add_argument("--route-scope", choices=("layer", "tick"), default=None,
-                    help="MCMA routing granularity at decode: 'tick' makes "
-                         "ONE dispatch plan per tick (tick-router head, "
-                         "reused by every layer of the scan — the paper's "
-                         "per-input decision); 'layer' routes per layer "
-                         "(default: the config's route_scope)")
-    ap.add_argument("--qos", action="store_true",
-                    help="per-request QoS tiers (implies --mcma-dispatch): "
-                         "each request carries an error_bound, validated "
-                         "and quantized onto the tier table at submit "
-                         "time; the request wave mixes tiers and the "
-                         "drain summary reports served invocation + "
-                         "dropped_frac per tier")
-    ap.add_argument("--qos-app", default=None,
-                    help="apps/registry.py app whose quality.py error "
-                         "bound anchors the QoS tier table and the "
-                         "submit-time validation (implies --qos; default "
-                         "anchor: the config's approx.error_bound)")
-    ap.add_argument("--tier-bounds", default=None,
-                    help="comma-separated ascending error bounds "
-                         "overriding the default (tight, base, loose) "
-                         "tier table, e.g. 0.05,0.1,0.2")
     ap.add_argument("--data", type=int, default=0,
                     help="mesh data-axis size (0 = no mesh, single device)")
     ap.add_argument("--model", type=int, default=1,
                     help="mesh model-axis size (with --data)")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prefill-chunk", type=int, default=16,
-                    help="chunked prefill: S prompt tokens per prefill "
-                         "tick through the compiled chunk step, "
-                         "interleaved with decode ticks (0 = token-by-"
-                         "token reference mode; non-uniform families "
-                         "fall back automatically)")
-    ap.add_argument("--admission", choices=("cost", "fifo"), default="cost",
-                    help="queue admission: 'cost' = prompt length x QoS "
-                         "tier multiplier with aging (default), 'fifo' = "
-                         "strict arrival order")
-    ap.add_argument("--overflow", choices=("reject", "trim"),
-                    default="reject",
-                    help="submit-time policy when prompt + max_new "
-                         "exceeds max_len: reject loudly (default) or "
-                         "trim the prompt to its last max_len - max_new "
-                         "tokens")
-    ap.add_argument("--seed", type=int, default=0)
+    add_serve_options(ap, batch=4, max_len=128)
     args = ap.parse_args(argv)
 
     import jax
     import numpy as np
     from repro.configs.registry import get_config, smoke_config
     from repro.models import model as M
+    from repro.runtime.options import ServeOptions
     from repro.runtime.server import DecodeServer, Request
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
-    if args.qos_app or args.tier_bounds:
-        args.qos = True
-    if args.autotune or args.qos:
-        args.mcma_dispatch = True
-    if args.approx or args.mcma_dispatch:
-        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
-            cfg.approx, enable=True))
     mesh = None
     if args.data:
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(data=args.data, model=args.model)
         assert args.batch % args.data == 0, \
             "--batch must divide by --data for the sharded dispatch path"
+    options = ServeOptions.from_args(args, mesh=mesh)
+    if args.approx or options.use_mcma_dispatch:
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, enable=True,
+            library_size=options.library.library_size
+            if options.library else cfg.approx.library_size))
     params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
-    qos_tiers = True if args.qos else None
-    if args.tier_bounds:
-        qos_tiers = tuple(float(b) for b in args.tier_bounds.split(","))
-    server = DecodeServer(cfg, params, batch=args.batch, max_len=args.max_len,
-                          use_mcma_dispatch=args.mcma_dispatch, mesh=mesh,
-                          autotune=args.autotune,
-                          drop_budget=args.drop_budget,
-                          route_scope=args.route_scope,
-                          qos_tiers=qos_tiers, qos_app=args.qos_app,
-                          prefill_chunk=args.prefill_chunk,
-                          admission=args.admission, overflow=args.overflow)
+    server = DecodeServer(cfg, params, options=options)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, args.prompt_len)
                     .astype(np.int32), max_new=args.max_new)
             for i in range(args.requests)]
-    if args.qos:
+    if options.qos_tiers:
         # mixed-tier request wave: cycle the tier table's bounds (plus a
         # default-tier request) so one batch carries every QoS level
         bounds = server.tier_bounds
@@ -161,6 +107,11 @@ def main(argv=None):
                   f"margin {p['margin']:+.2f}): {p['rows']:.0f} rows, "
                   f"served invocation {p['served_invocation_rate']:.3f}, "
                   f"dropped_frac {p['dropped_frac']:.4f}")
+    if "residency" in stats:
+        r = stats["residency"]
+        print(f"residency: final hot set {r['final_residency']} after "
+              f"{r['swap_count']} swaps "
+              f"(off-set exact rows {stats['off_set_exact_rows']:.1f})")
     if "autotune" in stats:
         a = stats["autotune"]
         print(f"autotune: final point {a['final_point']} after "

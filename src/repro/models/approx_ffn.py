@@ -38,6 +38,7 @@ from repro.models.layers import ffn_fwd, init_ffn
 
 def init_approx_ffn(key, cfg: ModelConfig):
     d, a = cfg.d_model, cfg.approx
+    n = a.n_live                 # full LIBRARY when one is configured
     ks = jax.random.split(key, 4)
     s_in, s_h = d ** -0.5, a.d_hidden ** -0.5
     # stacked identical-topology approximators (paper §III-D requirement),
@@ -45,28 +46,32 @@ def init_approx_ffn(key, cfg: ModelConfig):
     # pseudo-class appended and feature dims lane-padded
     # (kernels/ops.prepad_switched_weights), so the decode hot path ships
     # the stacks into the weight-switch kernel with no per-call copies.
+    # With a library (a.library_size > 0) the stacks hold ALL library_size
+    # approximators and the router head covers the full library — at serve
+    # time ops.gather_resident_stacks pulls the resident rows out.
     # Padded regions are exact zeros and STAY zero under training: the
     # train path only reads/derives gradients through the logical views
     # (approx_stacks), so their grads — and hence AdamW updates — are zero.
-    w1 = jax.random.normal(ks[2], (a.n_approx, d, a.d_hidden), cfg.pdtype) * s_in
-    b1 = jnp.zeros((a.n_approx, a.d_hidden), cfg.pdtype)
-    w2 = jax.random.normal(ks[3], (a.n_approx, a.d_hidden, d), cfg.pdtype) * s_h
-    b2 = jnp.zeros((a.n_approx, d), cfg.pdtype)
+    w1 = jax.random.normal(ks[2], (n, d, a.d_hidden), cfg.pdtype) * s_in
+    b1 = jnp.zeros((n, a.d_hidden), cfg.pdtype)
+    w2 = jax.random.normal(ks[3], (n, a.d_hidden, d), cfg.pdtype) * s_h
+    b2 = jnp.zeros((n, d), cfg.pdtype)
     w1, b1, w2, b2 = prepad_switched_weights(w1, b1, w2, b2)
     return {"ffn": init_ffn(ks[0], cfg),
-            "router": jax.random.normal(ks[1], (d, a.n_approx + 1),
+            "router": jax.random.normal(ks[1], (d, n + 1),
                                         cfg.pdtype) * s_in,
             "a_w1": w1, "a_b1": b1, "a_w2": w2, "a_b2": b2}
 
 
 def approx_stacks(cfg: ModelConfig, p):
-    """Logical (n, d, d_hidden)-shaped views of the serving-form stacks —
-    what the train path and error labelling operate on."""
+    """Logical (n_live, d, d_hidden)-shaped views of the serving-form
+    stacks — what the train path and error labelling operate on."""
     a, d = cfg.approx, cfg.d_model
-    return (p["a_w1"][:a.n_approx, :d, :a.d_hidden],
-            p["a_b1"][:a.n_approx, :a.d_hidden],
-            p["a_w2"][:a.n_approx, :a.d_hidden, :d],
-            p["a_b2"][:a.n_approx, :d])
+    n = a.n_live
+    return (p["a_w1"][:n, :d, :a.d_hidden],
+            p["a_b1"][:n, :a.d_hidden],
+            p["a_w2"][:n, :a.d_hidden, :d],
+            p["a_b2"][:n, :d])
 
 
 def _apply_all_approx(cfg, p, x):
@@ -109,7 +114,7 @@ def approx_ffn_train(cfg: ModelConfig, p, x: jax.Array):
 
     # distillation: each approximator fits its territory (stop-grad teacher)
     tgt = jax.lax.stop_gradient(exact.astype(jnp.float32))
-    own = jax.nn.one_hot(labels - 1, a.n_approx, axis=0) * safe  # (n, T)
+    own = jax.nn.one_hot(labels - 1, a.n_live, axis=0) * safe   # (n, T)
     sq = jnp.sum((approx.astype(jnp.float32) - tgt[None]) ** 2, -1)  # (n, T)
     # territory tokens at weight 1; all tokens at small weight (exploration)
     w = own + 0.05
@@ -122,7 +127,7 @@ def approx_ffn_train(cfg: ModelConfig, p, x: jax.Array):
            # per-token one-hot competitive labels — the model (model.py)
            # sums these over the layer scan to train the TICK router head
            # on the across-layer modal label (route_scope="tick")
-           "label_votes": jax.nn.one_hot(labels, a.n_approx + 1,
+           "label_votes": jax.nn.one_hot(labels, a.n_live + 1,
                                          dtype=jnp.float32)}
     return exact.reshape(b, s, d), aux
 
@@ -196,7 +201,8 @@ def _tier_args(cfg: ModelConfig, tier, tier_margins, s: int):
 def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
                    row_mask: jax.Array | None = None,
                    tier: jax.Array | None = None,
-                   tier_margins: jax.Array | None = None):
+                   tier_margins: jax.Array | None = None,
+                   residency: jax.Array | None = None):
     """One DispatchPlan per decode tick (route_scope="tick").
 
     Classifies with the model's TICK-router head (``params["tick_router"]``,
@@ -207,10 +213,16 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
     traced) apply the per-request exact-logit margins to the ONE tick
     decision, so a mixed-tier batch routes each row at its own quality
     bound; the plan then carries the per-tier invoke-stat split for every
-    layer.  Under a distributed trace context the plan is built per data
-    shard inside a shard_map — the identical sharding the per-layer manual
-    serve path consumes it with — and its count fields are psum-reduced to
-    global totals, so the autotuner reads ONE exact observation per tick.
+    layer.  ``residency`` ((n_resident,) int32 library ids, TRACED) folds
+    full-library routing onto the resident slots (the tick-router head is
+    library-wide when ``approx.library_size`` is set); the per-layer
+    executors then run against residency-gathered stacks of the same
+    slot count.  Under a distributed trace context the plan is built per
+    data shard inside a shard_map — the identical sharding the per-layer
+    manual serve path consumes it with — and its count fields are
+    psum-reduced to global totals, so the autotuner (and the
+    ResidencyController, via ``lib_counts``) reads ONE exact observation
+    per tick.
     """
     from repro.runtime.dispatch import make_dispatch_plan
     a = cfg.approx
@@ -236,18 +248,22 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
         if has_tier and tier_margins is None:
             tier_margins = _default_margins(cfg)
         nt = int(tier_margins.shape[0]) if has_tier else 1
+        has_res = residency is not None
 
-        def local(rt, x_l, m_l, *qos):
+        def local(rt, x_l, m_l, *extra):
+            extra = list(extra)
+            t_l, tm = (extra.pop(0), extra.pop(0)) if has_tier \
+                else (None, None)
+            res = extra.pop(0) if has_res else None
             bl, sl, _ = x_l.shape
             xt = x_l.reshape(bl * sl, d)
             lg = jnp.dot(xt, rt.astype(xt.dtype)).astype(jnp.float32)
-            t_l, tm = qos if qos else (None, None)
             return make_dispatch_plan(
                 lg, _row_mask_tokens(m_l, sl), exact_cap=ec,
                 invoke_cap=ic, backend=a.backend, block_t=a.block_t,
                 stats_axes=dp,
                 tier=None if t_l is None else jnp.repeat(t_l, sl),
-                tier_margins=tm)
+                tier_margins=tm, residency=res)
 
         in_specs = (P(None, None), P(dp, None, None),
                     P(dp, None) if mask2d else P(dp))
@@ -255,12 +271,17 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
         if has_tier:
             in_specs = in_specs + (P(dp), P(None))
             args = args + (tier.astype(jnp.int32), tier_margins)
+        if has_res:
+            in_specs = in_specs + (P(None),)
+            args = args + (residency.astype(jnp.int32),)
         fn = shard_map_compat(
             local, mesh=mesh, in_specs=in_specs,
             out_specs=dispatch_plan_specs(
-                mesh, data_axes=dp, n_approx=a.n_approx, exact_cap=ec,
-                invoke_cap=ic, block_t=a.block_t, backend=a.backend,
-                n_tiers=nt),
+                mesh, data_axes=dp,
+                n_approx=int(residency.shape[0]) if has_res else a.n_approx,
+                exact_cap=ec, invoke_cap=ic, block_t=a.block_t,
+                backend=a.backend, n_tiers=nt,
+                library_size=a.library_size if has_res else 0),
             axis_names=frozenset(tuple(dp) + ("model",)), check=False)
         return fn(*args)
 
@@ -272,13 +293,14 @@ def make_tick_plan(cfg: ModelConfig, params, x: jax.Array,
     return make_dispatch_plan(
         logits, rm, exact_cap=ec, invoke_cap=ic,
         backend=a.backend, block_t=a.block_t,
-        tier=tr, tier_margins=tier_margins)
+        tier=tr, tier_margins=tier_margins, residency=residency)
 
 
 def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
                      row_mask: jax.Array | None = None, plan=None,
                      tier: jax.Array | None = None,
-                     tier_margins: jax.Array | None = None):
+                     tier_margins: jax.Array | None = None,
+                     residency: jax.Array | None = None):
     """Serving path with capacity dispatch.  x: (B, S, d) -> (out, aux).
 
     Exact FFN runs on ``exact_frac``·T tokens only — the paper's invocation
@@ -302,6 +324,16 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
     matmul, sort, or stats collective runs here, and ``row_mask``/
     ``tier`` are ignored (the plan already embeds them).
 
+    ``residency`` (optional, (n_resident,) int32 library ids, TRACED):
+    approximator-library serving — the stored stacks hold the full
+    library and the router head is library-wide; the resident rows are
+    gathered out per layer (ops.gather_resident_stacks — an
+    (n_resident + 1)-row gather, tiny) and library routing folds onto the
+    resident slots (runtime/dispatch).  A hot-set swap is a new vector
+    through the same compiled program.  With a tick ``plan`` the fold
+    already happened in make_tick_plan (pass the SAME residency there);
+    here it only selects the executed weights.
+
     The engine is ``runtime/dispatch.mcma_dispatch`` (classify -> capacity
     -> class-sort -> weight-switch kernel / XLA oracle -> exact -> scatter);
     ``cfg.approx.backend`` picks the backend.  Under a distributed mesh the
@@ -319,13 +351,18 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
     if mesh is not None:
         return _approx_serve_manual(cfg, p, x, mesh, dp,
                                     row_mask=row_mask, plan=plan,
-                                    tier=tier, tier_margins=tier_margins)
+                                    tier=tier, tier_margins=tier_margins,
+                                    residency=residency)
 
     if plan is not None:
+        stacks = (p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"])
+        if residency is not None:
+            from repro.kernels.ops import gather_resident_stacks
+            stacks = gather_resident_stacks(*stacks,
+                                            residency.astype(jnp.int32))
         out = execute_dispatch(
             plan, x.reshape(t, d), lambda xb: ffn_fwd(cfg, p["ffn"], xb),
-            p["a_w1"], p["a_b1"], p["a_w2"], p["a_b2"],
-            interpret=a.interpret, weights_prepadded=True)
+            *stacks, interpret=a.interpret, weights_prepadded=True)
         stats = plan_invoke_stats(plan)
     else:
         xt = x.reshape(t, d)
@@ -339,7 +376,7 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
             exact_cap=ec, invoke_cap=ic,
             backend=a.backend, block_t=a.block_t, interpret=a.interpret,
             row_mask=rm, weights_prepadded=True,
-            tier=tr, tier_margins=tier_margins)
+            tier=tr, tier_margins=tier_margins, residency=residency)
 
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
@@ -349,7 +386,8 @@ def approx_ffn_serve(cfg: ModelConfig, p, x: jax.Array,
 
 
 def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
-                         plan=None, tier=None, tier_margins=None):
+                         plan=None, tier=None, tier_margins=None,
+                         residency=None):
     """Shard_map-native serve dispatch: the SAME ``mcma_dispatch`` engine
     as the single-device path, run per data shard (each shard classifies /
     capacities / class-sorts / weight-switches its OWN tokens — no
@@ -371,6 +409,13 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
     embeds the tiers): the (B,) per-slot QoS tiers ride through the
     shard_map batch-sharded like the mask, the margins replicated, and
     the per-tier stats psum-reduce with the rest.
+
+    ``residency`` (library serving): the stacks in ``weights`` hold the
+    full replicated library; on the plan path the resident rows are
+    gathered OUTSIDE the shard_map (the gathered stacks are replicated
+    with the same specs, just a smaller leading dim — specs are
+    shape-agnostic), on the layer-scope path the replicated residency
+    vector rides in and ``mcma_dispatch`` gathers per shard.
     """
     from repro.runtime.dispatch import (execute_dispatch, mcma_dispatch,
                                         plan_invoke_stats)
@@ -381,6 +426,12 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
     axes = tuple(dp) + ("model",)
     weights = {**{k: p[k] for k in ("router", "a_w1", "a_b1", "a_w2",
                                     "a_b2")}, "ffn": p["ffn"]}
+    if residency is not None and plan is not None:
+        from repro.kernels.ops import gather_resident_stacks
+        weights["a_w1"], weights["a_b1"], weights["a_w2"], weights["a_b2"] \
+            = gather_resident_stacks(
+                weights["a_w1"], weights["a_b1"], weights["a_w2"],
+                weights["a_b2"], residency.astype(jnp.int32))
 
     def tp_exact_fn(p_loc):
         # FSDP unshard-on-use of the exact FFN's TP slices
@@ -420,20 +471,25 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
         stats = plan_invoke_stats(plan)
     else:
         has_tier = tier is not None
+        has_res = residency is not None
         if row_mask is None:
             row_mask = jnp.ones((b,), bool)
         specs = approx_serve_specs(mesh, gated="w_gate" in p["ffn"],
                                    with_tier=has_tier,
-                                   mask2d=row_mask.ndim == 2)
+                                   mask2d=row_mask.ndim == 2,
+                                   with_residency=has_res)
         if has_tier and tier_margins is None:
             tier_margins = _default_margins(cfg)
 
-        def local(p_loc, x_loc, m_loc, *qos):
+        def local(p_loc, x_loc, m_loc, *extra):
+            extra = list(extra)
+            t_l, tm = (extra.pop(0), extra.pop(0)) if has_tier \
+                else (None, None)
+            res = extra.pop(0) if has_res else None
             bl, sl, _ = x_loc.shape
             tl = bl * sl
             xt = x_loc.reshape(tl, d)
             rm = _row_mask_tokens(m_loc, sl)
-            t_l, tm = qos if qos else (None, None)
             ec, ic = serve_caps(cfg, tl)
             logits = jnp.dot(xt, p_loc["router"].astype(xt.dtype)) \
                 .astype(jnp.float32)
@@ -444,7 +500,7 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
                 backend=a.backend, block_t=a.block_t, interpret=a.interpret,
                 stats_axes=dp, row_mask=rm, weights_prepadded=True,
                 tier=None if t_l is None else jnp.repeat(t_l, sl),
-                tier_margins=tm)
+                tier_margins=tm, residency=res)
             return out.reshape(bl, sl, d), stats
 
         fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
@@ -453,6 +509,8 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
         args = (weights, x, row_mask)
         if has_tier:
             args = args + (tier.astype(jnp.int32), tier_margins)
+        if has_res:
+            args = args + (residency.astype(jnp.int32),)
         out, stats = fn(*args)
     aux = {"loss": jnp.zeros((), jnp.float32),
            "invocation": stats["invocation"],
@@ -464,8 +522,10 @@ def _approx_serve_manual(cfg: ModelConfig, p, x, mesh, dp, row_mask=None,
 def approx_ffn_fwd(cfg: ModelConfig, p, x: jax.Array, *, serve: bool = False,
                    row_mask: jax.Array | None = None, plan=None,
                    tier: jax.Array | None = None,
-                   tier_margins: jax.Array | None = None):
+                   tier_margins: jax.Array | None = None,
+                   residency: jax.Array | None = None):
     if serve:
         return approx_ffn_serve(cfg, p, x, row_mask=row_mask, plan=plan,
-                                tier=tier, tier_margins=tier_margins)
+                                tier=tier, tier_margins=tier_margins,
+                                residency=residency)
     return approx_ffn_train(cfg, p, x)

@@ -55,14 +55,16 @@ def _init_dense_block(key, cfg: ModelConfig):
 
 def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False,
                  row_mask=None, dispatch_plan=None, tier=None,
-                 tier_margins=None):
+                 tier_margins=None, residency=None):
     """One transformer block.  Returns (x, new_cache, aux_loss, aux_metrics).
 
     ``dispatch_plan`` (serve + route_scope="tick"): the per-tick
     DispatchPlan built above the layer scan — this block's ApproxFFN
     executes against it instead of routing its own tokens.  ``tier``/
     ``tier_margins`` (serve, layer scope): per-slot QoS tiers for this
-    block's own routing decision (a tick plan already embeds them)."""
+    block's own routing decision (a tick plan already embeds them).
+    ``residency`` (serve, library): the traced (n_resident,) library
+    residency map selecting the executed approximator rows."""
     h, new_cache = L.attention_fwd(cfg, p["attn"], L.norm_fwd(cfg, p["ln1"], x),
                                    positions, cache)
     aux = jnp.zeros((), jnp.float32)
@@ -70,27 +72,29 @@ def _dense_block(cfg: ModelConfig, p, x, positions, cache, *, serve=False,
     if cfg.parallel_block:
         # stablelm-2 style: FFN in parallel with attention, one residual
         f = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln1"], x), serve, row_mask,
-                      dispatch_plan, tier, tier_margins)
+                      dispatch_plan, tier, tier_margins, residency)
         f, aux, metrics = f
         x = x + h + f
     else:
         x = x + h
         f, aux, metrics = _ffn_part(cfg, p, L.norm_fwd(cfg, p["ln2"], x),
                                     serve, row_mask, dispatch_plan, tier,
-                                    tier_margins)
+                                    tier_margins, residency)
         x = x + f
     return x, new_cache, aux, metrics
 
 
 def _ffn_part(cfg: ModelConfig, p, xn, serve, row_mask=None,
-              dispatch_plan=None, tier=None, tier_margins=None):
+              dispatch_plan=None, tier=None, tier_margins=None,
+              residency=None):
     if cfg.moe.n_experts:
         y, aux = moe.moe_fwd(cfg, p["moe"], xn)
         return y, aux, {}
     if cfg.approx.enable:
         y, a = approx_ffn_fwd(cfg, p["approx"], xn, serve=serve,
                               row_mask=row_mask, plan=dispatch_plan,
-                              tier=tier, tier_margins=tier_margins)
+                              tier=tier, tier_margins=tier_margins,
+                              residency=residency)
         m = {"invocation": a["invocation"], "router_acc": a["router_acc"]}
         if "label_votes" in a:  # train path: per-token competitive labels,
             # summed over the layer scan to supervise the tick-router head
@@ -112,6 +116,13 @@ def _ffn_part(cfg: ModelConfig, p, xn, serve, row_mask=None,
             # to each request's error-bound tier from these
             m["tier_counts"] = st["tier_counts"].astype(jnp.float32)
             m["tier_dispatched"] = st["tier_dispatched"] \
+                .astype(jnp.float32)
+            # library residency: full-library demand (the
+            # ResidencyController's promotion signal) + off-set rows
+            # folded onto the exact path (lib_counts == class_counts and
+            # 0 off-set rows on library-less deployments)
+            m["lib_counts"] = st["lib_counts"].astype(jnp.float32)
+            m["off_set_exact_rows"] = st["off_set_exact_rows"] \
                 .astype(jnp.float32)
         return y, a["loss"], m
     return L.ffn_fwd(cfg, p["ffn"], xn), jnp.zeros((), jnp.float32), {}
@@ -215,7 +226,7 @@ def init_model(key: jax.Array, cfg: ModelConfig):
         # made once per decode tick and reused by every layer of the scan
         params["tick_router"] = jax.random.normal(
             jax.random.fold_in(ke, 1),
-            (cfg.d_model, cfg.approx.n_approx + 1),
+            (cfg.d_model, cfg.approx.n_live + 1),
             cfg.pdtype) * cfg.d_model ** -0.5
     return params
 
@@ -247,7 +258,7 @@ def forward(cfg: ModelConfig, params, inputs: jax.Array, *,
     train_tick = ("tick_router" in params and not serve
                   and cfg.approx.enable and not cfg.moe.n_experts)
     x0 = x
-    votes0 = jnp.zeros((b * s, cfg.approx.n_approx + 1), jnp.float32)
+    votes0 = jnp.zeros((b * s, cfg.approx.n_live + 1), jnp.float32)
 
     if topo.kind == "uniform":
         def body(carry, blk):
@@ -406,7 +417,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
            serve: bool = True, collect_metrics: bool = False,
            row_mask: jax.Array | None = None,
            tier: jax.Array | None = None,
-           tier_margins: jax.Array | None = None):
+           tier_margins: jax.Array | None = None,
+           residency: jax.Array | None = None):
     """One decode step.  inputs: tokens (B, 1) or embeds (B, 1, d).
     Returns (logits (B, V), new_cache), or (logits, new_cache, metrics)
     when ``collect_metrics`` — layer-meaned per-step block metrics (e.g.
@@ -430,7 +442,14 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
     layer scan and reused by every layer, so each layer's dispatch is one
     weight-switch launch on already-sorted rows (no per-layer argsort/
     bincount/rank), and the reported invoke stats are the ONE tick-level
-    observation (every layer sees the same plan)."""
+    observation (every layer sees the same plan).
+
+    ``residency`` (optional, (n_resident,) int32 library ids, TRACED):
+    approximator-library serving (``cfg.approx.library_size > 0``) —
+    routing covers the full library, the residency map folds classes onto
+    resident slots, and every layer executes against the residency-
+    gathered weight rows.  A hot-set swap between ticks is a new vector
+    through this same compiled step — zero retraces."""
     topo = topology(cfg)
     x = L.embed_fwd(cfg, params["embed"], inputs)
     pos = cache["pos"]                                   # (B,) per-slot
@@ -447,7 +466,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
                 and topo.kind in ("uniform", "hybrid")):
             from repro.models.approx_ffn import make_tick_plan
             plan = make_tick_plan(cfg, params, x, row_mask, tier=tier,
-                                  tier_margins=tier_margins)
+                                  tier_margins=tier_margins,
+                                  residency=residency)
             tier = tier_margins = None   # the plan embeds the tiers
 
     if topo.kind == "uniform":
@@ -461,7 +481,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             lc = {"k": ck[i], "v": cv[i], "pos": pos}
             x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
                                        row_mask=row_mask, dispatch_plan=plan,
-                                       tier=tier, tier_margins=tier_margins)
+                                       tier=tier, tier_margins=tier_margins,
+                                       residency=residency)
             m.pop("_label_votes", None)   # train-only co-training signal
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)
@@ -512,7 +533,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
             x, nc, _, m = _dense_block(cfg, shared, x, positions, lc,
                                        serve=serve, row_mask=row_mask,
                                        dispatch_plan=plan, tier=tier,
-                                       tier_margins=tier_margins)
+                                       tier_margins=tier_margins,
+                                       residency=residency)
             m.pop("_label_votes", None)   # train-only co-training signal
             ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], gi, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], gi, 0)
@@ -538,7 +560,8 @@ def decode_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
                  collect_metrics: bool = False,
                  row_mask: jax.Array | None = None,
                  tier: jax.Array | None = None,
-                 tier_margins: jax.Array | None = None):
+                 tier_margins: jax.Array | None = None,
+                 residency: jax.Array | None = None):
     """One chunked-PREFILL step against the decode cache layout.
 
     tokens: (B, S) int32 — up to S prompt tokens per slot, appended to each
@@ -576,7 +599,8 @@ def decode_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
         if cfg.approx.route_scope == "tick" and not cfg.moe.n_experts:
             from repro.models.approx_ffn import make_tick_plan
             plan = make_tick_plan(cfg, params, x, tok_mask, tier=tier,
-                                  tier_margins=tier_margins)
+                                  tier_margins=tier_margins,
+                                  residency=residency)
             tier = tier_margins = None   # the plan embeds the tiers
 
     def body(carry, blk_i):
@@ -585,7 +609,8 @@ def decode_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
         lc = {"k": ck[i], "v": cv[i], "pos": pos, "n_valid": n_valid}
         x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
                                    row_mask=tok_mask, dispatch_plan=plan,
-                                   tier=tier, tier_margins=tier_margins)
+                                   tier=tier, tier_margins=tier_margins,
+                                   residency=residency)
         m.pop("_label_votes", None)   # train-only co-training signal
         ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], i, 0)
         cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], i, 0)

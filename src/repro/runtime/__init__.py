@@ -1,0 +1,43 @@
+"""Serving runtime — the public API lives HERE.
+
+``tests/test_public_api.py`` snapshots this surface: additions are
+deliberate (extend the snapshot), removals/renames are breaking.  The
+canonical deployment:
+
+    from repro.runtime import DecodeServer, ServeOptions, LibrarySpec
+
+    server = DecodeServer(cfg, params, options=ServeOptions(
+        batch=8, use_mcma_dispatch=True, autotune=True,
+        library=LibrarySpec(library_size=16, n_resident=4)))
+"""
+from repro.runtime.cli import add_serve_options
+from repro.runtime.dispatch import (DispatchPlan, InvokeStats,
+                                    execute_dispatch, make_dispatch_plan,
+                                    mcma_dispatch, plan_invoke_stats)
+from repro.runtime.options import LibrarySpec, ServeOptions
+from repro.runtime.autotune import (CapacityController, OperatingPoint,
+                                    ResidencyController, Swap, Switch,
+                                    default_ladder, ladder_from_counts)
+from repro.runtime.server import DecodeServer, DrainStats, Request
+
+__all__ = [
+    "CapacityController",
+    "DecodeServer",
+    "DispatchPlan",
+    "DrainStats",
+    "InvokeStats",
+    "LibrarySpec",
+    "OperatingPoint",
+    "Request",
+    "ResidencyController",
+    "ServeOptions",
+    "Swap",
+    "Switch",
+    "add_serve_options",
+    "default_ladder",
+    "execute_dispatch",
+    "ladder_from_counts",
+    "make_dispatch_plan",
+    "mcma_dispatch",
+    "plan_invoke_stats",
+]

@@ -346,3 +346,101 @@ class CapacityController:
             "drop_ema": self.drop_ema,
             "ticks": self.tick,
         }
+
+
+@dataclasses.dataclass
+class Swap:
+    """One residency move (library promote/demote), recorded."""
+
+    tick: int
+    promoted: int            # library id entering the resident set
+    demoted: int             # library id leaving it
+    slot: int                # resident slot that changed owner
+    hot_ema: float           # promoted class's routed-share EMA
+    cold_ema: float          # demoted class's routed-share EMA
+
+
+class ResidencyController:
+    """Picks WHICH library classes are resident, beside the
+    CapacityController's HOW MUCH capacity.
+
+    The dispatch engine routes over the full approximator library but can
+    only execute the ``n_resident`` classes whose weights occupy the
+    prepadded stacks (runtime/dispatch.make_dispatch_plan residency fold;
+    off-set classes fall back to exact).  This controller watches the
+    served full-library demand histogram (``lib_counts`` in the
+    invoke_stats — QoS-Nets' routed_per_class adaptation) and promotes
+    the hottest off-set class over the coldest resident.  A swap is a new
+    traced residency vector through the same compiled step — zero
+    retraces (kernels/ops.gather_resident_stacks).
+
+    Thrash hysteresis, two gates both required to swap:
+      * ratio: the challenger's routed-share EMA must exceed
+        ``promote_margin x`` the coldest resident's — a borderline class
+        oscillating around parity never swaps;
+      * floor: a resident serving more than ``demote_margin`` of total
+        traffic is never demoted, whatever is knocking.
+    Decisions fire once per ``observe_window`` observed ticks, suppressed
+    for ``cooldown`` ticks after a swap (the EMA must re-converge on the
+    new set before it is trusted again); at most one swap per decision.
+
+    ``spec`` is a runtime/options.LibrarySpec; ``observe`` consumes one
+    tick's stats (needs ``lib_counts``, (library_size + 1,) with entry 0
+    the exact votes) and returns the CURRENT residency tuple of library
+    ids — the server re-feeds it to the compiled step each tick.
+    """
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.residency: tuple[int, ...] = spec.initial_residency()
+        self.tick = 0
+        self.ema: np.ndarray | None = None   # (library_size,) routed shares
+        self.history: list[Swap] = []
+        self._last_swap = -10 ** 9
+
+    def observe(self, stats) -> tuple[int, ...]:
+        lib_counts = np.asarray(stats["lib_counts"], float)
+        shares = lib_counts[1:]              # drop the exact column
+        t = lib_counts.sum()
+        if t > 0:
+            shares = shares / t
+            a = self.spec.ema
+            self.ema = shares if self.ema is None \
+                else a * shares + (1 - a) * self.ema
+        self.tick += 1
+        if self.ema is None \
+                or self.tick - self._last_swap <= self.spec.cooldown \
+                or self.tick % self.spec.observe_window != 0:
+            return self.residency
+
+        resident = set(self.residency)
+        off = [c for c in range(self.spec.library_size)
+               if c not in resident]
+        if not off:
+            return self.residency
+        hot = max(off, key=lambda c: self.ema[c])
+        slot = int(np.argmin([self.ema[c] for c in self.residency]))
+        cold = self.residency[slot]
+        eps = 1e-9
+        if self.ema[hot] > self.spec.promote_margin \
+                * max(float(self.ema[cold]), eps) \
+                and float(self.ema[cold]) <= self.spec.demote_margin:
+            self.history.append(Swap(self.tick, int(hot), int(cold), slot,
+                                     float(self.ema[hot]),
+                                     float(self.ema[cold])))
+            r = list(self.residency)
+            r[slot] = int(hot)
+            self.residency = tuple(r)
+            self._last_swap = self.tick
+        return self.residency
+
+    def summary(self) -> dict:
+        """Trajectory record for server stats / bench CSVs."""
+        return {
+            "final_residency": list(self.residency),
+            "swaps": [dataclasses.asdict(s) for s in self.history],
+            "swap_count": len(self.history),
+            "lib_ema": None if self.ema is None
+            else [float(v) for v in self.ema],
+            "ticks": self.tick,
+        }

@@ -1,0 +1,103 @@
+"""Shared serve-flag surface for every CLI entry point.
+
+Three surfaces drifted apart over six PRs — launch/serve.py,
+examples/serve_decode.py, benchmarks/bench_serve.py each re-declared the
+same serving flags with subtly different inventories.  They now all call
+
+    ap = argparse.ArgumentParser()
+    add_serve_options(ap, batch=4, max_len=128)   # per-surface defaults
+    args = ap.parse_args(argv)
+    options = ServeOptions.from_args(args)
+
+so a new serving knob added HERE (plus its ``ServeOptions`` field) lands
+in all three for free.  ``add_serve_options`` only registers flags; the
+implication chain (--qos-app implies --qos implies --mcma-dispatch, a
+library implies --mcma-dispatch) lives in ``ServeOptions.from_args`` so
+programmatic callers get it too.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def add_serve_options(parser: argparse.ArgumentParser,
+                      **defaults) -> argparse.ArgumentParser:
+    """Register the canonical serving flags as one argument group.
+
+    ``defaults`` override per-flag defaults for the calling surface
+    (e.g. ``add_serve_options(ap, batch=4, max_len=96)``) — keys must
+    name registered dests.  Returns the parser for chaining.
+    """
+    g = parser.add_argument_group(
+        "serving", "DecodeServer deployment (runtime/options.ServeOptions)")
+    g.add_argument("--batch", type=int, default=8,
+                   help="decode slot-table size")
+    g.add_argument("--max-len", type=int, default=512,
+                   help="per-slot KV-cache length (prompt + generated)")
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--mcma-dispatch", action="store_true",
+                   help="serve the ApproxFFN through the weight-switch "
+                        "dispatch engine (implies --approx where the "
+                        "surface has it)")
+    g.add_argument("--backend", choices=("pallas", "xla"), default=None,
+                   help="dispatch executor override (default: the "
+                        "config's approx.backend)")
+    g.add_argument("--route-scope", choices=("layer", "tick"), default=None,
+                   help="MCMA routing granularity at decode: 'tick' makes "
+                        "ONE dispatch plan per tick (reused by every "
+                        "layer); 'layer' routes per layer (default: the "
+                        "config's route_scope)")
+    g.add_argument("--autotune", action="store_true",
+                   help="adapt serve capacities online from the served "
+                        "invoke_stats (runtime/autotune.py; implies "
+                        "--mcma-dispatch): the controller walks a ladder "
+                        "of precompiled operating points targeting "
+                        "--drop-budget dropped rows at max invocation")
+    g.add_argument("--drop-budget", type=float, default=0.05,
+                   help="autotune target: max fraction of routed rows "
+                        "dropped over capacity (default 0.05)")
+    g.add_argument("--qos", action="store_true",
+                   help="per-request QoS tiers (implies --mcma-dispatch): "
+                        "each request carries an error_bound, validated "
+                        "and quantized onto the tier table at submit time")
+    g.add_argument("--qos-app", default=None,
+                   help="apps/registry.py app whose error bound anchors "
+                        "the QoS tier table (implies --qos; default "
+                        "anchor: the config's approx.error_bound)")
+    g.add_argument("--tier-bounds", default=None,
+                   help="comma-separated ascending error bounds "
+                        "overriding the default (tight, base, loose) "
+                        "tier table, e.g. 0.05,0.1,0.2")
+    g.add_argument("--library-size", type=int, default=0,
+                   help="approximator-library residency (implies "
+                        "--mcma-dispatch): serve a library of this many "
+                        "trained approximators with --n-resident of them "
+                        "resident, hot-swapped by the ResidencyController "
+                        "(0 = off, the all-resident engine)")
+    g.add_argument("--n-resident", type=int, default=0,
+                   help="resident slots with --library-size (0 = "
+                        "min(4, library_size))")
+    g.add_argument("--prefill-chunk", type=int, default=16,
+                   help="chunked prefill: S prompt tokens per prefill "
+                        "tick through the compiled chunk step, "
+                        "interleaved with decode ticks (0 = token-by-"
+                        "token reference mode; non-uniform families fall "
+                        "back automatically)")
+    g.add_argument("--admission", choices=("cost", "fifo"), default="cost",
+                   help="queue admission: 'cost' = prompt length x QoS "
+                        "tier multiplier with aging (default), 'fifo' = "
+                        "strict arrival order")
+    g.add_argument("--overflow", choices=("reject", "trim"),
+                   default="reject",
+                   help="submit-time policy when prompt + max_new "
+                        "exceeds max_len: reject loudly (default) or "
+                        "trim the prompt to its last max_len - max_new "
+                        "tokens")
+    g.add_argument("--aging", type=float, default=0.05,
+                   help="cost-admission aging rate (starvation guard)")
+    if defaults:
+        known = {a.dest for a in parser._actions}
+        unknown = set(defaults) - known
+        assert not unknown, f"add_serve_options: unknown defaults {unknown}"
+        parser.set_defaults(**defaults)
+    return parser

@@ -213,14 +213,24 @@ class DispatchPlan:
                   rows per tier per class (sums over tiers to
                   ``dispatched`` — capacity is tier-blind arrival order,
                   the split just attributes the kept rows)
+      lib_counts  (library_size + 1,) routed rows per LIBRARY class when
+                  the plan was built with a ``residency`` map (the
+                  ResidencyController's demand signal — entry 0 is the
+                  router's own exact votes, off-set classes keep their
+                  library column); equals ``counts`` on library-less plans
+      off_set_rows () int32 active rows routed to a library class with no
+                  resident slot this tick — they fall back to the exact
+                  path (inside ``counts[0]``), so invocation honestly
+                  reflects the residency penalty
 
-    ``counts``/``dispatched``/``t_total``/``executed`` and the per-tier
-    count matrices are psum-reduced GLOBAL totals when the plan is built
-    with ``stats_axes`` inside a shard_map; the row-shaped fields stay
-    shard-local.  Static metadata (pytree aux): ``n_approx``, the
-    capacities (``invoke_cap`` is an int for the uniform budget or a
-    per-class tuple for asymmetric ones — ``class_caps`` normalizes),
-    ``block_t``, ``backend``, ``n_tiers``.
+    ``counts``/``dispatched``/``t_total``/``executed``, the per-tier
+    count matrices, and ``lib_counts``/``off_set_rows`` are psum-reduced
+    GLOBAL totals when the plan is built with ``stats_axes`` inside a
+    shard_map; the row-shaped fields stay shard-local.  Static metadata
+    (pytree aux): ``n_approx``, the capacities (``invoke_cap`` is an int
+    for the uniform budget or a per-class tuple for asymmetric ones —
+    ``class_caps`` normalizes), ``block_t``, ``backend``, ``n_tiers``,
+    and ``library_size`` (0 = built without a residency map).
     """
 
     cls: jax.Array
@@ -238,12 +248,15 @@ class DispatchPlan:
     tier: jax.Array
     tier_counts: jax.Array
     tier_dispatched: jax.Array
+    lib_counts: jax.Array
+    off_set_rows: jax.Array
     n_approx: int
     exact_cap: int
     invoke_cap: int | tuple
     block_t: int
     backend: str
     n_tiers: int
+    library_size: int
 
     @property
     def class_caps(self) -> tuple:
@@ -257,9 +270,9 @@ class DispatchPlan:
 _PLAN_DATA = ("cls", "rank", "eff", "order", "pos", "tile_cls",
               "exact_keep", "exact_slot", "counts", "dispatched",
               "t_total", "executed", "tier", "tier_counts",
-              "tier_dispatched")
+              "tier_dispatched", "lib_counts", "off_set_rows")
 _PLAN_META = ("n_approx", "exact_cap", "invoke_cap", "block_t", "backend",
-              "n_tiers")
+              "n_tiers", "library_size")
 
 jax.tree_util.register_pytree_node(
     DispatchPlan,
@@ -277,7 +290,8 @@ def make_dispatch_plan(logits: jax.Array,
                        stats_axes: tuple = (),
                        tier: jax.Array | None = None,
                        tier_margins: jax.Array | None = None,
-                       n_tiers: int | None = None) -> DispatchPlan:
+                       n_tiers: int | None = None,
+                       residency: jax.Array | None = None) -> DispatchPlan:
     """classify -> capacity -> class-sort, once, as a reusable plan.
 
     logits: (T, n_approx + 1) router/classifier scores (class 0 = exact);
@@ -299,9 +313,28 @@ def make_dispatch_plan(logits: jax.Array,
     (see ``route``), and the plan's ``tier_counts``/``tier_dispatched``
     split the routed/executed rows per tier.  ``tier=None`` keeps the
     margin-free routing bit-for-bit and records everything as tier 0.
+
+    Approximator-library residency: with ``residency`` ((n_resident,)
+    int32 of library ids, TRACED — a hot-set swap is a new vector through
+    the same compiled program), ``logits`` carry ``library_size + 1``
+    columns and routing happens over the FULL library; a slot map then
+    folds each library class onto its resident slot (or onto the exact
+    path when the class is off-set this tick).  The plan's ``n_approx``
+    stays the RESIDENT slot count — capacities, class-sort, and the
+    executor are untouched — while ``lib_counts`` keeps the full-library
+    demand histogram (the ResidencyController's signal) and
+    ``off_set_rows`` counts the rows paying the residency penalty.
     """
     t = logits.shape[0]
-    n = logits.shape[-1] - 1
+    if residency is not None:
+        library_size = logits.shape[-1] - 1
+        n = int(residency.shape[0])
+        assert n <= library_size, (
+            f"residency map holds {n} slots but the library has only "
+            f"{library_size} approximators")
+    else:
+        library_size = 0
+        n = logits.shape[-1] - 1
     if operating_point is not None:
         from repro.sharding.rules import shard_capacity
         assert exact_cap is None and invoke_cap is None, \
@@ -338,6 +371,17 @@ def make_dispatch_plan(logits: jax.Array,
         else tier.astype(jnp.int32)
 
     cls = route(logits, None if tier is None else tier_ids, tier_margins)
+    lib_cls = cls
+    if residency is not None:
+        # fold library classes onto resident slots: slot_map[lib id + 1] =
+        # resident slot + 1, everything else (exact votes AND off-set
+        # classes) lands on 0 = the exact path.  The fold happens BEFORE
+        # capacity/class-sort, so downstream the plan is indistinguishable
+        # from an n_resident-approximator plan.
+        slot_map = jnp.zeros((library_size + 1,), jnp.int32) \
+            .at[residency.astype(jnp.int32) + 1] \
+            .set(jnp.arange(1, n + 1, dtype=jnp.int32))
+        cls = slot_map[lib_cls]
     if row_mask is not None:
         mask = row_mask.astype(bool)
         # inactive rows: class 0 so they never claim an approximator rank;
@@ -357,6 +401,24 @@ def make_dispatch_plan(logits: jax.Array,
     tier_counts = jnp.bincount(tier_ids * (n + 2) + routed_col,
                                length=nt * (n + 2)) \
         .reshape(nt, n + 2)[:, :n + 1]
+
+    # library demand histogram + off-set accounting (residency plans only):
+    # lib_counts keeps the router's FULL-library votes (off-set classes
+    # keep their own column — the promotion signal), off_set_rows counts
+    # the active rows folded onto the exact path for lack of a slot.
+    if residency is not None:
+        off_mask = (lib_cls > 0) & (cls == 0)
+        if row_mask is not None:
+            lib_col = jnp.where(mask, lib_cls, library_size + 1)
+            off_mask = off_mask & mask
+        else:
+            lib_col = lib_cls
+        lib_counts = jnp.bincount(lib_col, length=library_size + 2) \
+            [:library_size + 1]
+        off_set_rows = jnp.sum(off_mask.astype(jnp.int32))
+    else:
+        lib_counts = counts
+        off_set_rows = jnp.zeros((), jnp.int32)
 
     # approximator side: capacity first, then the single-class-tile sort
     # of the effective classes (kept rows keep cls-1; exact/over-capacity/
@@ -411,6 +473,11 @@ def make_dispatch_plan(logits: jax.Array,
         executed = jax.lax.psum(executed, ax)
         tier_counts = jax.lax.psum(tier_counts, ax)
         tier_dispatched = jax.lax.psum(tier_dispatched, ax)
+        if residency is not None:
+            lib_counts = jax.lax.psum(lib_counts, ax)
+            off_set_rows = jax.lax.psum(off_set_rows, ax)
+        else:
+            lib_counts = counts        # stay aliased to the reduced counts
     return DispatchPlan(cls=cls, rank=rank, eff=eff, order=order, pos=pos,
                         tile_cls=tile_cls, exact_keep=exact_keep,
                         exact_slot=exact_slot, counts=counts,
@@ -418,16 +485,104 @@ def make_dispatch_plan(logits: jax.Array,
                         executed=executed, tier=tier_ids,
                         tier_counts=tier_counts,
                         tier_dispatched=tier_dispatched,
+                        lib_counts=lib_counts, off_set_rows=off_set_rows,
                         n_approx=n, exact_cap=exact_cap,
                         invoke_cap=invoke_cap, block_t=block_t,
-                        backend=backend, n_tiers=nt)
+                        backend=backend, n_tiers=nt,
+                        library_size=library_size)
 
 
-def plan_invoke_stats(plan: DispatchPlan) -> dict:
-    """The engine's invoke_stats dict, derived from a plan (elementwise —
-    cheap to call per layer; identical keys/values to ``mcma_dispatch``'s
-    second return).  Already global totals for plans built with
-    ``stats_axes``, so no collectives are needed here."""
+@dataclasses.dataclass(frozen=True)
+class InvokeStats:
+    """The engine's per-call invocation statistics, typed.
+
+    Every field is a jnp scalar/vector (a pytree of pure data — the class
+    is a registered pytree node, so it rides through jit / shard_map /
+    ``jax.tree.map(np.asarray, stats)`` like the dict it replaces).  The
+    stable public field names:
+
+      class_counts     (n_approx + 1,) routed ACTIVE rows per RESIDENT
+                       class (0 = exact); sums to the active row count
+      dispatched       (n_approx + 1,) rows actually executed after
+                       capacity
+      dropped          scalar int, over-capacity rows (zero contribution)
+      exact_frac       scalar float, class_counts[0] / active rows
+      invocation       scalar float, 1 - exact_frac (the paper's
+                       invocation rate; 0.0 on a fully idle batch)
+      executed_rows    scalar int, rows of compute actually launched
+      padding_rows     scalar int, executed_rows - sum(dispatched)
+      tier_counts      (n_tiers, n_approx + 1) routed rows per QoS tier
+      tier_dispatched  (n_tiers, n_approx + 1) executed rows per tier
+      tier_dropped     (n_tiers,) over-capacity rows per tier
+      tier_served_invocation  (n_tiers,) executed approximator rows over
+                       that tier's active rows
+      lib_counts       (library_size + 1,) routed rows per LIBRARY class
+                       under a residency map (equals class_counts on
+                       library-less calls) — the promotion signal
+      off_set_exact_rows  scalar int, active rows routed to an off-set
+                       library class and folded onto the exact path (0
+                       without a residency map) — the residency penalty
+
+    Dict-style access (``stats["invocation"]``, ``.get``, ``in``,
+    ``dict(stats)``) is kept for existing call sites and the CSV writers;
+    ``.asdict()`` is the explicit spelling.
+    """
+
+    class_counts: jax.Array
+    dispatched: jax.Array
+    dropped: jax.Array
+    exact_frac: jax.Array
+    invocation: jax.Array
+    executed_rows: jax.Array
+    padding_rows: jax.Array
+    tier_counts: jax.Array
+    tier_dispatched: jax.Array
+    tier_dropped: jax.Array
+    tier_served_invocation: jax.Array
+    lib_counts: jax.Array
+    off_set_exact_rows: jax.Array
+
+    # -- mapping protocol (drop-in for the dict this class replaced) --------
+    def __getitem__(self, key: str):
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def __contains__(self, key) -> bool:
+        return key in _STATS_FIELDS
+
+    def __iter__(self):
+        # iterate keys like the dict this replaced (without this, the
+        # legacy __getitem__ iteration protocol probes stats[0])
+        return iter(_STATS_FIELDS)
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    def keys(self):
+        return iter(_STATS_FIELDS)
+
+    def items(self):
+        return ((f, getattr(self, f)) for f in _STATS_FIELDS)
+
+    def asdict(self) -> dict:
+        return {f: getattr(self, f) for f in _STATS_FIELDS}
+
+
+_STATS_FIELDS = tuple(f.name for f in dataclasses.fields(InvokeStats))
+
+jax.tree_util.register_pytree_node(
+    InvokeStats,
+    lambda s: (tuple(getattr(s, f) for f in _STATS_FIELDS), None),
+    lambda _, data: InvokeStats(*data))
+
+
+def plan_invoke_stats(plan: DispatchPlan) -> InvokeStats:
+    """The engine's ``InvokeStats``, derived from a plan (elementwise —
+    cheap to call per layer; identical fields/values to
+    ``mcma_dispatch``'s second return).  Already global totals for plans
+    built with ``stats_axes``, so no collectives are needed here."""
     exact_frac = (plan.counts[0] / jnp.maximum(plan.t_total, 1)) \
         .astype(jnp.float32)
     # zero active rows (possible under row_mask): report invocation 0, not
@@ -435,27 +590,27 @@ def plan_invoke_stats(plan: DispatchPlan) -> dict:
     invocation = jnp.where(plan.t_total > 0, 1.0 - exact_frac, 0.0) \
         .astype(jnp.float32)
     tier_rows = jnp.sum(plan.tier_counts, -1)
-    return {
-        "class_counts": plan.counts,
-        "dispatched": plan.dispatched,
-        "dropped": jnp.sum(plan.counts - plan.dispatched),
-        "exact_frac": exact_frac,
-        "invocation": invocation,
-        "executed_rows": plan.executed,
-        "padding_rows": plan.executed
+    return InvokeStats(
+        class_counts=plan.counts,
+        dispatched=plan.dispatched,
+        dropped=jnp.sum(plan.counts - plan.dispatched),
+        exact_frac=exact_frac,
+        invocation=invocation,
+        executed_rows=plan.executed,
+        padding_rows=plan.executed
         - jnp.sum(plan.dispatched).astype(jnp.int32),
         # per-tier QoS split (tier 0 only on tier-less plans): routed /
         # post-capacity per class, dropped rows, and the SERVED invocation
         # per tier — approximator rows actually executed over that tier's
         # active rows, the quantity a loose error bound buys more of
-        "tier_counts": plan.tier_counts,
-        "tier_dispatched": plan.tier_dispatched,
-        "tier_dropped": jnp.sum(plan.tier_counts - plan.tier_dispatched,
-                                -1),
-        "tier_served_invocation": (
+        tier_counts=plan.tier_counts,
+        tier_dispatched=plan.tier_dispatched,
+        tier_dropped=jnp.sum(plan.tier_counts - plan.tier_dispatched, -1),
+        tier_served_invocation=(
             jnp.sum(plan.tier_dispatched[:, 1:], -1)
             / jnp.maximum(tier_rows, 1)).astype(jnp.float32),
-    }
+        lib_counts=plan.lib_counts,
+        off_set_exact_rows=plan.off_set_rows)
 
 
 def execute_dispatch(plan: DispatchPlan, x: jax.Array,
@@ -530,7 +685,8 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
                   stats_axes: tuple = (), row_mask: jax.Array | None = None,
                   weights_prepadded: bool = False,
                   tier: jax.Array | None = None,
-                  tier_margins: jax.Array | None = None):
+                  tier_margins: jax.Array | None = None,
+                  residency: jax.Array | None = None):
     """Full MCMA invocation pipeline over a flat row batch.
 
     x: (T, d); logits: (T, n_approx+1) router scores (class 0 = exact);
@@ -568,26 +724,35 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
     tuple (asymmetric capacities, e.g. from
     runtime/autotune.ladder_from_counts).
 
-    Returns ``(y, invoke_stats)`` with y: (T, d_out) in the original row
-    order and invoke_stats a dict of jnp scalars/vectors:
+    ``residency``: optional (n_resident,) int32 of LIBRARY ids.  The a_*
+    stacks then hold the FULL prepadded library (leading dim
+    library_size + 1, zero pseudo-class last) and ``logits`` carry
+    ``library_size + 1`` columns; the resident rows are gathered out
+    (kernels/ops.gather_resident_stacks) and library classes fold onto
+    resident slots in the plan (see ``make_dispatch_plan``).  Because the
+    map is traced data, a hot-set swap is a new vector through the SAME
+    compiled program — zero retraces.
 
-      class_counts  (n+1,) routed ACTIVE rows per class (sums to t_total,
-                    global when stats_axes is set)
-      dispatched    (n+1,) rows actually executed after capacity
-      dropped       scalar, over-capacity rows (zero contribution)
-      exact_frac    scalar, class_counts[0] / t_total
-      invocation    scalar, 1 - exact_frac (the paper's invocation rate)
-      executed_rows scalar, rows of compute actually launched
-      padding_rows  scalar, executed_rows - sum(dispatched) (capacity slack
-                    for XLA; tile padding, nC deadweight, and the static
-                    worst-case trailing tiles for Pallas)
+    Returns ``(y, invoke_stats)`` with y: (T, d_out) in the original row
+    order and invoke_stats an ``InvokeStats`` (typed, dict-style access —
+    see its docstring for the field inventory).
     """
+    if residency is not None:
+        assert weights_prepadded, (
+            "library residency requires prepadded stacks "
+            "(ops.prepad_switched_weights over the full library)")
+        assert logits.shape[-1] == a_w1.shape[0], (
+            f"router width {logits.shape[-1]} != library_size + 1 = "
+            f"{a_w1.shape[0]}: with a residency map the logits must cover "
+            "the FULL library (pseudo-class excluded)")
+        a_w1, a_b1, a_w2, a_b2 = ops.gather_resident_stacks(
+            a_w1, a_b1, a_w2, a_b2, residency)
     n = a_w1.shape[0] - (1 if weights_prepadded else 0)
     # schema guard: the router always has n_approx+1 classes, so a stack
     # whose leading dim disagrees (e.g. a pre-serving-form checkpoint fed
     # through weights_prepadded=True, where the last REAL approximator
     # would silently play the zero pseudo-class) fails loudly here
-    assert logits.shape[-1] == n + 1, (
+    assert residency is not None or logits.shape[-1] == n + 1, (
         f"router width {logits.shape[-1]} != n_approx + 1 = {n + 1}: "
         f"approximator stack (leading dim {a_w1.shape[0]}, "
         f"weights_prepadded={weights_prepadded}) does not match — "
@@ -595,7 +760,8 @@ def mcma_dispatch(x: jax.Array, logits: jax.Array,
     plan = make_dispatch_plan(logits, row_mask, exact_cap=exact_cap,
                               invoke_cap=invoke_cap, backend=backend,
                               block_t=block_t, stats_axes=stats_axes,
-                              tier=tier, tier_margins=tier_margins)
+                              tier=tier, tier_margins=tier_margins,
+                              residency=residency)
     out = execute_dispatch(plan, x, exact_fn, a_w1, a_b1, a_w2, a_b2,
                            interpret=interpret,
                            weights_prepadded=weights_prepadded)
@@ -613,7 +779,8 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
                           row_mask: jax.Array | None = None,
                           weights_prepadded: bool = False,
                           tier: jax.Array | None = None,
-                          tier_margins: jax.Array | None = None):
+                          tier_margins: jax.Array | None = None,
+                          residency: jax.Array | None = None):
     """``mcma_dispatch`` shard_mapped over a mesh's data axes.
 
     x/logits are row-sharded over the data axes (specs from
@@ -628,7 +795,10 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
     psum-reduced stats on every shard.  ``tier`` (optional, (T,) int32,
     row-sharded like x) + ``tier_margins`` ((n_tiers,) float32,
     replicated) apply the per-request QoS margins per shard; the per-tier
-    stats are psum-reduced like every other count.
+    stats are psum-reduced like every other count.  ``residency``
+    (optional, (n_resident,) int32, replicated) enables library routing
+    exactly as in ``mcma_dispatch`` — the off-set/library stats are
+    psum-reduced too.
 
     Returns ``(y, invoke_stats)``: y row-sharded like x, invoke_stats
     psum-reduced to the global totals (replicated on every shard).
@@ -638,19 +808,22 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
     dp = tuple(data_axes) if data_axes is not None else dp_axes(mesh)
     specs = mcma_dispatch_specs(mesh, data_axes=dp,
                                 with_mask=row_mask is not None,
-                                with_tier=tier is not None)
+                                with_tier=tier is not None,
+                                with_residency=residency is not None)
     has_mask, has_tier = row_mask is not None, tier is not None
+    has_res = residency is not None
 
     def local(x_l, lg_l, ep, w1, b1, w2, b2, *extra):
         extra = list(extra)
         m_l = extra.pop(0) if has_mask else None
         t_l, tm = (extra.pop(0), extra.pop(0)) if has_tier else (None, None)
+        res = extra.pop(0) if has_res else None
         return mcma_dispatch(
             x_l, lg_l, partial(exact_fn, ep), w1, b1, w2, b2,
             exact_cap=exact_cap, invoke_cap=invoke_cap, backend=backend,
             block_t=block_t, interpret=interpret, stats_axes=dp,
             row_mask=m_l, weights_prepadded=weights_prepadded,
-            tier=t_l, tier_margins=tm)
+            tier=t_l, tier_margins=tm, residency=res)
 
     fn = shard_map_compat(local, mesh=mesh, in_specs=specs["in"],
                           out_specs=specs["out"],
@@ -662,4 +835,6 @@ def mcma_dispatch_sharded(mesh, x: jax.Array, logits: jax.Array,
         assert tier_margins is not None, \
             "sharded tiered dispatch needs the (n_tiers,) margins vector"
         args = args + (tier, tier_margins)
+    if has_res:
+        args = args + (residency,)
     return fn(*args)

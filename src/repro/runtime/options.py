@@ -1,0 +1,166 @@
+"""The consolidated serving API: ``ServeOptions`` + ``LibrarySpec``.
+
+Six PRs of serving features accreted ~20 loose keyword arguments on
+``DecodeServer.__init__`` and three argparse surfaces re-declaring the
+same flags.  This module is the single place serve-time state is
+declared from now on:
+
+    server = DecodeServer(cfg, params, options=ServeOptions(
+        batch=8, use_mcma_dispatch=True, autotune=True,
+        library=LibrarySpec(library_size=16, n_resident=4)))
+
+``ServeOptions`` is frozen — a value object describing one deployment,
+safe to share between a launcher, a benchmark, and a test.  The legacy
+kwarg form (``DecodeServer(cfg, params, batch=8, ...)``) still works
+through a one-``DeprecationWarning`` shim that folds the kwargs into a
+``ServeOptions`` (runtime/server.py), so every pre-existing call site
+keeps its exact semantics.
+
+``LibrarySpec`` declares the approximator-library residency runtime
+(ISSUE 7 / the paper's weight-shipping design at library scale): a
+library of ``library_size`` trained approximators of which
+``n_resident`` occupy the prepadded weight stacks at any moment, with a
+``ResidencyController`` (runtime/autotune.py) promoting/demoting library
+classes from the served routed-per-class EMA.  The spec carries ONLY
+serve-time policy; the trained library size itself is
+``ApproxConfig.library_size`` (configs/base.py) and must match.
+
+``ServeOptions.from_args`` pairs with ``runtime/cli.add_serve_options``
+so the three CLI surfaces (launch/serve.py, examples/serve_decode.py,
+benchmarks/bench_serve.py) share one flag inventory — a new knob lands
+in all three for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class LibrarySpec:
+    """Approximator-library residency policy (serve-time).
+
+    library_size    trained approximators in the library (must equal
+                    ``ApproxConfig.library_size`` of the checkpoint)
+    n_resident      slots in the prepadded weight stacks — the classes
+                    servable without a swap (becomes the serving
+                    ``n_approx``; capacities are per-slot)
+    promote_margin  promote the hottest off-set class over the coldest
+                    resident when its routed-share EMA exceeds
+                    ``promote_margin x`` the resident's (ratio hysteresis
+                    — a borderline class doesn't thrash)
+    demote_margin   absolute routed-share floor: a resident serving more
+                    than this fraction of traffic is never demoted,
+                    whatever is knocking
+    observe_window  controller decides once per this many observed ticks
+    cooldown        ticks after a swap before the next decision window
+                    counts (lets the EMA re-converge on the new set)
+    ema             smoothing factor for the routed-per-class shares
+    start           initial resident library ids; () = the first
+                    ``n_resident`` classes (library ids 0..n_resident-1)
+    """
+
+    library_size: int
+    n_resident: int
+    promote_margin: float = 1.5
+    demote_margin: float = 0.25
+    observe_window: int = 8
+    cooldown: int = 16
+    ema: float = 0.3
+    start: tuple = ()
+
+    def __post_init__(self):
+        assert self.n_resident >= 1, "need at least one resident slot"
+        assert self.library_size >= self.n_resident, (
+            f"library_size={self.library_size} must hold at least the "
+            f"{self.n_resident} resident classes")
+        assert self.promote_margin >= 1.0, \
+            "promote_margin < 1 would thrash on noise"
+        if self.start:
+            assert len(self.start) == self.n_resident and \
+                all(0 <= s < self.library_size for s in self.start), (
+                    f"start={self.start} must name {self.n_resident} "
+                    f"distinct library ids < {self.library_size}")
+
+    def initial_residency(self) -> tuple:
+        return tuple(self.start) if self.start \
+            else tuple(range(self.n_resident))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Everything a ``DecodeServer`` deployment decides at serve time.
+
+    Groups (one field per historic ``DecodeServer`` kwarg, same names,
+    same defaults — the legacy shim folds kwargs straight in):
+
+    batching:    batch, max_len, eos, greedy, seed
+    dispatch:    use_mcma_dispatch, backend ("pallas"/"xla"/None = config),
+                 route_scope ("layer"/"tick"/None = config), mesh
+    autotune:    autotune (True = default ladder, or an explicit rung
+                 tuple), drop_budget, autotune_kwargs
+    QoS:         qos_tiers (True = default table, or an ascending bound
+                 tuple), qos_app, qos_margin_scale
+    scheduling:  prefill_chunk, admission ("cost"/"fifo"),
+                 overflow ("reject"/"trim"), aging
+    library:     a ``LibrarySpec`` enabling approximator-library
+                 residency (None = the historic all-resident engine)
+    """
+
+    batch: int = 8
+    max_len: int = 512
+    eos: Optional[int] = None
+    greedy: bool = True
+    seed: int = 0
+    use_mcma_dispatch: bool = False
+    mesh: Any = None
+    autotune: Any = None
+    drop_budget: float = 0.05
+    autotune_kwargs: Optional[dict] = None
+    route_scope: Optional[str] = None
+    qos_tiers: Any = None
+    qos_app: Optional[str] = None
+    qos_margin_scale: float = 4.0
+    prefill_chunk: int = 0
+    admission: str = "cost"
+    overflow: str = "reject"
+    aging: float = 0.05
+    backend: Optional[str] = None
+    library: Optional[LibrarySpec] = None
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "ServeOptions":
+        """Build from an argparse namespace produced by
+        ``runtime/cli.add_serve_options`` (missing attributes keep their
+        field defaults, so a surface may register only a subset of the
+        shared flags).  ``overrides`` win over both.
+
+        Applies the historic implication chain: ``--qos-app`` /
+        ``--tier-bounds`` imply QoS; QoS / ``--autotune`` / a library
+        imply the MCMA dispatch engine.
+        """
+        kw = {}
+        for f in ("batch", "max_len", "drop_budget", "route_scope",
+                  "qos_app", "prefill_chunk", "admission", "overflow",
+                  "aging", "backend", "seed", "greedy", "eos"):
+            if hasattr(args, f):
+                kw[f] = getattr(args, f)
+        if getattr(args, "autotune", False):
+            kw["autotune"] = True
+        if getattr(args, "tier_bounds", None):
+            tb = args.tier_bounds
+            kw["qos_tiers"] = tuple(float(b) for b in tb.split(",")) \
+                if isinstance(tb, str) else tuple(tb)
+        elif getattr(args, "qos", False) or kw.get("qos_app"):
+            kw["qos_tiers"] = True
+        if getattr(args, "library_size", 0):
+            kw["library"] = LibrarySpec(
+                library_size=args.library_size,
+                n_resident=getattr(args, "n_resident", 0)
+                or min(4, args.library_size))
+        kw.update(overrides)
+        if kw.get("autotune") or kw.get("qos_tiers") or kw.get("library"):
+            kw.setdefault("use_mcma_dispatch", True)
+        elif getattr(args, "mcma_dispatch", False):
+            kw["use_mcma_dispatch"] = True
+        return cls(**kw)

@@ -30,7 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+import warnings
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.runtime import steps as steps_lib
+from repro.runtime.options import LibrarySpec, ServeOptions
 
 
 @dataclasses.dataclass
@@ -68,18 +70,129 @@ class Request:
     first_token_s: float | None = None
 
 
+@dataclasses.dataclass
+class DrainStats:
+    """Typed ``run_until_drained`` summary (was an ad-hoc dict).
+
+    Optional fields stay ``None`` when their feature was off for the run
+    (no MCMA dispatch -> no ``invocation_rate``; no QoS -> no
+    ``per_tier``; ...).  The mapping protocol preserves every historic
+    dict-style call site: ``stats["ticks"]``, ``"invocation_rate" in
+    stats`` (``None`` counts as absent, exactly like the old dict's
+    missing key), ``stats.get(...)``, and ``stats["anything"] = v``
+    (unknown keys land in ``extras`` — bench_serve stamps
+    ``replay_wall_s`` that way).  ``asdict()`` flattens to the old dict
+    shape for CSV/JSON writers, skipping ``None`` fields.
+    """
+
+    ticks: int = 0
+    wall_s: float = 0.0
+    undrained_queued: int = 0
+    undrained_inflight: int = 0
+    prefill_ticks: int = 0
+    prefill_tokens: int = 0
+    invocation_rate: Optional[float] = None
+    prefill_invocation_rate: Optional[float] = None
+    dropped_rows: Optional[float] = None
+    routed_per_class: Optional[list] = None
+    dispatched_per_class: Optional[list] = None
+    dropped_frac: Optional[float] = None
+    served_invocation_rate: Optional[float] = None
+    per_tier: Optional[list] = None
+    autotune: Optional[dict] = None
+    # approximator-library residency (LibrarySpec deployments only)
+    lib_routed_per_class: Optional[list] = None   # (library_size + 1,)
+    off_set_exact_rows: Optional[float] = None    # routed off-set, served exact
+    residency: Optional[dict] = None              # ResidencyController.summary()
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    def __getitem__(self, k):
+        if k in self.extras:
+            return self.extras[k]
+        if k in _DRAIN_FIELDS:
+            v = getattr(self, k)
+            if v is not None:
+                return v
+        raise KeyError(k)
+
+    def __setitem__(self, k, v):
+        if k in _DRAIN_FIELDS and k != "extras":
+            setattr(self, k, v)
+        else:
+            self.extras[k] = v
+
+    def __contains__(self, k):
+        return k in self.extras or (
+            k in _DRAIN_FIELDS and getattr(self, k) is not None)
+
+    def __iter__(self):
+        # iterate present keys like the dict this replaced (without
+        # this, the legacy __getitem__ iteration protocol probes s[0])
+        return iter(self.asdict())
+
+    def get(self, k, default=None):
+        try:
+            return self[k]
+        except KeyError:
+            return default
+
+    def asdict(self) -> dict:
+        d = {f: getattr(self, f) for f in _DRAIN_FIELDS
+             if f != "extras" and getattr(self, f) is not None}
+        d.update(self.extras)
+        return d
+
+    def keys(self):
+        return self.asdict().keys()
+
+    def items(self):
+        return self.asdict().items()
+
+
+_DRAIN_FIELDS = tuple(f.name for f in dataclasses.fields(DrainStats))
+
+# the historic DecodeServer.__init__ keyword surface (PRs 1-6) — every
+# name is also a ServeOptions field, so the shim is a dataclasses.replace
+_LEGACY_SERVE_KWARGS = tuple(
+    f.name for f in dataclasses.fields(ServeOptions) if f.name != "library")
+
+
 class DecodeServer:
-    def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
-                 max_len: int = 512, eos: int | None = None, greedy=True,
-                 seed: int = 0, use_mcma_dispatch: bool = False,
-                 mesh=None, autotune=None, drop_budget: float = 0.05,
-                 autotune_kwargs: dict | None = None,
-                 route_scope: str | None = None,
-                 qos_tiers=None, qos_app: str | None = None,
-                 qos_margin_scale: float = 4.0,
-                 prefill_chunk: int = 0, admission: str = "cost",
-                 overflow: str = "reject", aging: float = 0.05,
-                 backend: str | None = None):
+    def __init__(self, cfg: ModelConfig, params, *,
+                 options: ServeOptions | None = None, **legacy):
+        """``DecodeServer(cfg, params, options=ServeOptions(...))`` is the
+        canonical constructor — ``ServeOptions`` (runtime/options.py) is
+        the only way new serve-time state enters the server.
+
+        The historic kwarg form (``DecodeServer(cfg, params, batch=8,
+        use_mcma_dispatch=True, ...)``, PRs 1-6) still works: the kwargs
+        fold into the ServeOptions via ``dataclasses.replace`` under ONE
+        ``DeprecationWarning``, so legacy and options-style construction
+        are bit-identical (tests/test_serve_options.py pins it)."""
+        if legacy:
+            unknown = sorted(set(legacy) - set(_LEGACY_SERVE_KWARGS))
+            if unknown:
+                raise TypeError(
+                    f"DecodeServer: unknown kwargs {unknown} — serve-time "
+                    "state enters via options=ServeOptions(...) "
+                    f"(legacy kwargs: {sorted(_LEGACY_SERVE_KWARGS)})")
+            warnings.warn(
+                "DecodeServer(cfg, params, **kwargs) is deprecated — pass "
+                "options=ServeOptions(...) (runtime/options.py); the "
+                "kwargs were folded into one for you",
+                DeprecationWarning, stacklevel=2)
+            options = dataclasses.replace(options or ServeOptions(),
+                                          **legacy)
+        o = self.options = options if options is not None else ServeOptions()
+        batch, max_len, eos = o.batch, o.max_len, o.eos
+        greedy, seed = o.greedy, o.seed
+        use_mcma_dispatch, mesh = o.use_mcma_dispatch, o.mesh
+        autotune, drop_budget = o.autotune, o.drop_budget
+        autotune_kwargs, route_scope = o.autotune_kwargs, o.route_scope
+        qos_tiers, qos_app = o.qos_tiers, o.qos_app
+        qos_margin_scale = o.qos_margin_scale
+        prefill_chunk, admission = o.prefill_chunk, o.admission
+        overflow, aging, backend = o.overflow, o.aging, o.backend
         self.cfg, self.params = cfg, params
         self.batch, self.max_len, self.eos = batch, max_len, eos
         # qos_tiers: per-request error-bound tiers.  True -> the default
@@ -122,6 +235,40 @@ class DecodeServer:
                 tier_bounds=self.tier_bounds,
                 tier_margins=tuple(float(m) for m in self.tier_margins)))
             self.cfg = cfg
+        # library: approximator-library residency (runtime/options.
+        # LibrarySpec).  The checkpoint's full library stays in params
+        # (stacks sized by cfg.approx.n_live); the SERVING n_approx
+        # becomes the spec's resident-slot count, so capacities, the
+        # dispatch plan, and the autotune ladder are all per-slot.  Each
+        # tick feeds the current residency vector — a TRACED input — into
+        # the compiled step (kernels/ops.gather_resident_stacks picks the
+        # resident rows), and the ResidencyController promotes/demotes
+        # library classes from the served lib_counts EMA: a swap is a new
+        # vector through the same compiled program, zero retraces.
+        self.library = o.library
+        self.residency_controller = None
+        self.residency = None
+        if self.library is not None:
+            from repro.runtime import autotune as at
+            spec = self.library
+            assert use_mcma_dispatch, \
+                "library residency routes through the dispatch engine; " \
+                "needs use_mcma_dispatch"
+            assert cfg.approx.n_live == spec.library_size, (
+                f"LibrarySpec.library_size={spec.library_size} must equal "
+                f"the checkpoint's trained approximator count "
+                f"(cfg.approx.n_live={cfg.approx.n_live})")
+            assert not cfg.approx.invoke_fracs \
+                or len(cfg.approx.invoke_fracs) == spec.n_resident, (
+                    "per-class invoke_fracs are per resident SLOT "
+                    f"(need {spec.n_resident}, got "
+                    f"{len(cfg.approx.invoke_fracs)})")
+            cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+                cfg.approx, n_approx=spec.n_resident,
+                library_size=spec.library_size))
+            self.cfg = cfg
+            self.residency_controller = at.ResidencyController(spec)
+            self.residency = np.asarray(spec.initial_residency(), np.int32)
         # route_scope: "tick" routes once per decode tick (one DispatchPlan
         # from the tick-router head, reused by every layer of the scan) —
         # the per-tick metrics the server (and the autotune controller)
@@ -226,6 +373,10 @@ class DecodeServer:
         self.routed_history_cap = 4096
         self.tier_routed_sum = None      # (n_tiers, n+1) per-tier routed
         self.tier_dispatched_sum = None  # (n_tiers, n+1) per-tier served
+        self.lib_routed_sum = None       # (library_size+1,) full-library
+                                         # routed demand (decode phase)
+        self.off_set_sum = 0.0           # rows routed to off-set library
+                                         # classes (served on the exact path)
         # prefill-phase dispatch stats accumulate SEPARATELY: the
         # invocation rate, the autotune controller, routed_history and the
         # QoS ledger are decode-phase signals (the paper's metric is the
@@ -313,13 +464,20 @@ class DecodeServer:
                               self._named_shardings(R.cache_pspecs(self.mesh,
                                                                    cache)))
 
-    def _decode(self, *args):
+    def _decode(self, *args, **kw):
         with steps_lib.serve_mesh_context(self.mesh):
-            return self._active_step()(*args)
+            return self._active_step()(*args, **kw)
 
-    def _prefill(self, *args):
+    def _prefill(self, *args, **kw):
         with steps_lib.serve_mesh_context(self.mesh):
-            return self._active_chunk_step()(*args)
+            return self._active_chunk_step()(*args, **kw)
+
+    def _residency_kw(self) -> dict:
+        """The traced residency vector for this tick's step call (empty
+        for non-library deployments — the steps' default ``None``)."""
+        if self.residency is None:
+            return {}
+        return {"residency": jnp.asarray(self.residency)}
 
     def submit(self, req: Request):
         """Queue a request; per-request limits and QoS are validated HERE,
@@ -477,7 +635,7 @@ class DecodeServer:
         if self.use_mcma_dispatch and self.tier_bounds is not None:
             args += [None, jnp.asarray(self._tiers_arr()),
                      jnp.asarray(self.tier_margins)]
-        self.cache, m = self._prefill(*args)
+        self.cache, m = self._prefill(*args, **self._residency_kw())
         tokens = int(nv.sum())
         inv = None
         if self.use_mcma_dispatch and "invocation" in m:
@@ -518,10 +676,12 @@ class DecodeServer:
                 logits, self.cache, m = self._decode(
                     self.params, self.cache, jnp.asarray(toks), mask,
                     jnp.asarray(self._tiers_arr()),
-                    jnp.asarray(self.tier_margins))
+                    jnp.asarray(self.tier_margins),
+                    **self._residency_kw())
             else:
                 logits, self.cache, m = self._decode(self.params, self.cache,
-                                                     jnp.asarray(toks), mask)
+                                                     jnp.asarray(toks), mask,
+                                                     **self._residency_kw())
             n_active = sum(active)
             inv = None
             if "invocation" in m:
@@ -551,6 +711,20 @@ class DecodeServer:
                 if self.controller is not None:
                     self.controller.observe(
                         {"class_counts": routed, "dropped": m["dropped_rows"]})
+                if self.residency_controller is not None \
+                        and "lib_counts" in m:
+                    # full-library demand histogram: feed the residency
+                    # controller and adopt whatever hot set it returns —
+                    # the next tick's step call carries the new vector
+                    # through the SAME compiled program (zero retraces)
+                    lib = np.asarray(m["lib_counts"], float)
+                    self.lib_routed_sum = lib \
+                        if self.lib_routed_sum is None \
+                        else self.lib_routed_sum + lib
+                    self.off_set_sum += float(m["off_set_exact_rows"])
+                    self.residency = np.asarray(
+                        self.residency_controller.observe(
+                            {"lib_counts": lib}), np.int32)
             self._log_tick("decode", n_active, inv)
         else:
             logits, self.cache = self._decode(self.params, self.cache,
@@ -605,12 +779,14 @@ class DecodeServer:
         self.ticks += 1
         return True
 
-    def run_until_drained(self, max_ticks: int = 10_000):
+    def run_until_drained(self, max_ticks: int = 10_000) -> DrainStats:
+        """Tick until queue and slots are empty (or ``max_ticks``); returns
+        a ``DrainStats`` — dict-style access preserved for old callers."""
         t0 = time.time()
         while (self.queue or any(s is not None for s in self.slots)) \
                 and self.ticks < max_ticks:
             self.tick()
-        stats = {"ticks": self.ticks, "wall_s": time.time() - t0}
+        stats = DrainStats(ticks=self.ticks, wall_s=time.time() - t0)
         # tick-budget exhaustion is NOT a quiet success: stranded requests
         # are marked aborted (done stays False) and counted here, so a
         # caller can never mistake a truncated drain for a finished one
@@ -668,8 +844,17 @@ class DecodeServer:
                             float((routed_k - disp_k).sum()) / max(rows, 1.0),
                     })
                 stats["per_tier"] = per
+            if self.lib_routed_sum is not None:
+                # full-library routed demand vs what the resident set
+                # could serve: off_set_exact_rows is the residency
+                # opportunity cost (rows a bigger/better-tuned hot set
+                # would have approximated)
+                stats["lib_routed_per_class"] = self.lib_routed_sum.tolist()
+                stats["off_set_exact_rows"] = self.off_set_sum
         if self.controller is not None:
             stats["autotune"] = self.controller.summary()
+        if self.residency_controller is not None:
+            stats["residency"] = self.residency_controller.summary()
         return stats
 
     def derived_ladder(self, **kwargs):

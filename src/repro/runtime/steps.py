@@ -177,6 +177,11 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
     compiled step serves every tier mix and margin setting; only the
     capacity fields of an operating point (shapes) force a recompile.
 
+    The optional trailing ``residency`` ((n_resident,) int32 library
+    class ids, library configs only) is likewise TRACED — the
+    ResidencyController swaps the hot set by feeding a new vector
+    through the SAME compiled step, zero retraces.
+
     ``backend`` (with ``use_mcma_dispatch``) overrides the dispatch
     backend: default "pallas", or "xla" for the oracle engine."""
     cfg = _serve_cfg(cfg, use_mcma_dispatch=use_mcma_dispatch,
@@ -184,10 +189,11 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
                      route_scope=route_scope, backend=backend)
 
     def decode_step(params, cache, inputs, row_mask=None, tier=None,
-                    tier_margins=None):
+                    tier_margins=None, residency=None):
         return M.decode(cfg, params, cache, inputs, serve=True,
                         collect_metrics=with_stats, row_mask=row_mask,
-                        tier=tier, tier_margins=tier_margins)
+                        tier=tier, tier_margins=tier_margins,
+                        residency=residency)
     return decode_step
 
 
@@ -220,9 +226,10 @@ def make_prefill_chunk_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False
                      route_scope=route_scope, backend=backend)
 
     def prefill_chunk_step(params, cache, tokens, n_valid, row_mask=None,
-                           tier=None, tier_margins=None):
+                           tier=None, tier_margins=None, residency=None):
         return M.decode_chunk(cfg, params, cache, tokens, n_valid,
                               serve=True, collect_metrics=with_stats,
                               row_mask=row_mask, tier=tier,
-                              tier_margins=tier_margins)
+                              tier_margins=tier_margins,
+                              residency=residency)
     return prefill_chunk_step

@@ -212,7 +212,8 @@ def shard_capacity(t_local: int, frac: float, *, slack: float = 1.0) -> int:
 
 def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None,
                         with_mask: bool = False,
-                        with_tier: bool = False) -> dict:
+                        with_tier: bool = False,
+                        with_residency: bool = False) -> dict:
     """Specs for ``runtime/dispatch.mcma_dispatch_sharded`` on flat (T, d)
     row batches: x/logits/y row-sharded over the data axes; exact params,
     router logits producer, and the stacked approximator weights
@@ -220,11 +221,14 @@ def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None,
     ``with_mask`` appends the (T,) active-row mask, row-sharded like x;
     ``with_tier`` appends the (T,) QoS tier vector (row-sharded) plus the
     (n_tiers,) traced margins vector (replicated — every shard applies
-    the same tier->margin map to its own rows)."""
+    the same tier->margin map to its own rows); ``with_residency``
+    appends the (n_resident,) library-residency map (replicated — every
+    shard folds library classes onto the same resident slots, and the
+    lib/off-set stats psum to the same global totals)."""
     dp = tuple(data_axes) if data_axes is not None else _dp_axes(mesh)
     row = P(dp, None)
     # in: (x, logits, exact_params, a_w1, a_b1, a_w2, a_b2[, row_mask]
-    #      [, tier, tier_margins]);
+    #      [, tier, tier_margins][, residency]);
     # P() prefixes cover arbitrary exact_params pytrees.
     ins = (row, row, P(), P(None, None, None), P(None, None),
            P(None, None, None), P(None, None))
@@ -232,12 +236,15 @@ def mcma_dispatch_specs(mesh: Mesh, *, data_axes=None,
         ins = ins + (P(dp),)
     if with_tier:
         ins = ins + (P(dp), P(None))
+    if with_residency:
+        ins = ins + (P(None),)
     return {"in": ins, "out": (row, P())}
 
 
 def dispatch_plan_specs(mesh: Mesh, like=None, *, data_axes=None,
                         n_approx=None, exact_cap=None, invoke_cap=None,
-                        block_t=None, backend=None, n_tiers=1):
+                        block_t=None, backend=None, n_tiers=1,
+                        library_size=0):
     """PartitionSpecs for a ``runtime/dispatch.DispatchPlan`` built and
     consumed inside the same shard_map region over the data axes.
 
@@ -246,31 +253,36 @@ def dispatch_plan_specs(mesh: Mesh, like=None, *, data_axes=None,
     values are SHARD-LOCAL indices, which is exactly what re-entering a
     shard_map with the same row sharding restores; ``tile_cls`` shards
     its per-shard tile runs the same way; the psum-reduced count fields
-    (``counts``/``dispatched``/``t_total``/``executed`` and the per-tier
-    ``tier_counts``/``tier_dispatched`` matrices) are replicated.
+    (``counts``/``dispatched``/``t_total``/``executed``, the per-tier
+    ``tier_counts``/``tier_dispatched`` matrices, and the library
+    ``lib_counts``/``off_set_rows``) are replicated.
     Returns a DispatchPlan-of-specs (the spec tree a shard_map in/out
     position needs), carrying the same static metadata — pass ``like=``
     an existing plan to copy its metadata, or give the meta kwargs
     explicitly when building the out-spec before any plan exists."""
     from repro.runtime.dispatch import DispatchPlan
     if like is not None:
-        n_approx, exact_cap, invoke_cap, block_t, backend, n_tiers = (
+        (n_approx, exact_cap, invoke_cap, block_t, backend, n_tiers,
+         library_size) = (
             like.n_approx, like.exact_cap, like.invoke_cap, like.block_t,
-            like.backend, like.n_tiers)
+            like.backend, like.n_tiers, like.library_size)
     dp = tuple(data_axes) if data_axes is not None else _dp_axes(mesh)
     row, rep = P(dp), P()
     return DispatchPlan(cls=row, rank=row, eff=row, order=row, pos=row,
                         tile_cls=row, exact_keep=row, exact_slot=row,
                         counts=rep, dispatched=rep, t_total=rep,
                         executed=rep, tier=row, tier_counts=rep,
-                        tier_dispatched=rep, n_approx=n_approx,
+                        tier_dispatched=rep, lib_counts=rep,
+                        off_set_rows=rep, n_approx=n_approx,
                         exact_cap=exact_cap, invoke_cap=invoke_cap,
-                        block_t=block_t, backend=backend, n_tiers=n_tiers)
+                        block_t=block_t, backend=backend, n_tiers=n_tiers,
+                        library_size=library_size)
 
 
 def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None,
                        with_tier: bool = False,
-                       mask2d: bool = False) -> dict:
+                       mask2d: bool = False,
+                       with_residency: bool = False) -> dict:
     """Specs for the manual ApproxFFN serve path (models/approx_ffn.py):
     exact FFN weights Megatron-TP over "model" + FSDP over the data axes;
     router/approximators replicated (tiny — TP would only buy per-layer
@@ -282,7 +294,10 @@ def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None,
     dim like the tokens it gates.  ``plan`` (a DispatchPlan, tick
     scope) swaps the mask+stats plumbing for the precomputed plan: in =
     (weights, x, plan), out = y only (the plan already carries the global
-    stats — and the tier split, so no tier args re-enter)."""
+    stats — and the tier split, so no tier args re-enter).
+    ``with_residency`` appends the replicated (n_resident,) library
+    residency map (layer scope; a tick plan already embeds the fold and
+    the stacks are gathered outside the shard_map)."""
     dp = _dp_axes(mesh)
     ffn = {"w_in": P(dp, "model"), "w_out": P("model", dp)}
     if gated:
@@ -297,6 +312,8 @@ def approx_serve_specs(mesh: Mesh, *, gated: bool, plan=None,
     ins = (weights, P(dp, None, None), P(dp))
     if with_tier:
         ins = ins + (P(dp), P(None))
+    if with_residency:
+        ins = ins + (P(None),)
     return {"in": ins, "out": (P(dp, None, None), P())}
 
 

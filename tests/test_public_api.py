@@ -1,0 +1,98 @@
+"""Snapshot of the serving public API (``repro.runtime``).
+
+The ServeOptions/LibrarySpec consolidation made ``repro.runtime`` the
+one import surface for deployments; this file pins it.  A failure here
+means the public API changed: if deliberate, update the snapshot IN THE
+SAME PR and call it out as breaking (removal/rename) or additive (new
+name — append it).
+"""
+import dataclasses
+
+import repro.runtime as rt
+
+RUNTIME_ALL = (
+    "CapacityController",
+    "DecodeServer",
+    "DispatchPlan",
+    "DrainStats",
+    "InvokeStats",
+    "LibrarySpec",
+    "OperatingPoint",
+    "Request",
+    "ResidencyController",
+    "ServeOptions",
+    "Swap",
+    "Switch",
+    "add_serve_options",
+    "default_ladder",
+    "execute_dispatch",
+    "ladder_from_counts",
+    "make_dispatch_plan",
+    "mcma_dispatch",
+    "plan_invoke_stats",
+)
+
+SERVE_OPTIONS_FIELDS = (
+    "batch", "max_len", "eos", "greedy", "seed", "use_mcma_dispatch",
+    "mesh", "autotune", "drop_budget", "autotune_kwargs", "route_scope",
+    "qos_tiers", "qos_app", "qos_margin_scale", "prefill_chunk",
+    "admission", "overflow", "aging", "backend", "library",
+)
+
+LIBRARY_SPEC_FIELDS = (
+    "library_size", "n_resident", "promote_margin", "demote_margin",
+    "observe_window", "cooldown", "ema", "start",
+)
+
+INVOKE_STATS_FIELDS = (
+    "class_counts", "dispatched", "dropped", "exact_frac", "invocation",
+    "executed_rows", "padding_rows", "tier_counts", "tier_dispatched",
+    "tier_dropped", "tier_served_invocation", "lib_counts",
+    "off_set_exact_rows",
+)
+
+DRAIN_STATS_FIELDS = (
+    "ticks", "wall_s", "undrained_queued", "undrained_inflight",
+    "prefill_ticks", "prefill_tokens", "invocation_rate",
+    "prefill_invocation_rate", "dropped_rows", "routed_per_class",
+    "dispatched_per_class", "dropped_frac", "served_invocation_rate",
+    "per_tier", "autotune", "lib_routed_per_class", "off_set_exact_rows",
+    "residency", "extras",
+)
+
+
+def _fields(cls):
+    return tuple(f.name for f in dataclasses.fields(cls))
+
+
+def test_runtime_all_snapshot():
+    assert tuple(rt.__all__) == RUNTIME_ALL
+    for name in rt.__all__:
+        assert getattr(rt, name, None) is not None, name
+
+
+def test_serve_options_field_snapshot():
+    assert _fields(rt.ServeOptions) == SERVE_OPTIONS_FIELDS
+    assert _fields(rt.LibrarySpec) == LIBRARY_SPEC_FIELDS
+
+
+def test_stats_field_snapshots():
+    assert _fields(rt.InvokeStats) == INVOKE_STATS_FIELDS
+    assert _fields(rt.DrainStats) == DRAIN_STATS_FIELDS
+
+
+def test_value_objects_are_frozen():
+    for cls in (rt.ServeOptions, rt.LibrarySpec, rt.InvokeStats):
+        assert cls.__dataclass_params__.frozen, cls.__name__
+
+
+def test_canonical_constructor_shape():
+    """The documented deployment spelling type-checks end to end."""
+    o = rt.ServeOptions(batch=8, use_mcma_dispatch=True,
+                        library=rt.LibrarySpec(library_size=16,
+                                               n_resident=4))
+    assert o.library.initial_residency() == (0, 1, 2, 3)
+    import inspect
+    sig = inspect.signature(rt.DecodeServer.__init__)
+    assert "options" in sig.parameters
+    assert sig.parameters["options"].kind is inspect.Parameter.KEYWORD_ONLY

@@ -1,0 +1,202 @@
+"""The consolidated serving API: ``ServeOptions`` construction, the
+``from_args`` implication chain against the shared ``add_serve_options``
+flag inventory, and the legacy-kwarg migration shim.
+
+The migration contract this file pins:
+  * ``DecodeServer(cfg, params, batch=...)`` (the historic kwarg form)
+    still works, emits EXACTLY ONE ``DeprecationWarning``, and produces
+    bit-identical tokens and drain stats to the ``options=`` spelling;
+  * an unknown kwarg is a ``TypeError`` (not a silently-ignored option);
+  * the three CLI surfaces share one flag inventory — a namespace from
+    ``add_serve_options`` folds into a ``ServeOptions`` with the historic
+    implications (qos/app/bounds -> tiers; tiers/autotune/library ->
+    MCMA dispatch engine).
+"""
+import argparse
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models import model as M
+from repro.runtime.cli import add_serve_options
+from repro.runtime.options import LibrarySpec, ServeOptions
+from repro.runtime.server import DecodeServer, DrainStats, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(**approx_over):
+    cfg = smoke_config(get_config("internlm2-1.8b"))
+    if approx_over:
+        cfg = dataclasses.replace(cfg, approx=dataclasses.replace(
+            cfg.approx, **approx_over))
+    return cfg
+
+
+def _wave(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(1, cfg.vocab, 5)
+                    .astype(np.int32), max_new=5) for i in range(n)]
+
+
+def _drain(server, reqs):
+    for r in reqs:
+        server.submit(r)
+    stats = server.run_until_drained(max_ticks=300)
+    assert all(r.done for r in reqs)
+    return stats, [list(r.out) for r in reqs]
+
+
+def _parse(argv, **defaults):
+    ap = argparse.ArgumentParser()
+    add_serve_options(ap, **defaults)
+    return ap.parse_args(argv)
+
+
+# ---------------------------------------------------------------------------
+# from_args: the implication chain
+# ---------------------------------------------------------------------------
+
+def test_from_args_defaults_match_field_defaults():
+    o = ServeOptions.from_args(_parse([]))
+    d = ServeOptions()
+    # a bare parse reproduces a bare ServeOptions up to the CLI-side
+    # defaults (the CLI turns chunked prefill on; the constructor's 0
+    # keeps the historic token-granularity server)
+    assert o == dataclasses.replace(d, batch=o.batch, max_len=o.max_len,
+                                    prefill_chunk=16)
+    assert o.use_mcma_dispatch is False and o.library is None
+
+
+def test_from_args_qos_implies_tiers_and_dispatch():
+    o = ServeOptions.from_args(_parse(["--qos"]))
+    assert o.qos_tiers is True and o.use_mcma_dispatch
+    o = ServeOptions.from_args(_parse(["--qos-app", "fft"]))
+    assert o.qos_app == "fft" and o.qos_tiers is True
+    o = ServeOptions.from_args(_parse(["--tier-bounds", "0.02,0.05,0.1"]))
+    assert o.qos_tiers == (0.02, 0.05, 0.1) and o.use_mcma_dispatch
+
+
+def test_from_args_autotune_implies_dispatch():
+    o = ServeOptions.from_args(_parse(["--autotune"]))
+    assert o.autotune is True and o.use_mcma_dispatch
+
+
+def test_from_args_library_flags_build_spec():
+    o = ServeOptions.from_args(_parse(["--library-size", "16",
+                                       "--n-resident", "4"]))
+    assert o.library == LibrarySpec(library_size=16, n_resident=4)
+    assert o.use_mcma_dispatch
+    # --n-resident defaults to min(4, library_size)
+    o = ServeOptions.from_args(_parse(["--library-size", "2"]))
+    assert o.library.n_resident == 2
+    o = ServeOptions.from_args(_parse(["--library-size", "16"]))
+    assert o.library.n_resident == 4
+    # no --library-size: no spec, no implication
+    o = ServeOptions.from_args(_parse(["--n-resident", "4"]))
+    assert o.library is None and not o.use_mcma_dispatch
+
+
+def test_from_args_overrides_win():
+    o = ServeOptions.from_args(_parse(["--batch", "2"]), batch=32,
+                               mesh="sentinel")
+    assert o.batch == 32 and o.mesh == "sentinel"
+
+
+def test_add_serve_options_rejects_unknown_default():
+    ap = argparse.ArgumentParser()
+    with pytest.raises((AssertionError, ValueError, TypeError)):
+        add_serve_options(ap, not_a_flag=3)
+
+
+def test_serve_options_frozen():
+    o = ServeOptions()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        o.batch = 4
+
+
+# ---------------------------------------------------------------------------
+# the legacy-kwarg shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_bit_identical_to_options():
+    cfg = _cfg(enable=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = DecodeServer(cfg, params, batch=3, max_len=48,
+                              use_mcma_dispatch=True, prefill_chunk=4,
+                              autotune=True, drop_budget=0.1)
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, "legacy kwargs must warn EXACTLY once"
+    assert "ServeOptions" in str(deps[0].message)
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        new = DecodeServer(cfg, params, options=ServeOptions(
+            batch=3, max_len=48, use_mcma_dispatch=True, prefill_chunk=4,
+            autotune=True, drop_budget=0.1))
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)], \
+        "the options= spelling must NOT warn"
+
+    assert legacy.options == new.options
+    s_old, toks_old = _drain(legacy, _wave(cfg))
+    s_new, toks_new = _drain(new, _wave(cfg))
+    assert toks_old == toks_new, "legacy shim changed served tokens"
+    for k in ("ticks", "prefill_ticks", "invocation_rate",
+              "served_invocation_rate", "dropped_rows"):
+        assert np.allclose(s_old[k], s_new[k]), k
+
+
+def test_legacy_unknown_kwarg_is_type_error():
+    cfg = _cfg()
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(TypeError, match="batchsize"):
+        DecodeServer(cfg, params, batchsize=4)
+
+
+def test_legacy_kwargs_layer_over_options():
+    """Mixing options= with a legacy kwarg: the kwarg wins (replace)."""
+    cfg = _cfg()
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("ignore")
+        srv = DecodeServer(cfg, params,
+                           options=ServeOptions(batch=2, max_len=32),
+                           batch=3)
+    assert srv.options.batch == 3 and srv.options.max_len == 32
+
+
+def test_library_only_via_options():
+    """The library feature is options-only — there is no legacy kwarg
+    route into residency, so new-style users never see the warning."""
+    from repro.runtime.server import _LEGACY_SERVE_KWARGS
+    assert "library" not in _LEGACY_SERVE_KWARGS
+    assert set(_LEGACY_SERVE_KWARGS) == {
+        f.name for f in dataclasses.fields(ServeOptions)} - {"library"}
+
+
+# ---------------------------------------------------------------------------
+# DrainStats: the typed drain summary keeps its dict ergonomics
+# ---------------------------------------------------------------------------
+
+def test_drain_stats_mapping_protocol():
+    s = DrainStats(ticks=7, wall_s=1.5)
+    assert s["ticks"] == 7 and "ticks" in s
+    assert "invocation_rate" not in s          # None fields are absent
+    with pytest.raises(KeyError):
+        s["invocation_rate"]
+    s["invocation_rate"] = 0.25                # field write
+    s["replay_wall_s"] = 2.0                   # unknown key -> extras
+    assert s.invocation_rate == 0.25
+    assert s["replay_wall_s"] == 2.0 and "replay_wall_s" in s
+    d = s.asdict()
+    assert d["ticks"] == 7 and d["replay_wall_s"] == 2.0
+    assert "dropped_rows" not in d             # still-None fields skipped
+    assert s.get("missing", "dflt") == "dflt"
+    assert set(d) == set(dict(s.items()))
