@@ -5,9 +5,10 @@
 PY ?= python
 MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
-.PHONY: test test-tier1 test-multidevice bench-quick bench-dispatch \
-	bench-dispatch-sharded bench-autotune bench-decode-tick bench-qos \
-	bench-library bench-ci-dispatch bench-serve bench-serve-sharded deps
+.PHONY: test test-tier1 test-multidevice analyze analyze-lint bench-quick \
+	bench-dispatch bench-dispatch-sharded bench-autotune bench-decode-tick \
+	bench-qos bench-library bench-ci-dispatch bench-serve \
+	bench-serve-sharded deps
 
 deps:
 	$(PY) -m pip install "jax[cpu]" pytest hypothesis
@@ -17,6 +18,17 @@ test-tier1:
 
 test:
 	$(PY) -m pytest -q
+
+# the engine contract gate (docs/analysis.md): stage 1 AST-lints the
+# sources (RL001-RL005), stage 2 trace-audits the real entrypoints
+# across capacities x QoS margins x residency sets (TA001-TA003); any
+# finding not grandfathered in analysis_baseline.txt exits nonzero
+analyze:
+	PYTHONPATH=src JAX_PLATFORMS=cpu $(PY) -m repro.analysis
+
+# stage 1 only — pure stdlib, runs in ~2s without jax installed
+analyze-lint:
+	PYTHONPATH=src $(PY) -m repro.analysis --stage lint
 
 # mirrors the CI "multidevice" leg: shard_map tests (incl. the tick-scope
 # mesh decode + the QoS tier-mix module) + the sharded dispatch microbench

@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.jit_cache import assert_zero_retrace
 from repro.runtime import dispatch as D
 
 OUT = os.path.join(os.path.dirname(__file__), "out")
@@ -358,8 +359,7 @@ def _qos_leg(rows, *, quick, devices=1):
     # margins and tier mixes are traced inputs: every mix above reused
     # ONE compiled program per (rung, backend)
     for f in fns.values():
-        if hasattr(f, "_cache_size"):
-            assert f._cache_size() == 1, "tier mix forced a retrace"
+        assert_zero_retrace(f, "a tier-mix change")
 
 
 def _library_leg(rows, *, quick, devices=1):
@@ -518,8 +518,7 @@ def _library_leg(rows, *, quick, devices=1):
         "residency tuning must serve strictly more approximator rows " \
         "than the static resident set at the same capacities"
     for backend, f in fns.items():
-        assert f._cache_size() == 1, \
-            f"{backend}: a residency swap forced a retrace"
+        assert_zero_retrace(f, f"{backend}: a residency swap")
 
 
 def _sub_jaxprs(eqn):

@@ -1,0 +1,47 @@
+"""Static + trace analysis for the MCMA serving engine.
+
+Two stages, one findings vocabulary:
+
+  * **lint** (``repro.analysis.lint``) — a pure-stdlib AST pass over the
+    sources enforcing the contracts the AST can see: RL001 retrace
+    hazards, RL002 host syncs on the serve path, RL003 pytree
+    registration drift, RL004 undeclared collective axes, RL005
+    unguarded Pallas grid arithmetic;
+  * **audit** (``repro.analysis.audit``) — traces the real engine
+    entrypoints across capacities x QoS margins x residency sets and
+    asserts one-compile-per-entrypoint (TA001), int32 stats (TA002),
+    and no host callbacks (TA003).
+
+CLI: ``python -m repro.analysis`` (see ``__main__``); ``make analyze``
+runs both stages against the checked-in baseline and fails on any NEW
+finding.  ``repro.analysis.jit_cache.assert_zero_retrace`` is the
+shared test-side helper replacing ad-hoc ``fn._cache_size() == 1``
+asserts.
+"""
+from repro.analysis.findings import (Finding, load_baseline,
+                                     split_by_baseline, write_baseline)
+from repro.analysis.jit_cache import assert_zero_retrace, cache_size
+
+__all__ = [
+    "Finding", "load_baseline", "split_by_baseline", "write_baseline",
+    "assert_zero_retrace", "cache_size", "run_lint", "run_audit",
+]
+
+
+def run_lint(paths=None, root="."):
+    """Stage 1 over ``paths`` (default: src/repro, tests, benchmarks
+    under ``root``).  Stdlib-only — safe without jax installed."""
+    from pathlib import Path
+
+    from repro.analysis.lint import lint_paths
+    root = Path(root)
+    if paths is None:
+        paths = [p for p in (root / "src" / "repro", root / "tests",
+                             root / "benchmarks") if p.exists()]
+    return lint_paths([Path(p) for p in paths], root)
+
+
+def run_audit(**kw):
+    """Stage 2 (imports jax; see ``repro.analysis.audit.run_audit``)."""
+    from repro.analysis.audit import run_audit as _run
+    return _run(**kw)

@@ -1,0 +1,72 @@
+"""Findings + the checked-in baseline — the linter's currency.
+
+A ``Finding`` is one keyed rule violation.  Its ``key`` deliberately
+excludes the line number: the baseline must survive unrelated edits that
+shift code around, so findings are identified by (rule, file, enclosing
+scope, detail) and the line is display-only.
+
+Baseline workflow (docs/analysis.md):
+  * ``python -m repro.analysis --update-baseline`` writes every current
+    finding's key to the baseline file, one per line; ``#`` comments (one
+    line of justification per grandfathered entry) are kept verbatim.
+  * a finding whose key appears in the baseline is reported as
+    grandfathered and does NOT fail the run; every NEW finding does.
+  * baseline entries that no longer match any finding are reported as
+    stale (fix landed — prune the entry) but never fail the run.
+
+This module is importable without jax so the lint stage stays cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str        # "RL001".."RL005" (lint) / "TA001".."TA003" (audit)
+    path: str        # repo-relative, forward slashes
+    line: int        # 1-based; 0 when the finding has no source anchor
+    message: str     # human-readable, specific
+    detail: str = ""  # stable discriminator for the key (symbol, axis, ...)
+    scope: str = ""   # enclosing function/class name ("" = module level)
+
+    @property
+    def key(self) -> str:
+        """Line-number-free identity used for baseline matching."""
+        parts = [self.rule, self.path, self.scope, self.detail]
+        return ":".join(p.replace(":", "_") for p in parts)
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{self.rule} {loc} [{self.scope or '<module>'}] {self.message}"
+
+
+def load_baseline(path: Path) -> set[str]:
+    """Baseline keys; missing file = empty baseline."""
+    if not path.is_file():
+        return set()
+    keys = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            keys.add(line)
+    return keys
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    lines = ["# repro.analysis baseline — grandfathered findings, one key",
+             "# per line.  Add a '# why' comment above every entry you",
+             "# suppress; prune entries the tool reports as stale.", ""]
+    lines += sorted({f.key for f in findings})
+    path.write_text("\n".join(lines) + "\n")
+
+
+def split_by_baseline(findings: list[Finding], baseline: set[str]):
+    """-> (new, grandfathered, stale_keys)."""
+    new = [f for f in findings if f.key not in baseline]
+    old = [f for f in findings if f.key in baseline]
+    stale = baseline - {f.key for f in findings}
+    return new, old, stale

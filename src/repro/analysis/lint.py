@@ -1,0 +1,120 @@
+"""Stage 1: the AST linter driver.
+
+Walks Python sources (default: ``src/repro``), parses each module once,
+and runs every rule in ``repro.analysis.rules.ALL_RULES`` over it.  Pure
+stdlib — the lint stage never imports jax, so it runs in well under a
+second and is safe to hook anywhere.
+
+``__pycache__`` / ``.pytest_cache`` / VCS and output directories are
+excluded unconditionally: lint findings must be keyed to checked-in
+sources only (the .gitignore keeps the same directories out of the
+repo).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+from repro.analysis.rules import ALL_RULES
+
+EXCLUDE_DIRS = {"__pycache__", ".pytest_cache", ".git", ".hypothesis",
+                "out", ".venv", "node_modules", "runs"}
+
+# serve-path modules: every function body in these executes under jit
+# (RL002 scans them whole; elsewhere only jit-decorated functions are in
+# scope).  Prefixes are repo-relative with forward slashes.
+SERVE_PATH_PREFIXES = (
+    "src/repro/kernels/",
+    "src/repro/runtime/dispatch.py",
+    "src/repro/runtime/steps.py",
+    "src/repro/models/",
+)
+
+# where RL004 learns the declared mesh axis names
+AXIS_SPEC_MODULE = "src/repro/sharding/rules.py"
+
+
+class LintContext:
+    """Per-run shared state handed to every rule via ModuleInfo.ctx."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root)
+        self._axes: set[str] | None | bool = False   # False = not computed
+
+    def is_serve_path(self, relpath: str) -> bool:
+        return relpath.startswith(SERVE_PATH_PREFIXES)
+
+    def declared_axes(self) -> set[str] | None:
+        """Mesh axis names the spec layer declares: identifier-like string
+        constants inside ``*_axes`` functions and ``P(...)`` calls of
+        sharding/rules.py.  None when the module is absent (rule RL004
+        then stays silent)."""
+        if self._axes is not False:
+            return self._axes
+        spec = self.root / AXIS_SPEC_MODULE
+        if not spec.is_file():
+            self._axes = None
+            return None
+        tree = ast.parse(spec.read_text())
+        axes: set[str] = set()
+
+        def strings(node):
+            return {n.value for n in ast.walk(node)
+                    if isinstance(n, ast.Constant)
+                    and isinstance(n.value, str) and n.value.isidentifier()
+                    and len(n.value) <= 16}
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name.endswith("_axes"):
+                for stmt in node.body:
+                    if not (isinstance(stmt, ast.Expr)
+                            and isinstance(stmt.value, ast.Constant)):
+                        axes |= strings(stmt)      # skip the docstring
+            elif isinstance(node, ast.Call) and isinstance(node.func,
+                                                           ast.Name) \
+                    and node.func.id == "P":
+                for a in node.args:
+                    axes |= strings(a)
+        self._axes = axes
+        return axes
+
+
+def iter_source_files(paths: list[Path]) -> list[Path]:
+    files = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in EXCLUDE_DIRS for part in f.parts):
+                    files.append(f)
+    return files
+
+
+def lint_paths(paths: list[Path], root: Path,
+               rules=ALL_RULES) -> list[Finding]:
+    """Run ``rules`` over every source under ``paths``; findings carry
+    ``root``-relative paths.  A module that fails to parse is itself a
+    finding (rule LINT) rather than a crash."""
+    ctx = LintContext(root)
+    findings: list[Finding] = []
+    for f in iter_source_files([Path(p) for p in paths]):
+        try:
+            rel = f.resolve().relative_to(Path(root).resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            mod = astutil.parse_module(f, rel, ctx)
+        except SyntaxError as e:
+            findings.append(Finding(rule="LINT", path=rel,
+                                    line=e.lineno or 0, scope="",
+                                    detail="syntax-error",
+                                    message=f"not parseable: {e.msg}"))
+            continue
+        for rule in rules:
+            findings.extend(rule.check(mod))
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return findings

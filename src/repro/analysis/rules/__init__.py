@@ -1,0 +1,18 @@
+"""Rule registry — one module per RL rule; ``ALL_RULES`` is what the
+linter driver (repro.analysis.lint) runs.
+
+Adding a rule (docs/analysis.md has the worked example):
+  1. create ``rlNNN_<slug>.py`` here exporting ``RULE_ID``, ``SUMMARY``
+     and ``check(mod: astutil.ModuleInfo) -> list[Finding]``;
+  2. append the module to ``ALL_RULES`` below;
+  3. give it an injected-violation self-test in tests/test_analysis.py
+     (every rule family must be provably able to fail).
+"""
+from repro.analysis.rules import (rl001_retrace, rl002_host_sync,
+                                  rl003_pytree, rl004_psum_axes,
+                                  rl005_pallas_blocks)
+
+ALL_RULES = (rl001_retrace, rl002_host_sync, rl003_pytree,
+             rl004_psum_axes, rl005_pallas_blocks)
+
+RULE_IDS = tuple(r.RULE_ID for r in ALL_RULES)

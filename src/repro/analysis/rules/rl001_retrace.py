@@ -1,0 +1,86 @@
+"""RL001 — jit signature/retrace hazards.
+
+Two hazards the zero-retrace contract cannot survive:
+
+  * ``static_argnames`` naming a parameter the decorated function does
+    not have: jax silently ignores the unknown name, so the argument the
+    author believed was static is traced (or the intended static arg
+    starts retracing under a rename).  The in-repo contract:
+    ``kernels/ops.switched_apply`` declares ``("block_t", "interpret",
+    "prepadded", "d_out")`` and every one is a real keyword parameter.
+  * a jit-decorated closure whose body BRANCHES on a value captured from
+    an enclosing function scope: the branch is resolved at trace time,
+    so flipping the captured Python value between calls either silently
+    serves the stale branch or — when the caller re-jits per value —
+    recompiles on every flip.  State that crosses calls must enter as a
+    traced argument (margins/residency style) or a declared static arg.
+
+Module-level constants (LANE, imports) are exempt: they cannot change
+between calls without re-importing the module.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+RULE_ID = "RL001"
+SUMMARY = ("jit static_argnames must name real parameters; jit bodies must "
+           "not branch on values closed over from enclosing functions")
+
+
+def _static_argnames(dec: ast.AST) -> list[str]:
+    if not isinstance(dec, ast.Call):
+        return []
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames":
+            return astutil.string_items(kw.value) or []
+    return []
+
+
+def check(mod: astutil.ModuleInfo) -> list[Finding]:
+    findings = []
+    for fn, stack in astutil.functions(mod.tree):
+        dec = astutil.jit_decorator(mod, fn)
+        if dec is None:
+            continue
+        params = astutil.param_names(fn)
+        for name in _static_argnames(dec):
+            if name not in params:
+                findings.append(Finding(
+                    rule=RULE_ID, path=mod.path, line=fn.lineno,
+                    scope=fn.name, detail=f"static_argnames:{name}",
+                    message=(f"static_argnames names {name!r} but "
+                             f"{fn.name}() has no such parameter — jax "
+                             "ignores unknown names, so the argument is "
+                             "traced, not static")))
+
+        # names bound in ENCLOSING function scopes (params + assignments);
+        # module globals are exempt (constant per process)
+        enclosing: set[str] = set()
+        for s in stack:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                enclosing |= set(astutil.param_names(s))
+                enclosing |= astutil.assigned_names(s)
+        if not enclosing:
+            continue
+        local = set(params) | astutil.assigned_names(fn)
+        hazards = enclosing - local
+        seen = set()
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                for n in ast.walk(node.test):
+                    if isinstance(n, ast.Name) and n.id in hazards \
+                            and (fn.name, n.id) not in seen:
+                        seen.add((fn.name, n.id))
+                        findings.append(Finding(
+                            rule=RULE_ID, path=mod.path, line=node.lineno,
+                            scope=fn.name, detail=f"closure-branch:{n.id}",
+                            message=(f"jit-decorated {fn.name}() branches "
+                                     f"on {n.id!r} closed over from an "
+                                     "enclosing function — the branch "
+                                     "freezes at trace time (stale result "
+                                     "or a retrace per flip); pass it as "
+                                     "a traced arg or declare it static")))
+    return findings

@@ -1,0 +1,112 @@
+"""RL002 — host synchronization inside jitted serve-path code.
+
+A ``.item()`` / ``float(traced)`` / ``np.asarray(traced)`` inside traced
+code either fails at trace time (ConcretizationTypeError, the lucky
+case) or — when it happens to run on a concrete value during tracing —
+silently bakes one call's value into the compiled program.  On the serve
+path it also forces a device->host sync that stalls the decode tick.
+
+Scope: the serve-path modules (``LintContext.SERVE_PATH`` — the dispatch
+engine, the step builders, the kernels, and the model forward modules,
+whose function bodies all execute under jit), plus any jit-decorated
+function anywhere in the tree.  Host-side modules (server loop, benches,
+launchers) legitimately call ``np.asarray`` on step OUTPUTS and are out
+of scope.
+
+``int(x.shape[0])``-style calls are exempt: shapes/dtypes/ndim are
+static metadata, reading them never syncs.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+RULE_ID = "RL002"
+SUMMARY = ("no host-sync calls (.item(), float()/int() on traced arrays, "
+           "np.asarray, device_get) inside jitted serve-path code")
+
+_HOST_METHODS = ("item", "tolist", "block_until_ready")
+_HOST_CALLS = ("numpy.asarray", "numpy.array", "jax.device_get")
+_STATIC_ATTRS = ("shape", "ndim", "dtype", "size", "sharding")
+_CASTS = ("float", "int", "bool")
+
+
+def _array_params(fn: ast.FunctionDef) -> set[str]:
+    """Parameters annotated as arrays (``jax.Array``, ``jnp.ndarray``)."""
+    out = set()
+    for p in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+        if p.annotation is not None:
+            ann = ast.unparse(p.annotation)
+            if "Array" in ann or "ndarray" in ann:
+                out.add(p.arg)
+    return out
+
+
+def _mentions_array_without_static_attr(node: ast.AST,
+                                        arrays: set[str]) -> bool:
+    has_static = any(isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS
+                     for n in ast.walk(node))
+    if has_static:
+        return False
+    return any(isinstance(n, ast.Name) and n.id in arrays
+               for n in ast.walk(node))
+
+
+def _own_nodes(fn: ast.FunctionDef):
+    """Nodes belonging to ``fn`` itself — nested def/class bodies are
+    excluded (they are visited as functions in their own right), lambda
+    bodies are included (nobody else visits them)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def check(mod: astutil.ModuleInfo) -> list[Finding]:
+    in_scope_module = mod.ctx is not None and mod.ctx.is_serve_path(mod.path)
+    findings = []
+    for fn, stack in astutil.functions(mod.tree):
+        jitted = astutil.jit_decorator(mod, fn) is not None or any(
+            isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and astutil.jit_decorator(mod, s) is not None for s in stack)
+        if not (in_scope_module or jitted):
+            continue
+        arrays = _array_params(fn)
+        for call in [n for n in _own_nodes(fn) if isinstance(n, ast.Call)]:
+            name = mod.canonical(call.func)
+            if isinstance(call.func, ast.Attribute) \
+                    and call.func.attr in _HOST_METHODS \
+                    and not call.args and not call.keywords:
+                findings.append(Finding(
+                    rule=RULE_ID, path=mod.path, line=call.lineno,
+                    scope=fn.name, detail=f"method:{call.func.attr}",
+                    message=(f".{call.func.attr}() is a host sync — "
+                             "inside jitted serve-path code it either "
+                             "fails at trace time or bakes in one "
+                             "call's value")))
+            elif name in _HOST_CALLS:
+                findings.append(Finding(
+                    rule=RULE_ID, path=mod.path, line=call.lineno,
+                    scope=fn.name, detail=f"call:{name}",
+                    message=(f"{name}() materializes on host — traced "
+                             "serve-path values must stay jnp; use "
+                             "jnp.asarray for constants")))
+            elif (isinstance(call.func, ast.Name)
+                  and call.func.id in _CASTS and len(call.args) == 1
+                  and _mentions_array_without_static_attr(call.args[0],
+                                                          arrays)):
+                findings.append(Finding(
+                    rule=RULE_ID, path=mod.path, line=call.lineno,
+                    scope=fn.name,
+                    detail=f"cast:{call.func.id}:"
+                           f"{ast.unparse(call.args[0])[:40]}",
+                    message=(f"{call.func.id}() on a traced array "
+                             "forces a host sync / concretization "
+                             "(shape/dtype reads are exempt — this "
+                             "argument reads the array's VALUE)")))
+    return findings

@@ -1,0 +1,219 @@
+"""RL003 — pytree-registration drift on traced-data dataclasses.
+
+The ``DispatchPlan``/``InvokeStats`` pattern (runtime/dispatch.py): a
+frozen dataclass of jax arrays, registered with a flatten lambda reading
+an explicit field-name tuple and an unflatten calling the constructor
+POSITIONALLY (``lambda meta, data: DispatchPlan(*data, *meta)``).  Two
+ways this silently corrupts data instead of erroring:
+
+  * the dataclass is never registered: jit treats every instance as a
+    static leaf — each new plan RETRACES the whole program (a production
+    recompile stall, not a crash);
+  * a field is added to the dataclass but not to the flatten tuple (it
+    silently drops through jit), or the tuple order drifts from the
+    field order (the positional unflatten reassembles values into the
+    WRONG fields — cls becomes rank, counts becomes dispatched...).
+
+The rule flags (a) any dataclass with an array-annotated field that is
+not ``register_pytree_node``-ed in its module, and (b) any registration
+whose resolvable flatten-name tuples do not reconstruct the dataclass
+field list exactly, in order.  ``tuple(f.name for f in
+dataclasses.fields(Cls))`` is recognized as "all fields, in order".
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+RULE_ID = "RL003"
+SUMMARY = ("dataclasses holding jax arrays must be registered pytrees, and "
+           "flatten/unflatten field tuples must match the field order")
+
+_ALL_FIELDS = "__ALL_FIELDS__"   # sentinel: dataclasses.fields(Cls) in order
+
+
+def _is_traced_array_ann(ann: str) -> bool:
+    """True when the annotation names a JAX array type.  ``np.ndarray``
+    fields (host-side request/registry dataclasses) and ``Callable[...,
+    jax.Array]`` fields (functions OVER arrays, not arrays) are not
+    traced data and must not trip the registration requirement."""
+    if "Callable" in ann:
+        return False
+    return ("jax.Array" in ann or "jnp.ndarray" in ann
+            or ann.split("|")[0].strip() in ("Array", "chex.Array"))
+
+
+def _dataclasses(mod: astutil.ModuleInfo):
+    """{class name: (node, [field names], has_array_field)}"""
+    out = {}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        is_dc = False
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if mod.canonical(target) in ("dataclasses.dataclass",
+                                         "dataclass"):
+                is_dc = True
+        if not is_dc:
+            continue
+        fields, has_array = [], False
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                ann = ast.unparse(stmt.annotation)
+                if "ClassVar" in ann:
+                    continue
+                fields.append(stmt.target.id)
+                if _is_traced_array_ann(ann):
+                    has_array = True
+        out[node.name] = (node, fields, has_array)
+    return out
+
+
+def _is_fields_call(mod, node: ast.AST, cls: str | None) -> bool:
+    """``dataclasses.fields(Cls)`` (for the right class, when known)."""
+    if not (isinstance(node, ast.Call)
+            and mod.canonical(node.func) in ("dataclasses.fields", "fields")
+            and node.args):
+        return False
+    return cls is None or (isinstance(node.args[0], ast.Name)
+                           and node.args[0].id == cls)
+
+
+def _module_tuple(mod: astutil.ModuleInfo, name: str, cls: str):
+    """Resolve a module-level NAME to a field-name list: a literal tuple
+    of strings, or ``tuple(f.name for f in dataclasses.fields(Cls))``
+    (-> the all-fields sentinel).  None = unresolvable."""
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name:
+            items = astutil.string_items(node.value)
+            if items is not None:
+                return items
+            for n in ast.walk(node.value):
+                if _is_fields_call(mod, n, cls):
+                    return _ALL_FIELDS
+    return None
+
+
+def _names_from_expr(mod: astutil.ModuleInfo, expr: ast.AST, cls: str):
+    """A flatten-side children expression -> field-name list.
+
+    Handles: ``None`` (no aux), a literal string tuple, ``NAME`` resolved
+    at module level, and ``tuple(getattr(p, f) for f in X)`` where X is a
+    NAME / literal / ``dataclasses.fields(Cls)``.  None = unresolvable.
+    """
+    if isinstance(expr, ast.Constant) and expr.value is None:
+        return []
+    items = astutil.string_items(expr)
+    if items is not None:
+        return items
+    if isinstance(expr, ast.Name):
+        return _module_tuple(mod, expr.id, cls)
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name) \
+            and expr.func.id == "tuple" and len(expr.args) == 1 \
+            and isinstance(expr.args[0], ast.GeneratorExp):
+        gen = expr.args[0].generators[0]
+        src = gen.iter
+        if _is_fields_call(mod, src, cls):
+            return _ALL_FIELDS
+        if isinstance(src, ast.Name):
+            return _module_tuple(mod, src.id, cls)
+        return astutil.string_items(src)
+    return None
+
+
+def _registrations(mod: astutil.ModuleInfo):
+    """[(call node, class name, flatten lambda, unflatten lambda)]"""
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            name = mod.canonical(node.func) or ""
+            if name.endswith("register_pytree_node") and len(node.args) >= 3 \
+                    and isinstance(node.args[0], ast.Name):
+                out.append((node, node.args[0].id, node.args[1],
+                            node.args[2]))
+    return out
+
+
+def _expected_ctor_order(mod, cls, flatten, unflatten):
+    """Field order the positional unflatten reconstructs, or None when
+    any part is not statically resolvable (then the rule stays silent —
+    documented limitation, not a finding)."""
+    if not (isinstance(flatten, ast.Lambda)
+            and isinstance(flatten.body, ast.Tuple)
+            and len(flatten.body.elts) == 2):
+        return None
+    data = _names_from_expr(mod, flatten.body.elts[0], cls)
+    meta = _names_from_expr(mod, flatten.body.elts[1], cls)
+    if data is None or meta is None:
+        return None
+    if not (isinstance(unflatten, ast.Lambda)
+            and isinstance(unflatten.body, ast.Call)
+            and isinstance(unflatten.body.func, ast.Name)
+            and unflatten.body.func.id == cls
+            and not unflatten.body.keywords):
+        return None
+    # map the unflatten's *starred args back to (data, meta) by the
+    # lambda's own parameter names: lambda aux, children -> Cls(...)
+    lam_params = [p.arg for p in unflatten.args.args]
+    if len(lam_params) != 2:
+        return None
+    by_param = {lam_params[0]: meta, lam_params[1]: data}  # (aux, children)
+    order = []
+    for a in unflatten.body.args:
+        if isinstance(a, ast.Starred) and isinstance(a.value, ast.Name) \
+                and a.value.id in by_param:
+            order.append(by_param[a.value.id])
+        else:
+            return None
+    if any(part == _ALL_FIELDS for part in order):
+        return _ALL_FIELDS if order.count(_ALL_FIELDS) == len(order) == 1 \
+            or (len(order) == 2 and order[1] == [] ) else None
+    return [f for part in order for f in part]
+
+
+def check(mod: astutil.ModuleInfo) -> list[Finding]:
+    findings = []
+    classes = _dataclasses(mod)
+    regs = _registrations(mod)
+    registered = {cls for _, cls, _, _ in regs}
+
+    for cls, (node, fields, has_array) in classes.items():
+        if has_array and cls not in registered:
+            findings.append(Finding(
+                rule=RULE_ID, path=mod.path, line=node.lineno, scope=cls,
+                detail="unregistered",
+                message=(f"dataclass {cls} holds jax arrays but is not "
+                         "register_pytree_node-ed in this module — jit "
+                         "treats each instance as static and RETRACES "
+                         "per instance")))
+
+    for call, cls, flatten, unflatten in regs:
+        if cls not in classes:
+            continue
+        fields = classes[cls][1]
+        expected = _expected_ctor_order(mod, cls, flatten, unflatten)
+        if expected is None:
+            continue        # unresolvable pattern: out of the rule's reach
+        if expected == _ALL_FIELDS:
+            continue        # dataclasses.fields(Cls) cannot drift
+        if expected != fields:
+            missing = [f for f in fields if f not in expected]
+            extra = [f for f in expected if f not in fields]
+            if missing or extra:
+                why = (f"missing {missing} / unknown {extra}")
+            else:
+                why = "order differs from the dataclass field order"
+            findings.append(Finding(
+                rule=RULE_ID, path=mod.path, line=call.lineno, scope=cls,
+                detail="field-drift",
+                message=(f"pytree registration of {cls} drifted: {why} — "
+                         "the positional unflatten will reassemble values "
+                         "into the wrong fields (or drop them) instead of "
+                         "erroring")))
+    return findings

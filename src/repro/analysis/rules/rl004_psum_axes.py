@@ -1,0 +1,103 @@
+"""RL004 — collective axis names must be declared in sharding/rules.py.
+
+Every mesh this repo builds takes its axis names from the declarative
+spec layer (``sharding/rules.py``: the ``("pod", "data")`` DP meta-axis,
+``"model"`` TP).  A ``lax.psum(x, "axis")`` whose name is not declared
+there fails only at RUN time, inside a shard_map, on a mesh — the worst
+possible place — with an unbound-axis error; or worse, a typo'd
+data-axis name silently skips the stats reduction the invoke-stats
+exactness contract depends on (psum'd ``counts`` must equal the
+single-device totals; see runtime/dispatch.py ``stats_axes``).
+
+Literal axis names (strings / tuples of strings, including via a local
+``ax = ("data",)`` assignment) are checked against the declared set;
+names that reach the collective through function parameters
+(``stats_axes``-style plumbing) are accepted — the plumbing pattern is
+exactly how the engine stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+RULE_ID = "RL004"
+SUMMARY = ("lax collective axis names must be declared in "
+           "sharding/rules.py specs")
+
+_COLLECTIVES = ("psum", "pmean", "pmax", "pmin", "all_gather",
+                "psum_scatter", "ppermute", "all_to_all", "axis_index",
+                "pbroadcast")
+
+
+def _axis_arg(call: ast.Call) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == "axis_name":
+            return kw.value
+    if len(call.args) >= 2:
+        return call.args[1]
+    if call.args and call.func and isinstance(call.func, ast.Attribute) \
+            and call.func.attr == "axis_index":
+        return call.args[0]
+    return None
+
+
+def _resolve_axes(node: ast.AST, fn: ast.FunctionDef | None):
+    """Literal axis names of the argument, chasing one level of local
+    assignment; None = not statically resolvable (accepted)."""
+    items = astutil.string_items(node)
+    if items is not None:
+        return items
+    if isinstance(node, ast.Name) and fn is not None:
+        resolved, count = None, 0
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                    and isinstance(n.targets[0], ast.Name) \
+                    and n.targets[0].id == node.id:
+                count += 1
+                resolved = astutil.string_items(n.value)
+        if count == 1:
+            return resolved
+    return None
+
+
+def check(mod: astutil.ModuleInfo) -> list[Finding]:
+    ctx = mod.ctx
+    declared = ctx.declared_axes() if ctx is not None else None
+    if not declared:
+        return []           # no spec layer to check against
+    findings = []
+    fns = astutil.functions(mod.tree)
+
+    def enclosing_fn(call):
+        best = None
+        for fn, _ in fns:
+            if fn.lineno <= call.lineno <= max(
+                    getattr(fn, "end_lineno", fn.lineno), fn.lineno):
+                best = fn
+        return best
+
+    for call in [n for n in ast.walk(mod.tree) if isinstance(n, ast.Call)]:
+        name = mod.canonical(call.func) or ""
+        short = name.split(".")[-1]
+        if short not in _COLLECTIVES or "lax" not in name:
+            continue
+        axis_node = _axis_arg(call)
+        if axis_node is None:
+            continue
+        axes = _resolve_axes(axis_node, enclosing_fn(call))
+        if axes is None:
+            continue        # parameter-plumbed axes: mesh-agnostic by design
+        for ax in axes:
+            if ax not in declared:
+                fn = enclosing_fn(call)
+                findings.append(Finding(
+                    rule=RULE_ID, path=mod.path, line=call.lineno,
+                    scope=fn.name if fn else "", detail=f"axis:{ax}",
+                    message=(f"{short}() over axis {ax!r} which no "
+                             "sharding/rules.py spec declares (known: "
+                             f"{sorted(declared)}) — this unbinds at run "
+                             "time inside shard_map, or silently skips "
+                             "the stats reduction on a typo")))
+    return findings

@@ -1,0 +1,167 @@
+"""RL005 — Pallas block/grid arithmetic must prove divisibility.
+
+The weight-switch kernel's contract (kernels/switched_mlp.py): every
+grid/block computation that floor-divides must either use ``pl.cdiv``,
+the round-up idiom ``(x + b - 1) // b``, or sit behind an explicit
+divisibility assert (``assert t % block_t == 0``) in the same function.
+A bare ``t // block_t`` silently TRUNCATES when t stops dividing — rows
+past the last full tile never launch, the kernel returns zeros for them,
+and the pallas-vs-xla oracle gate is the only thing standing between
+that and production (this is exactly how a block_t change corrupts the
+class-sort plan: ops.class_sort_plan pads to ``worst_case_rows`` and
+asserts the tile math stays exact).
+
+A second Pallas contract: a ``BlockSpec`` index_map must take one
+argument per grid dimension (plus one per scalar-prefetch operand under
+``PrefetchScalarGridSpec``) — arity drift compiles on some jax versions
+and mis-indexes on others.  Checked when the grid is a literal tuple (or
+a single local assignment of one).
+
+Scope: modules that import ``jax.experimental.pallas``, plus the
+``kernels/`` tree (ops.py builds the tile grids without importing
+pallas).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+RULE_ID = "RL005"
+SUMMARY = ("Pallas grid/block floor divisions need pl.cdiv, the round-up "
+           "idiom, or a same-function divisibility assert; BlockSpec "
+           "index_map arity must match grid rank + scalar prefetch")
+
+
+def _uses_pallas(mod: astutil.ModuleInfo) -> bool:
+    """Modules that import pallas, plus everything under ``kernels/`` —
+    ops.py computes the class-sort tile grids the Pallas kernels consume
+    without importing pallas itself, and its arithmetic is bound by the
+    same divisibility contract."""
+    if any(v.startswith("jax.experimental.pallas")
+           for v in mod.aliases.values()):
+        return True
+    return "kernels/" in mod.path
+
+
+def _divisibility_asserts(fn: ast.FunctionDef) -> set[tuple[str, str]]:
+    """{(dump(numerator), dump(denominator))} proven by asserts of the
+    form ``assert a % b == 0`` (also found inside and/or chains)."""
+    proven = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assert):
+            continue
+        tests = [node.test]
+        while tests:
+            t = tests.pop()
+            if isinstance(t, ast.BoolOp):
+                tests.extend(t.values)
+                continue
+            if isinstance(t, ast.Compare) and len(t.ops) == 1 \
+                    and isinstance(t.ops[0], ast.Eq) \
+                    and isinstance(t.left, ast.BinOp) \
+                    and isinstance(t.left.op, ast.Mod) \
+                    and isinstance(t.comparators[0], ast.Constant) \
+                    and t.comparators[0].value == 0:
+                proven.add((astutil.dump(t.left.left),
+                            astutil.dump(t.left.right)))
+        # noqa: the while pops handle nested BoolOps
+    return proven
+
+
+def _is_roundup_idiom(num: ast.AST, den: ast.AST) -> bool:
+    """(x + b - 1) // b — numerator mentions the denominator and
+    subtracts/adds a 1 next to it."""
+    nd, dd = astutil.dump(num), astutil.dump(den)
+    if dd not in nd:
+        return False
+    return any(isinstance(n, ast.Constant) and n.value == 1
+               for n in ast.walk(num))
+
+
+def _resolve_grid(node: ast.AST, fn: ast.FunctionDef):
+    """Grid rank: literal tuple, int constant (rank 1), or a single local
+    assignment of one.  None = unresolvable."""
+    if isinstance(node, ast.Tuple):
+        return len(node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return 1
+    if isinstance(node, ast.Name):
+        assigns = [n for n in ast.walk(fn)
+                   if isinstance(n, ast.Assign) and len(n.targets) == 1
+                   and isinstance(n.targets[0], ast.Name)
+                   and n.targets[0].id == node.id]
+        if len(assigns) == 1:
+            v = assigns[0].value
+            if isinstance(v, ast.Tuple):
+                return len(v.elts)
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return 1
+    return None
+
+
+def _check_index_map_arity(mod, fn, spec_call, findings):
+    """``spec_call`` is a GridSpec / PrefetchScalarGridSpec /
+    pallas_call(...) Call carrying grid= — check every BlockSpec lambda
+    in its subtree."""
+    grid_node = next((kw.value for kw in spec_call.keywords
+                      if kw.arg == "grid"), None)
+    if grid_node is None:
+        return
+    rank = _resolve_grid(grid_node, fn)
+    if rank is None:
+        return
+    prefetch = next((kw.value for kw in spec_call.keywords
+                     if kw.arg == "num_scalar_prefetch"), None)
+    n_prefetch = prefetch.value if isinstance(prefetch, ast.Constant) \
+        and isinstance(prefetch.value, int) else 0
+    want = rank + n_prefetch
+    for call in [n for n in ast.walk(spec_call) if isinstance(n, ast.Call)]:
+        name = mod.canonical(call.func) or ""
+        if not name.endswith("BlockSpec"):
+            continue
+        for arg in list(call.args) + [kw.value for kw in call.keywords
+                                      if kw.arg == "index_map"]:
+            if isinstance(arg, ast.Lambda):
+                got = len(arg.args.args)
+                if got != want:
+                    findings.append(Finding(
+                        rule=RULE_ID, path=mod.path, line=arg.lineno,
+                        scope=fn.name,
+                        detail=f"index-map-arity:{got}:{want}",
+                        message=(f"BlockSpec index_map takes {got} args "
+                                 f"but the grid has rank {rank} with "
+                                 f"{n_prefetch} scalar-prefetch operand(s)"
+                                 f" — it must take {want}")))
+
+
+def check(mod: astutil.ModuleInfo) -> list[Finding]:
+    if not _uses_pallas(mod):
+        return []
+    findings = []
+    for fn, _ in astutil.functions(mod.tree):
+        proven = _divisibility_asserts(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, ast.FloorDiv):
+                num, den = node.left, node.right
+                if (astutil.dump(num), astutil.dump(den)) in proven:
+                    continue
+                if _is_roundup_idiom(num, den):
+                    continue
+                findings.append(Finding(
+                    rule=RULE_ID, path=mod.path, line=node.lineno,
+                    scope=fn.name,
+                    detail=f"floordiv:{ast.unparse(node)[:48]}",
+                    message=(f"`{ast.unparse(node)}` floor-divides with no "
+                             "pl.cdiv / round-up idiom / divisibility "
+                             "assert in this function — a non-dividing "
+                             "size silently truncates the grid (rows past "
+                             "the last tile never launch)")))
+            elif isinstance(node, ast.Call):
+                name = mod.canonical(node.func) or ""
+                if name.endswith(("GridSpec", "pallas_call")) \
+                        or "pallas_call" in name:
+                    _check_index_map_arity(mod, fn, node, findings)
+    return findings

@@ -93,10 +93,18 @@ def gather_resident_stacks(w1: jax.Array, b1: jax.Array, w2: jax.Array,
     shapes-are-static invariant the capacity-autotune ladder exploits,
     applied to weight residency.  Cost per call: an ``n_resident + 1``-row
     gather per stack (tiny next to one layer's matmuls).
+
+    Degenerate residency ids are pinned, not undefined: an id outside
+    ``[0, library_size)`` resolves to the zero pseudo-class row (the slot
+    serves exact zeros — identical to an empty slot — instead of
+    whatever row jax's gather clamping would pick), and duplicate ids
+    simply duplicate the weight row (each slot still serves its class's
+    rows deterministically).
     """
     lib = w1.shape[0] - 1                       # library_size (pseudo last)
-    idx = jnp.concatenate([residency.astype(jnp.int32),
-                           jnp.asarray([lib], jnp.int32)])
+    r = residency.astype(jnp.int32)
+    r = jnp.where((r >= 0) & (r < lib), r, lib)
+    idx = jnp.concatenate([r, jnp.asarray([lib], jnp.int32)])
     return w1[idx], b1[idx], w2[idx], b2[idx]
 
 
@@ -114,6 +122,8 @@ def class_sort_plan(cls: jax.Array, n: int, block_t: int):
     """
     t = cls.shape[0]
     t_pad = worst_case_rows(t, n, block_t)     # static worst case
+    assert t_pad % block_t == 0, (
+        f"worst_case_rows must return a block_t multiple, got {t_pad}")
 
     # --- group rows by class (stable sort keeps cache-friendly order) ------
     order = jnp.argsort(cls, stable=True)

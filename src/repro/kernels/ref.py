@@ -48,6 +48,8 @@ def slstm_scan_ref(xg, wh, h0, c0, n0, m0, clamp=8.0):
     wh: (H, hd, 4*hd); states: (B, H, hd) f32.
     """
     s, b, h, hd4 = xg.shape
+    assert hd4 % 4 == 0, (
+        f"xg last dim must stack the 4 gate pre-activations, got {hd4}")
     hd = hd4 // 4
 
     def cell(carry, xg_t):

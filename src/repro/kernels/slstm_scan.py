@@ -100,6 +100,8 @@ def slstm_scan(xg: jax.Array, wh: jax.Array, h0, c0, n0, m0, *,
     Returns (ys (S, B, H, hd) f32, (hf, cf, nf, mf)).
     """
     s, b, h, hd4 = xg.shape
+    assert hd4 % 4 == 0, (
+        f"xg last dim must stack the 4 gate pre-activations, got {hd4}")
     hd = hd4 // 4
     state_shape = jax.ShapeDtypeStruct((b, h, hd), jnp.float32)
     out_shape = (jax.ShapeDtypeStruct((s, b, h, hd), jnp.float32),

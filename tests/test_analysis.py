@@ -1,0 +1,338 @@
+"""Self-test for the repro.analysis gate.
+
+Pins, per the PR's acceptance criteria:
+  * injected violations of EVERY rule family (RL001-RL005) are caught,
+    in-process and through the ``python -m repro.analysis`` CLI (which
+    must exit nonzero on a new finding);
+  * the baseline workflow: grandfathered findings suppress, NEW findings
+    still fail, fixed findings surface as stale without failing;
+  * the current tree is clean — ``run_lint()`` over the real sources
+    returns zero findings (the checked-in baseline stays empty);
+  * the ``jit_cache`` helper: silent on a zero-retrace function, raises
+    with the cause string on a retraced one;
+  * the audit helpers detect a retraced program (TA001), a non-int32
+    stats counter (TA002), and a host callback in the jaxpr (TA003);
+  * a reduced ``run_audit`` sweep over the real engine is green.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import run_lint
+from repro.analysis.findings import (Finding, load_baseline,
+                                     split_by_baseline, write_baseline)
+from repro.analysis.jit_cache import assert_zero_retrace, cache_size
+from repro.analysis.lint import lint_paths
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# injected violations, one per rule family
+# ---------------------------------------------------------------------------
+
+VIOLATIONS = {
+    "RL001": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("block_q",))
+        def f(x, block_t=8):
+            return x * block_t
+        """,
+    "RL002": """
+        import jax
+
+        @jax.jit
+        def f(x: jax.Array):
+            return x.sum().item()
+        """,
+    "RL003": """
+        import dataclasses
+
+        import jax
+
+        @dataclasses.dataclass(frozen=True)
+        class Plan:
+            cls: jax.Array
+            rank: jax.Array
+        """,
+    "RL004": """
+        import jax
+        from jax import lax
+
+        def reduce_stats(counts):
+            return lax.psum(counts, "bogus_axis")
+        """,
+    "RL005": """
+        from jax.experimental import pallas as pl
+
+        def grid_for(t, block_t):
+            return (t // block_t,)
+        """,
+}
+
+# drift variant for RL003: registered, but the flatten tuple dropped a field
+RL003_DRIFT = """
+    import dataclasses
+
+    import jax
+
+    _DATA = ("cls",)
+
+    @dataclasses.dataclass(frozen=True)
+    class Plan:
+        cls: jax.Array
+        rank: jax.Array
+
+    jax.tree_util.register_pytree_node(
+        Plan,
+        lambda p: (tuple(getattr(p, f) for f in _DATA), ()),
+        lambda meta, data: Plan(*data, *meta))
+    """
+
+# index_map arity drift for RL005's second contract
+RL005_ARITY = """
+    from jax.experimental import pallas as pl
+
+    def launch(k, x):
+        return pl.pallas_call(
+            k, grid=(4, 4),
+            in_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0))])(x)
+    """
+
+
+def _mk_tree(tmp_path: Path, sources: dict) -> Path:
+    """A fake repo root with a sharding spec (declaring only "data") and
+    the given {relpath: source} files."""
+    spec = tmp_path / "src" / "repro" / "sharding" / "rules.py"
+    spec.parent.mkdir(parents=True, exist_ok=True)
+    spec.write_text(textwrap.dedent("""
+        def data_axes(mesh):
+            return ("data",)
+        """))
+    for rel, src in sources.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+@pytest.mark.parametrize("rule", sorted(VIOLATIONS))
+def test_injected_violation_is_caught(rule, tmp_path):
+    root = _mk_tree(tmp_path, {f"src/repro/bad_{rule.lower()}.py":
+                               VIOLATIONS[rule]})
+    findings = lint_paths([root / "src"], root)
+    assert rule in {f.rule for f in findings}, \
+        f"{rule}: injected violation not caught ({findings})"
+    # and the gate itself exits nonzero on it
+    r = _cli(root)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert rule in r.stdout
+
+
+def test_rl003_flatten_drift_is_caught(tmp_path):
+    root = _mk_tree(tmp_path, {"src/repro/drift.py": RL003_DRIFT})
+    fs = [f for f in lint_paths([root / "src"], root) if f.rule == "RL003"]
+    assert any(f.detail == "field-drift" for f in fs), fs
+    # registered -> the "unregistered" arm must NOT also fire
+    assert not any(f.detail == "unregistered" for f in fs), fs
+
+
+def test_rl005_index_map_arity_is_caught(tmp_path):
+    root = _mk_tree(tmp_path, {"src/repro/arity.py": RL005_ARITY})
+    fs = [f for f in lint_paths([root / "src"], root) if f.rule == "RL005"]
+    assert any(f.detail.startswith("index-map-arity") for f in fs), fs
+
+
+def test_guarded_and_plumbed_patterns_stay_clean(tmp_path):
+    """The engine's own idioms must not trip the rules: an asserted
+    floordiv, the round-up idiom, parameter-plumbed psum axes, a
+    declared axis, and dataclasses.fields-based registration."""
+    root = _mk_tree(tmp_path, {"src/repro/good.py": """
+        import dataclasses
+
+        import jax
+        from jax import lax
+        from jax.experimental import pallas as pl
+
+        def tiles(t, block_t):
+            assert t % block_t == 0
+            return t // block_t
+
+        def tiles_up(t, block_t):
+            return (t + block_t - 1) // block_t
+
+        def reduce_stats(counts, stats_axes):
+            ax = tuple(stats_axes)          # plumbed: mesh-agnostic
+            return lax.psum(counts, ax)
+
+        def reduce_local(counts):
+            return lax.psum(counts, ("data",))
+
+        @dataclasses.dataclass(frozen=True)
+        class Stats:
+            counts: jax.Array
+
+        _FIELDS = tuple(f.name for f in dataclasses.fields(Stats))
+        jax.tree_util.register_pytree_node(
+            Stats,
+            lambda s: (tuple(getattr(s, f) for f in _FIELDS), None),
+            lambda _, data: Stats(*data))
+        """})
+    assert lint_paths([root / "src"], root) == []
+
+
+def test_current_tree_is_clean():
+    """The repo's own sources carry zero findings — the checked-in
+    baseline stays empty and every new finding fails the gate."""
+    findings = run_lint(root=REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert load_baseline(REPO / "analysis_baseline.txt") == set()
+
+
+# ---------------------------------------------------------------------------
+# the CLI + baseline workflow
+# ---------------------------------------------------------------------------
+
+def _cli(root: Path, *extra: str):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"), JAX_PLATFORMS="cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--stage", "lint",
+         "--root", str(root), str(root / "src"), *extra],
+        capture_output=True, text=True, timeout=120, env=env)
+
+
+def test_cli_fails_on_new_finding_and_baseline_suppresses(tmp_path):
+    root = _mk_tree(tmp_path, {"src/repro/bad.py": VIOLATIONS["RL002"]})
+    r = _cli(root)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "RL002" in r.stdout
+
+    # grandfather it, then the same tree passes...
+    assert _cli(root, "--update-baseline").returncode == 0
+    r = _cli(root)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "grandfathered" in r.stdout
+
+    # ...but a NEW violation still fails
+    (root / "src" / "repro" / "worse.py").write_text(
+        textwrap.dedent(VIOLATIONS["RL005"]))
+    r = _cli(root)
+    assert r.returncode == 1
+    assert "RL005" in r.stdout
+
+    # fixing the grandfathered finding surfaces it as stale, not a failure
+    (root / "src" / "repro" / "worse.py").unlink()
+    (root / "src" / "repro" / "bad.py").write_text("x = 1\n")
+    r = _cli(root)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[stale]" in r.stdout
+
+
+def test_baseline_keys_are_line_number_free(tmp_path):
+    """Moving a grandfathered finding to another line must not churn the
+    baseline: keys carry rule/path/scope/detail, never the line."""
+    src = VIOLATIONS["RL002"]
+    root = _mk_tree(tmp_path, {"src/repro/bad.py": src})
+    f1 = lint_paths([root / "src"], root)
+    (root / "src" / "repro" / "bad.py").write_text(
+        "# a comment pushing everything down\n" + textwrap.dedent(src))
+    f2 = lint_paths([root / "src"], root)
+    assert [f.key for f in f1] == [f.key for f in f2]
+    assert [f.line for f in f1] != [f.line for f in f2]
+    new, old, stale = split_by_baseline(f2, {f.key for f in f1})
+    assert new == [] and len(old) == len(f1) and stale == set()
+
+
+def test_baseline_round_trip(tmp_path):
+    fs = [Finding(rule="RL001", path="a.py", line=3, scope="f",
+                  detail="static_argnames:block_q", message="m")]
+    path = tmp_path / "baseline.txt"
+    write_baseline(path, fs)
+    assert load_baseline(path) == {fs[0].key}
+
+
+# ---------------------------------------------------------------------------
+# jit_cache helper
+# ---------------------------------------------------------------------------
+
+def test_assert_zero_retrace_passes_and_fails():
+    ok = jax.jit(lambda x: x + 1)
+    for v in (0.0, 1.0, 2.0):
+        ok(jnp.full((4,), v))
+    assert cache_size(ok) == 1
+    assert_zero_retrace(ok, "a value change")
+
+    bad = jax.jit(lambda x: x + 1)
+    bad(jnp.zeros((4,)))
+    bad(jnp.zeros((8,)))                      # new shape -> second program
+    assert cache_size(bad) == 2
+    with pytest.raises(AssertionError, match="a shape change forced"):
+        assert_zero_retrace(bad, "a shape change")
+
+
+# ---------------------------------------------------------------------------
+# audit helpers (TA001/TA002/TA003) + a reduced live sweep
+# ---------------------------------------------------------------------------
+
+def test_audit_detects_retrace():
+    from repro.analysis.audit import retrace_findings
+    fn = jax.jit(lambda x: x * 2)
+    fn(jnp.zeros((4,)))
+    assert retrace_findings(fn, scope="fn") == []
+    fn(jnp.zeros((8,)))
+    fs = retrace_findings(fn, scope="fn")
+    assert len(fs) == 1 and fs[0].rule == "TA001"
+
+
+def test_audit_detects_bad_stats_dtype():
+    from repro.analysis.audit import stats_dtype_findings
+    good = {"counts": jnp.zeros((4,), jnp.int32),
+            "invocation": jnp.zeros((), jnp.float32)}
+    assert stats_dtype_findings(good, scope="s") == []
+    bad = dict(good, tier_counts=jnp.zeros((3,), jnp.int16))
+    fs = stats_dtype_findings(bad, scope="s")
+    assert len(fs) == 1 and fs[0].rule == "TA002"
+    assert "tier_counts" in fs[0].detail
+
+
+def test_audit_detects_host_callback():
+    from repro.analysis.audit import callback_findings
+
+    def clean(x):
+        return jax.lax.scan(lambda c, v: (c + v, c), 0.0, x)[0]
+
+    def dirty(x):
+        jax.debug.callback(lambda v: None, x.sum())
+        return x * 2
+
+    x = jnp.zeros((4,))
+    assert callback_findings(clean, (x,), scope="clean") == []
+    fs = callback_findings(dirty, (x,), scope="dirty")
+    assert len(fs) == 1 and fs[0].rule == "TA003"
+    assert "debug_callback" in fs[0].detail
+
+    # callbacks hiding inside control-flow sub-jaxprs are still found
+    def nested(x):
+        def body(c, v):
+            jax.debug.callback(lambda s: None, v)
+            return c + v, c
+        return jax.lax.scan(body, 0.0, x)[0]
+    assert callback_findings(nested, (x,), scope="nested") != []
+
+
+def test_engine_audit_is_green():
+    """The real engine holds its contracts under the reduced (xla-only,
+    engine-only) sweep; ``make analyze`` runs the full one."""
+    from repro.analysis.audit import run_audit
+    fs = run_audit(backends=("xla",), with_steps=False)
+    assert fs == [], "\n".join(f.render() for f in fs)

@@ -269,3 +269,49 @@ def test_slstm_scan_trainable_grads_match_ref():
     for a, b_ in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                    rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gather_resident_stacks: duplicate / out-of-range residency ids are pinned
+# ---------------------------------------------------------------------------
+
+def test_gather_resident_stacks_duplicates_and_oob():
+    """Degenerate residency vectors have DEFINED semantics: duplicates
+    duplicate the weight row; any id outside [0, library_size) resolves
+    to the zero pseudo-class row (the slot serves exact zeros, like an
+    empty slot) instead of whatever jax's gather clamping would pick."""
+    from repro.analysis.jit_cache import assert_zero_retrace
+    key = jax.random.PRNGKey(3)
+    lib, d, d_h = 4, 8, 8
+    ks = jax.random.split(key, 4)
+    stacks = ops.prepad_switched_weights(
+        jax.random.normal(ks[0], (lib, d, d_h)),
+        jax.random.normal(ks[1], (lib, d_h)),
+        jax.random.normal(ks[2], (lib, d_h, d)),
+        jax.random.normal(ks[3], (lib, d)))
+
+    # duplicates: both slots serve class 2's weights, deterministically
+    dup = ops.gather_resident_stacks(*stacks,
+                                     jnp.asarray([2, 2], jnp.int32))
+    for full, got in zip(stacks, dup):
+        assert got.shape[0] == 3                   # n_resident + pseudo
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(full[2]))
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(full[2]))
+        # the trailing row stays the zero pseudo-class
+        assert not np.any(np.asarray(got[-1]))
+
+    # out of range on both sides (negative, == library_size, way past)
+    for bad in ([-1, lib], [lib + 3, -7]):
+        oob = ops.gather_resident_stacks(*stacks,
+                                         jnp.asarray(bad, jnp.int32))
+        for got in oob:
+            assert not np.any(np.asarray(got[:2])), \
+                f"OOB residency {bad} must serve the zero pseudo-class"
+
+    # residency stays a TRACED input under the pinning
+    fn = jax.jit(lambda r: ops.gather_resident_stacks(*stacks, r))
+    for r in ([0, 1], [3, 3], [-1, 99]):
+        fn(jnp.asarray(r, jnp.int32))
+    assert_zero_retrace(fn, "a residency swap")

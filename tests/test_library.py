@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.jit_cache import assert_zero_retrace
 from repro.configs.registry import get_config, smoke_config
 from repro.kernels import ops
 from repro.models import model as M
@@ -169,7 +170,7 @@ def test_swap_is_traced_never_retraces():
     for res in RESIDENCIES:
         _, s = fn(jnp.asarray(res, jnp.int32))
         seen.append(float(s["off_set_exact_rows"]))
-    assert fn._cache_size() == 1, "a residency swap forced a retrace"
+    assert_zero_retrace(fn, "a residency swap")
     assert len(set(seen)) > 1, "residency had no effect on routing"
 
 
@@ -298,8 +299,8 @@ def test_server_library_swaps_without_retrace():
     assert len(summ["final_residency"]) == 2
     # swapping (if any happened) cost ZERO retraces: the decode and chunk
     # steps each compiled exactly once
-    assert srv.decode._cache_size() == 1
-    assert srv.chunk._cache_size() == 1
+    assert_zero_retrace(srv.decode, "a live residency swap (decode step)")
+    assert_zero_retrace(srv.chunk, "a live residency swap (chunk step)")
     # off-set rows reconcile against the full-library demand histogram
     resident_demand = sum(lib[c + 1] for c in summ["final_residency"])
     assert stats["off_set_exact_rows"] <= sum(lib[1:])
@@ -448,5 +449,5 @@ def test_residency_mesh_inprocess(route_scope):
         np.testing.assert_array_equal(libs["pallas"], libs["xla"])
         assert float(libs["xla"].sum()) == 6.0   # active rows only
     for be in ("xla", "pallas"):
-        assert fns[be]._cache_size() == 1, \
-            f"{be}: residency swap retraced under the mesh"
+        assert_zero_retrace(fns[be],
+                            f"{be}: a residency swap under the mesh")

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.jit_cache import assert_zero_retrace
 from repro.configs.registry import get_config, smoke_config
 from repro.models import model as M
 from repro.runtime import autotune as AT
@@ -237,8 +238,7 @@ def test_tier_margins_are_traced_not_static():
     for m in ([8.0, 0.0, -8.0], [0.0, 0.0, 0.0], [-8.0, 0.0, 8.0]):
         _, s = fn(_mixed_tier(t), jnp.asarray(m))
         invs.append(float(s["invocation"]))
-    if hasattr(fn, "_cache_size"):
-        assert fn._cache_size() == 1, "margins forced a retrace"
+    assert_zero_retrace(fn, "a margins change")
     # flipping the margins must actually change the routing
     assert invs[0] != invs[2]
 
