@@ -7,7 +7,7 @@ MDFLAGS = XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
 
 .PHONY: test test-tier1 test-multidevice analyze analyze-lint bench-quick \
 	bench-dispatch bench-dispatch-sharded bench-autotune bench-decode-tick \
-	bench-qos bench-library bench-ci-dispatch bench-serve \
+	bench-qos bench-library bench-fused bench-ci-dispatch bench-serve \
 	bench-serve-sharded deps
 
 deps:
@@ -35,7 +35,7 @@ analyze-lint:
 # on 8 virtual CPU devices
 test-multidevice:
 	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py tests/test_serving.py tests/test_library.py
-	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick --qos --library
+	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick --qos --library --backend-sweep
 	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_serve --quick --devices 8 --n-reqs 6
 
 bench-quick:
@@ -76,8 +76,15 @@ bench-library:
 # the CI dispatch.csv artifact leg: base shapes + autotune trajectory +
 # decode-tick + QoS tier-mix + library-residency rows in ONE csv
 # (separate invocations would overwrite it)
+# fused-kernel sweep: fused vs unfused pallas vs xla over an L-layer
+# tick; asserts <=1 standalone activation gather/scatter per layer under
+# fused, bitwise fused==pallas + <1e-4 vs xla at every visited operating
+# point, zero retraces, and fused no slower than unfused in interpret
+bench-fused:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --backend-sweep
+
 bench-ci-dispatch:
-	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick --qos --library
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick --qos --library --backend-sweep
 
 # serving-scheduler arrival replay: Poisson/bursty streams, chunked
 # prefill vs token-by-token, p50/p99 TTFT + tokens/sec per offered load;

@@ -40,6 +40,20 @@ counts per tick (jaxpr walk, scan-length aware) — the leg asserts tick
 scope runs strictly fewer sorts (1 plan vs L) and gates the Pallas
 backend against the XLA oracle at both scopes.
 
+``--backend-sweep`` adds the fused-kernel comparison: every backend
+(``xla`` | ``pallas`` | ``pallas_fused``) serves an L-layer tick from
+one DispatchPlan (``lax.scan`` of ``execute_dispatch`` over per-layer
+weight banks), recording ms_per_tick plus the STANDALONE activation
+gather/scatter counts per layer from a jaxpr audit
+(``repro.analysis.opcount.activation_moves`` — rank >= 2 operands,
+pallas kernel bodies excluded).  Gates: the fused backend runs <= 1
+standalone gather and <= 1 scatter per layer (strictly fewer than
+unfused pallas, whose class-sort legs it folds into the kernel), is
+bitwise equal to unfused pallas and < 1e-4 vs the XLA oracle at every
+visited operating point (uniform + asymmetric caps, masked rows, tiered
+margins), retraces nothing across plan changes, and in interpret mode
+is no slower than unfused.  ``--devices N`` adds a sharded pass.
+
 ``--qos`` adds the per-request QoS tier-mix sweep: batches mixing
 error-bound tiers (tight/base/loose exact-logit margins, a traced
 vector — one compiled program per operating point serves every mix) run
@@ -50,7 +64,8 @@ every visited operating point, with per-tier margin/rows/served-
 invocation columns in the CSV.
 
 Writes benchmarks/out/dispatch.csv (modes: single | sharded |
-shard-local | autotune | decode-tick | qos).
+shard-local | autotune | decode-tick | qos | backend-sweep |
+backend-sweep-sharded).
 """
 from __future__ import annotations
 
@@ -64,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.jit_cache import assert_zero_retrace
+from repro.analysis.opcount import activation_moves, count_dynamic_ops
 from repro.runtime import dispatch as D
 
 OUT = os.path.join(os.path.dirname(__file__), "out")
@@ -521,33 +537,6 @@ def _library_leg(rows, *, quick, devices=1):
         assert_zero_retrace(f, f"{backend}: a residency swap")
 
 
-def _sub_jaxprs(eqn):
-    """All jaxpr-valued params of an eqn (pjit/scan/remat/pallas bodies)."""
-    out = []
-    for v in eqn.params.values():
-        for u in (v if isinstance(v, (list, tuple)) else (v,)):
-            if hasattr(u, "jaxpr") and hasattr(u, "consts"):  # ClosedJaxpr
-                out.append(u.jaxpr)
-            elif hasattr(u, "eqns"):                          # Jaxpr
-                out.append(u)
-    return out
-
-
-def _count_dynamic_ops(jaxpr, names) -> int:
-    """How many times primitives in ``names`` EXECUTE per call: a scan
-    body's ops count once per trip (static jaxpr counts would hide the
-    per-layer cost the tick plan amortizes)."""
-    total = 0
-    for eqn in jaxpr.eqns:
-        mult = eqn.params.get("length", 1) \
-            if eqn.primitive.name == "scan" else 1
-        if eqn.primitive.name in names:
-            total += 1
-        for sub in _sub_jaxprs(eqn):
-            total += mult * _count_dynamic_ops(sub, names)
-    return total
-
-
 def _decode_tick_leg(rows, *, quick):
     """Full decode tick, route_scope=layer vs tick, oracle-gated."""
     import dataclasses
@@ -589,8 +578,8 @@ def _decode_tick_leg(rows, *, quick):
             outs[backend] = np.asarray(lg)
             jaxpr = jax.make_jaxpr(S.make_decode_step(cfg, with_stats=True))(
                 params, cache, toks, mask).jaxpr
-            n_sorts = _count_dynamic_ops(jaxpr, {"sort"})
-            n_scatter = _count_dynamic_ops(
+            n_sorts = count_dynamic_ops(jaxpr, {"sort"})
+            n_scatter = count_dynamic_ops(
                 jaxpr, {"scatter", "scatter-add"})
             sorts[(scope, backend)] = n_sorts
             rows.append({
@@ -623,9 +612,205 @@ def _decode_tick_leg(rows, *, quick):
     assert sorts[("tick", "xla")] <= sorts[("layer", "xla")], sorts
 
 
+def _backend_sweep_leg(rows, *, quick, iters, devices):
+    """Fused vs unfused Pallas vs XLA at tick scope, op-count audited.
+
+    One DispatchPlan per backend drives an L-layer ``lax.scan`` of
+    ``execute_dispatch`` (distinct weights per layer; the approximators
+    map d -> d so layer outputs chain through the next layer), timed as
+    ms_per_tick.  Each backend's tick jaxpr is audited with
+    ``repro.analysis.opcount.activation_moves`` — STANDALONE
+    activation-sized (rank >= 2) gathers/scatters per layer, pallas
+    kernel bodies excluded.  Gates per shape:
+
+      * fused runs <= 1 standalone gather and <= 1 scatter per layer
+        (the exact-path capacity buffers) and strictly fewer of both
+        than unfused pallas (which pays the class-sort gather/scatter
+        legs per layer);
+      * fused is BITWISE equal to unfused pallas and < 1e-4 vs the XLA
+        oracle — at BOTH visited operating points (uniform caps with a
+        row mask + tiered margins, then asymmetric per-class caps);
+      * moving to the second operating point retraces nothing (mask,
+        tier, margins are traced plan inputs);
+      * on CPU (interpret mode) fused must not be slower than unfused —
+        the fused kernel does strictly less XLA-level work there, so a
+        regression means the fusion itself broke.
+    """
+    on_cpu = jax.default_backend() != "tpu"
+    layers = 4
+    if quick:
+        shapes = [(256, 2), (512, 4)]
+        d, d_h, d_ff, block_t = 128, 32, 256, 64
+    else:
+        shapes = [(1024, 4), (2048, 8) if on_cpu else (4096, 8)]
+        d, d_h, d_ff, block_t = 512, 64, 2048, 128
+    iters = iters or (3 if quick else 10)
+    margins = jnp.asarray([0.5, 0.0, -0.5], jnp.float32)
+
+    for t, n in shapes:
+        key = jax.random.PRNGKey(t * 131 + n)
+        x, logits, (w1, b1, w2, b2), (wi, wo) = _make_case(
+            key, t, n, d, d_h, d_ff)
+        exact_fn = lambda xb: jnp.dot(jax.nn.silu(jnp.dot(xb, wi)), wo)
+        # L distinct approximator banks: scaled copies keep layer outputs
+        # bounded while making every layer a real weight switch
+        stacked = jax.tree.map(
+            lambda a: jnp.stack([a * (0.7 + 0.1 * i)
+                                 for i in range(layers)]),
+            (w1, b1, w2, b2))
+        tier = jnp.arange(t, dtype=jnp.int32) % 3
+        mask = jnp.arange(t) % 16 != 0
+        # two operating points: uniform caps, then asymmetric per-class
+        cap_points = [
+            (max(t // 2, 1), max(int(t * 0.4), 1)),
+            (max(t // 2, 1), tuple(max(t // (4 + 2 * c), block_t)
+                                   for c in range(n))),
+        ]
+        per_tick, outs = {}, {be: [] for be in D.DISPATCH_BACKENDS}
+        for backend in D.DISPATCH_BACKENDS:
+            interp = on_cpu and backend in D.PALLAS_BACKENDS
+            for pt_i, (ec, ic) in enumerate(cap_points):
+                plan_fn = jax.jit(
+                    lambda lg, tr, mg, mk, be=backend, e=ec, i=ic:
+                    D.make_dispatch_plan(
+                        lg, mk, exact_cap=e, invoke_cap=i, backend=be,
+                        block_t=block_t, tier=tr, tier_margins=mg))
+
+                def tick(plan, xx, ip=interp):
+                    def layer(h, ws):
+                        lw1, lb1, lw2, lb2 = ws
+                        return D.execute_dispatch(
+                            plan, h, exact_fn, lw1, lb1, lw2, lb2,
+                            interpret=ip), None
+                    return jax.lax.scan(layer, xx, stacked)[0]
+
+                tick_fn = jax.jit(tick)
+                plan = plan_fn(logits, tier, margins, mask)
+                y = tick_fn(plan, x)
+                jax.block_until_ready(y)         # compile off the clock
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    y = tick_fn(plan, x)
+                jax.block_until_ready(y)
+                ms = (time.perf_counter() - t0) / iters * 1e3
+                outs[backend].append(np.asarray(y))
+                if pt_i == 0:
+                    g, s = activation_moves(jax.make_jaxpr(tick)(plan, x))
+                    assert g % layers == 0 and s % layers == 0, (g, s)
+                    gl, sl = g // layers, s // layers
+                    per_tick[backend] = (ms, gl, sl)
+                    stats = D.plan_invoke_stats(plan)
+                    rows.append({
+                        "T": t, "n_approx": n, "d_model": d,
+                        "backend": backend, "block_t": block_t,
+                        "interpret": interp, "devices": 1,
+                        "mode": "backend-sweep", "layers": layers,
+                        "ms_per_tick": round(ms, 3),
+                        "gathers_per_layer": gl,
+                        "scatters_per_layer": sl,
+                        "invocation": round(float(stats["invocation"]), 4),
+                        "exact_frac": round(float(stats["exact_frac"]), 4),
+                        "dropped": int(stats["dropped"]),
+                    })
+                    print(f"backend-sweep T={t:6d} n={n} L={layers} "
+                          f"{backend:12s} {ms:9.2f} ms/tick "
+                          f"gathers/layer={gl} scatters/layer={sl}",
+                          flush=True)
+                else:
+                    # operating-point switch: new caps = new shapes = one
+                    # fresh compile, but mask/tier/margins stay traced —
+                    # replaying the FIRST point's fns must not retrace
+                    p0 = plan_fn_prev(logits, tier, margins, ~mask)
+                    jax.block_until_ready(tick_fn_prev(p0, x))
+                    assert_zero_retrace(
+                        plan_fn_prev, f"{backend}: a mask/tier change")
+                    assert_zero_retrace(
+                        tick_fn_prev, f"{backend}: a replanned tick")
+                plan_fn_prev, tick_fn_prev = plan_fn, tick_fn
+
+        # divergence gates at every visited operating point
+        for pt_i in range(len(cap_points)):
+            err_f = float(np.abs(outs["pallas_fused"][pt_i] -
+                                 outs["xla"][pt_i]).max())
+            assert err_f < 1e-4, \
+                f"fused-vs-xla divergence at T={t} point {pt_i}: {err_f}"
+            assert np.array_equal(outs["pallas_fused"][pt_i],
+                                  outs["pallas"][pt_i]), \
+                f"fused != unfused pallas bitwise at T={t} point {pt_i}"
+        for r in rows:
+            if r.get("mode") == "backend-sweep" and r["T"] == t \
+                    and r["backend"] != "xla":
+                r["max_abs_err_vs_xla"] = round(err_f, 7)
+
+        # op-count gates: the fused kernel leaves at most the exact-path
+        # capacity buffers (1 gather + 1 scatter) standalone per layer;
+        # unfused pallas additionally pays the class-sort legs
+        _, gf, sf = per_tick["pallas_fused"]
+        _, gu, su = per_tick["pallas"]
+        assert gf <= 1 and sf <= 1, \
+            f"fused backend runs {gf} gathers/{sf} scatters per layer"
+        assert gf < gu and sf < su, \
+            f"fusion audit: fused ({gf},{sf}) vs unfused ({gu},{su})"
+        if on_cpu:
+            ms_f, ms_u = per_tick["pallas_fused"][0], per_tick["pallas"][0]
+            assert ms_f <= ms_u * 1.10, \
+                (f"fused slower than unfused in interpret mode at T={t}: "
+                 f"{ms_f:.2f} vs {ms_u:.2f} ms/tick")
+        for r in rows:
+            if r.get("mode") == "backend-sweep" and r["T"] == t \
+                    and r["backend"] == "pallas_fused":
+                r["speedup_vs_unfused"] = round(
+                    per_tick["pallas"][0] / per_tick["pallas_fused"][0], 3)
+
+    if devices > 1:
+        _backend_sweep_sharded(rows, quick=quick, iters=iters,
+                               devices=devices)
+
+
+def _backend_sweep_sharded(rows, *, quick, iters, devices):
+    """One shape through ``mcma_dispatch_sharded`` per backend on an
+    N-way mesh — the fused kernel inside shard_map, gated bitwise against
+    unfused pallas and < 1e-4 against the XLA oracle."""
+    on_cpu = jax.default_backend() != "tpu"
+    t, n = (512, 4) if quick else (2048, 4)
+    d, d_h, d_ff, block_t = (128, 32, 256, 64) if quick \
+        else (512, 64, 2048, 128)
+    assert t % devices == 0, (t, devices)
+    tl = t // devices
+    ec_l, ic_l = max(tl // 2, 1), max(int(tl * 0.4), 1)
+    key = jax.random.PRNGKey(t * 131 + n + 1)
+    x, logits, (w1, b1, w2, b2), (wi, wo) = _make_case(
+        key, t, n, d, d_h, d_ff)
+    exact_fn_p = lambda ep, xb: jnp.dot(jax.nn.silu(jnp.dot(xb, ep[0])),
+                                        ep[1])
+    mesh = jax.make_mesh((devices,), ("data",))
+    outs = {}
+    for backend in D.DISPATCH_BACKENDS:
+        interp = on_cpu and backend in D.PALLAS_BACKENDS
+        fn = jax.jit(lambda xx, lg, be=backend, ip=interp:
+                     D.mcma_dispatch_sharded(
+                         mesh, xx, lg, exact_fn_p, (wi, wo),
+                         w1, b1, w2, b2, exact_cap=ec_l,
+                         invoke_cap=ic_l, backend=be,
+                         block_t=block_t, interpret=ip))
+        ms, stats = _time(fn, x, logits, iters=iters)
+        outs[backend] = np.asarray(fn(x, logits)[0])
+        _record(rows, t=t, n=n, d=d, backend=backend, block_t=block_t,
+                interpret=interp, ms=ms, stats=stats, devices=devices,
+                mode="backend-sweep-sharded")
+        print(f"  (sharded sweep x{devices})", flush=True)
+    err = float(np.abs(outs["pallas_fused"] - outs["xla"]).max())
+    assert err < 1e-4, f"sharded fused-vs-xla divergence: {err}"
+    assert np.array_equal(outs["pallas_fused"], outs["pallas"]), \
+        "sharded fused != unfused pallas bitwise"
+    for r in rows[-2:]:
+        r["max_abs_err_vs_xla"] = round(err, 7)
+
+
 def main(quick: bool = False, iters: int | None = None, devices: int = 1,
          autotune: bool = False, decode_tick: bool = False,
-         qos: bool = False, library: bool = False):
+         qos: bool = False, library: bool = False,
+         backend_sweep: bool = False):
     os.makedirs(OUT, exist_ok=True)
     on_cpu = jax.default_backend() != "tpu"
     if devices > 1 and len(jax.devices()) < devices:
@@ -719,6 +904,8 @@ def main(quick: bool = False, iters: int | None = None, devices: int = 1,
         _library_leg(rows, quick=quick, devices=devices)
     if decode_tick:
         _decode_tick_leg(rows, quick=quick)
+    if backend_sweep:
+        _backend_sweep_leg(rows, quick=quick, iters=iters, devices=devices)
 
     # column union across modes (the autotune rows add trajectory columns)
     fields = list(rows[0].keys())
@@ -764,6 +951,17 @@ if __name__ == "__main__":
                          "pallas-vs-xla gated per mix; asserts loose-bound "
                          "rows serve strictly more invocation than "
                          "tight-bound rows at every visited point")
+    ap.add_argument("--backend-sweep", action="store_true",
+                    help="add the fused-kernel sweep: fused vs unfused "
+                         "pallas vs xla over an L-layer tick per shape "
+                         "(ms_per_tick + standalone activation gather/"
+                         "scatter counts per layer from a jaxpr audit); "
+                         "asserts the fused backend runs <=1 of each per "
+                         "layer, matches unfused pallas BITWISE and the "
+                         "xla oracle <1e-4 at every visited operating "
+                         "point, and is no slower than unfused in "
+                         "interpret mode (with --devices N also through "
+                         "the sharded engine)")
     args = ap.parse_args()
     if args.devices > 1 and "host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -773,4 +971,5 @@ if __name__ == "__main__":
             f" --xla_force_host_platform_device_count={args.devices}").strip()
     main(quick=args.quick, iters=args.iters, devices=args.devices,
          autotune=args.autotune, decode_tick=args.decode_tick,
-         qos=args.qos, library=args.library)
+         qos=args.qos, library=args.library,
+         backend_sweep=args.backend_sweep)

@@ -40,7 +40,7 @@ def main(argv=None) -> int:
                     help="ignore the baseline: any finding fails")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from current findings")
-    ap.add_argument("--backends", default="xla,pallas",
+    ap.add_argument("--backends", default="xla,pallas,pallas_fused",
                     help="audit backends (comma-separated)")
     ap.add_argument("--no-steps", action="store_true",
                     help="audit the engine only, skip the model steps")

@@ -179,7 +179,7 @@ def _audit_engine(backend: str) -> list[Finding]:
             return D.mcma_dispatch(
                 xv, lg, exact_fn, *stacks, exact_cap=exact_cap,
                 invoke_cap=invoke_cap, backend=backend, block_t=16,
-                interpret=backend == "pallas", weights_prepadded=True,
+                interpret=backend != "xla", weights_prepadded=True,
                 row_mask=mask, tier=tier, tier_margins=margins,
                 residency=residency)
 
@@ -216,7 +216,7 @@ def _audit_plan_execute(backend: str) -> list[Finding]:
     from repro.kernels import ops
     exec_fn = jax.jit(lambda plan, xv, residency: D.execute_dispatch(
         plan, xv, exact_fn, *ops.gather_resident_stacks(*stacks, residency),
-        interpret=backend == "pallas", weights_prepadded=True))
+        interpret=backend != "xla", weights_prepadded=True))
     findings = []
     for tier, margins, residency, mask in _variants():
         plan = plan_fn(logits, tier, margins, residency, mask)
@@ -251,7 +251,7 @@ def _audit_sharded(backend: str) -> list[Finding]:
                      mesh, xv, lg, exact_fn, (wi, wo), *stacks,
                      exact_cap=exact_cap, invoke_cap=invoke_cap,
                      backend=backend, block_t=16,
-                     interpret=backend == "pallas",
+                     interpret=backend != "xla",
                      weights_prepadded=True, row_mask=mask, tier=tier,
                      tier_margins=margins, residency=residency))
     stats = None
@@ -275,7 +275,7 @@ def _audit_steps(backend: str) -> list[Finding]:
     base = smoke_config(get_config("internlm2-1.8b"))
     cfg = dataclasses.replace(base, approx=dataclasses.replace(
         base.approx, enable=True, library_size=6, backend=backend,
-        **(dict(interpret=True, block_t=16) if backend == "pallas" else {})))
+        **(dict(interpret=True, block_t=16) if backend != "xla" else {})))
     b = 4
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     toks = jnp.arange(1, b + 1, dtype=jnp.int32)[:, None]
@@ -319,13 +319,17 @@ def _audit_steps(backend: str) -> list[Finding]:
     return findings
 
 
-def run_audit(*, backends=("xla", "pallas"),
+def run_audit(*, backends=("xla", "pallas", "pallas_fused"),
               with_steps: bool = True) -> list[Finding]:
     """Trace-audit every engine entrypoint; [] = every contract holds.
 
-    ``backends`` narrows the sweep; ``with_steps=False`` skips the
-    (heavier) decode / prefill-chunk model steps for quick engine-only
-    runs."""
+    The default sweep covers all three executors — the XLA oracle, the
+    unfused Pallas kernel, and the fused-dispatch kernel
+    (``pallas_fused``, kernels/fused_dispatch.py) — so the fused
+    entrypoint is held to the same one-compile / int32-stats /
+    no-callback contracts.  ``backends`` narrows the sweep;
+    ``with_steps=False`` skips the (heavier) decode / prefill-chunk
+    model steps for quick engine-only runs."""
     jax.config.update("jax_platform_name", "cpu")
     findings: list[Finding] = []
     for be in backends:

@@ -1,0 +1,92 @@
+"""Dynamic jaxpr op counting — the fused-dispatch audit's measuring stick.
+
+``count_dynamic_ops`` walks a jaxpr counting how many times the named
+primitives EXECUTE per call: a scan body's ops count once per trip
+(static jaxpr counts would hide the per-layer cost a tick-scope plan
+amortizes), and pjit/remat/scan/pallas sub-jaxprs are entered
+recursively.  Grown out of bench_dispatch's local counter so the
+fused-kernel gates (bench_dispatch --backend-sweep,
+tests/test_fused_dispatch.py) share one definition of "how many
+standalone gathers does this program run per layer".
+
+Two knobs matter for the fusion audit:
+
+  * ``min_operand_rank=2`` restricts the count to ACTIVATION-sized moves
+    — gathers/scatters whose operand is a matrix — so the plan's cheap
+    int32 index-vector bookkeeping (1-D scatters) doesn't drown the
+    signal.
+  * ``enter_pallas=False`` stops at ``pallas_call`` boundaries: the
+    fused kernel's point is precisely that its gather/scatter are
+    VMEM-local kernel I/O rather than standalone XLA ops over HBM, so
+    the STANDALONE count excludes kernel bodies.  (In interpret mode the
+    kernel body lowers to XLA too — entering it would count the fused
+    moves twice over.)
+"""
+from __future__ import annotations
+
+# gather/scatter family by jaxpr primitive name; jnp.take / advanced
+# indexing lower to "gather", .at[].set to "scatter", .at[].add to
+# "scatter-add" (dispatch.scatter_rows' pinned duplicate semantics)
+GATHER_PRIMITIVES = frozenset({"gather"})
+SCATTER_PRIMITIVES = frozenset({
+    "scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max",
+})
+MOVE_PRIMITIVES = GATHER_PRIMITIVES | SCATTER_PRIMITIVES
+
+
+def sub_jaxprs(eqn, *, enter_pallas: bool = True):
+    """All jaxpr-valued params of an eqn (pjit/scan/remat/pallas bodies).
+
+    ``enter_pallas=False`` skips a ``pallas_call``'s kernel body — its
+    ops are kernel-internal, not standalone program ops.
+    """
+    if not enter_pallas and eqn.primitive.name == "pallas_call":
+        return []
+    out = []
+    for v in eqn.params.values():
+        for u in (v if isinstance(v, (list, tuple)) else (v,)):
+            if hasattr(u, "jaxpr") and hasattr(u, "consts"):  # ClosedJaxpr
+                out.append(u.jaxpr)
+            elif hasattr(u, "eqns"):                          # Jaxpr
+                out.append(u)
+    return out
+
+
+def _operand_rank(eqn) -> int:
+    """Rank of the eqn's first operand (the gathered/scattered array)."""
+    if not eqn.invars:
+        return 0
+    aval = getattr(eqn.invars[0], "aval", None)
+    return getattr(aval, "ndim", 0)
+
+
+def count_dynamic_ops(jaxpr, names, *, min_operand_rank: int = 0,
+                      enter_pallas: bool = True) -> int:
+    """How many times primitives in ``names`` EXECUTE per call."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)            # accept ClosedJaxpr
+    total = 0
+    for eqn in jaxpr.eqns:
+        mult = eqn.params.get("length", 1) \
+            if eqn.primitive.name == "scan" else 1
+        if eqn.primitive.name in names \
+                and _operand_rank(eqn) >= min_operand_rank:
+            total += 1
+        for sub in sub_jaxprs(eqn, enter_pallas=enter_pallas):
+            total += mult * count_dynamic_ops(
+                sub, names, min_operand_rank=min_operand_rank,
+                enter_pallas=enter_pallas)
+    return total
+
+
+def activation_moves(jaxpr) -> tuple[int, int]:
+    """(standalone gathers, standalone scatters) over activation-sized
+    (rank >= 2) operands, pallas kernel bodies excluded — the fusion
+    audit's headline numbers.  Under ``backend="pallas_fused"`` the
+    engine's per-layer execute shows (1, 1): the exact-path capacity
+    buffers; the class-sort legs are gone.  Unfused pallas shows (3, 3).
+    """
+    g = count_dynamic_ops(jaxpr, GATHER_PRIMITIVES, min_operand_rank=2,
+                          enter_pallas=False)
+    s = count_dynamic_ops(jaxpr, SCATTER_PRIMITIVES, min_operand_rank=2,
+                          enter_pallas=False)
+    return g, s

@@ -13,9 +13,13 @@ asserts the tile math stays exact).
 
 A second Pallas contract: a ``BlockSpec`` index_map must take one
 argument per grid dimension (plus one per scalar-prefetch operand under
-``PrefetchScalarGridSpec``) — arity drift compiles on some jax versions
-and mis-indexes on others.  Checked when the grid is a literal tuple (or
-a single local assignment of one).
+``PrefetchScalarGridSpec`` — the fused dispatch kernel prefetches TWO
+operands, the row-index vector and tile_cls, so its maps take
+``grid rank + 2`` args).  Checked when the grid is a literal tuple (or a
+single local assignment of one); the index_map may be an inline lambda
+OR a name resolving to a single same-function ``def`` / lambda
+assignment (kernels/fused_dispatch.py factors its maps out as named
+functions).
 
 Scope: modules that import ``jax.experimental.pallas``, plus the
 ``kernels/`` tree (ops.py builds the tile grids without importing
@@ -101,6 +105,26 @@ def _resolve_grid(node: ast.AST, fn: ast.FunctionDef):
     return None
 
 
+def _resolve_named_map(name_node: ast.Name, fn: ast.FunctionDef, mod):
+    """An index_map passed by NAME: resolve to the single same-function
+    ``def`` (nested functions included) or lambda assignment, falling
+    back to a module-level ``def``.  None = unresolvable (imported,
+    shadowed, or ambiguous) — those stay unchecked rather than guessed.
+    """
+    nm = name_node.id
+    cands = [n for n in ast.walk(fn) if isinstance(n, ast.FunctionDef)
+             and n.name == nm]
+    cands += [n.value for n in ast.walk(fn)
+              if isinstance(n, ast.Assign) and len(n.targets) == 1
+              and isinstance(n.targets[0], ast.Name)
+              and n.targets[0].id == nm
+              and isinstance(n.value, ast.Lambda)]
+    if not cands:
+        cands = [n for n in mod.tree.body
+                 if isinstance(n, ast.FunctionDef) and n.name == nm]
+    return cands[0] if len(cands) == 1 else None
+
+
 def _check_index_map_arity(mod, fn, spec_call, findings):
     """``spec_call`` is a GridSpec / PrefetchScalarGridSpec /
     pallas_call(...) Call carrying grid= — check every BlockSpec lambda
@@ -123,17 +147,23 @@ def _check_index_map_arity(mod, fn, spec_call, findings):
             continue
         for arg in list(call.args) + [kw.value for kw in call.keywords
                                       if kw.arg == "index_map"]:
-            if isinstance(arg, ast.Lambda):
-                got = len(arg.args.args)
-                if got != want:
-                    findings.append(Finding(
-                        rule=RULE_ID, path=mod.path, line=arg.lineno,
-                        scope=fn.name,
-                        detail=f"index-map-arity:{got}:{want}",
-                        message=(f"BlockSpec index_map takes {got} args "
-                                 f"but the grid has rank {rank} with "
-                                 f"{n_prefetch} scalar-prefetch operand(s)"
-                                 f" — it must take {want}")))
+            target = arg
+            if isinstance(arg, ast.Name):
+                target = _resolve_named_map(arg, fn, mod)
+            if not isinstance(target, (ast.Lambda, ast.FunctionDef)):
+                continue
+            if target.args.vararg is not None:
+                continue                      # *args absorbs any arity
+            got = len(target.args.args)
+            if got != want:
+                findings.append(Finding(
+                    rule=RULE_ID, path=mod.path, line=arg.lineno,
+                    scope=fn.name,
+                    detail=f"index-map-arity:{got}:{want}",
+                    message=(f"BlockSpec index_map takes {got} args "
+                             f"but the grid has rank {rank} with "
+                             f"{n_prefetch} scalar-prefetch operand(s)"
+                             f" — it must take {want}")))
 
 
 def check(mod: astutil.ModuleInfo) -> list[Finding]:

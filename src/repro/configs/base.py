@@ -59,7 +59,10 @@ class ApproxConfig:
     shard_slack: float = 1.0
     # serve-mode dispatch engine (runtime/dispatch.py): "xla" = portable
     # per-class capacity dispatch (the test oracle); "pallas" = the
-    # scalar-prefetch weight-switch kernel (kernels/switched_mlp.py).
+    # scalar-prefetch weight-switch kernel (kernels/switched_mlp.py);
+    # "pallas_fused" = the same kernel with the class-sort gather/scatter
+    # fused in (kernels/fused_dispatch.py) — one HBM pass over
+    # activations per layer.
     backend: str = "xla"
     # routing granularity at decode (runtime/dispatch.py plan/execute):
     # "layer" = per-layer route -> sort -> dispatch (today's semantics, the

@@ -16,7 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import mcma_mlp, switched_mlp
+from repro.kernels import fused_dispatch, mcma_mlp, switched_mlp
 
 LANE = 128
 
@@ -201,3 +201,49 @@ def switched_apply(x: jax.Array, cls: jax.Array, w1: jax.Array, b1: jax.Array,
     # --- scatter back to original order -------------------------------------
     y_sorted = yp[pos, :d_out]
     return jnp.zeros((t, d_out), x.dtype).at[order].set(y_sorted)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret", "prepadded",
+                                    "d_out", "vector_io"))
+def switched_apply_fused(x: jax.Array, cls: jax.Array, w1: jax.Array,
+                         b1: jax.Array, w2: jax.Array, b2: jax.Array, *,
+                         block_t: int = 256, interpret: bool = False,
+                         prepadded: bool = False, d_out: int | None = None,
+                         sort_plan=None,
+                         vector_io: bool | None = None) -> jax.Array:
+    """``switched_apply`` with the gather/scatter fused into the kernel.
+
+    Same contract and bit-identical results (the fused kernel's compute
+    is shape-identical to the unfused one; see kernels/fused_dispatch.py),
+    but the class-sort permutation rides into the kernel as a
+    scalar-prefetched row-index vector instead of standalone XLA
+    gather/scatter ops — activations cross HBM once per call.
+    ``vector_io`` picks the kernel's I/O strategy (None = vectorized
+    under interpret, per-row DMA loops compiled).
+    """
+    t, d_in = x.shape
+    n = w1.shape[0]
+    if prepadded:
+        assert d_out is not None, "prepadded stacks need an explicit d_out"
+        w1p, w2p = w1, w2
+        b1p, b2p = b1[:, None, :], b2[:, None, :]
+    else:
+        d_h, d_out = w1.shape[2], w2.shape[2]
+        d_in_p, d_h_p, d_out_p = (_pad_to(d_in, LANE), _pad_to(d_h, LANE),
+                                  _pad_to(d_out, LANE))
+        w1p = jnp.pad(w1, ((0, 0), (0, d_in_p - d_in), (0, d_h_p - d_h)))
+        b1p = jnp.pad(b1, ((0, 0), (0, d_h_p - d_h)))[:, None, :]
+        w2p = jnp.pad(w2, ((0, 0), (0, d_h_p - d_h), (0, d_out_p - d_out)))
+        b2p = jnp.pad(b2, ((0, 0), (0, d_out_p - d_out)))[:, None, :]
+    if sort_plan is None:
+        order, pos, tile_cls, _, t_pad = class_sort_plan(cls, n, block_t)
+    else:
+        order, pos, tile_cls = sort_plan
+        t_pad = tile_cls.shape[0] * block_t
+
+    rows = fused_dispatch.fused_row_index(order, pos, t, t_pad)
+    y = fused_dispatch.switched_mlp_fused(
+        x, rows, tile_cls, w1p, b1p, w2p, b2p, block_t=block_t,
+        interpret=interpret, vector_io=vector_io)
+    return y[:t, :d_out]

@@ -39,9 +39,12 @@ def add_serve_options(parser: argparse.ArgumentParser,
                    help="serve the ApproxFFN through the weight-switch "
                         "dispatch engine (implies --approx where the "
                         "surface has it)")
-    g.add_argument("--backend", choices=("pallas", "xla"), default=None,
+    g.add_argument("--backend", choices=("pallas", "pallas_fused", "xla"),
+                   default=None,
                    help="dispatch executor override (default: the "
-                        "config's approx.backend)")
+                        "config's approx.backend); pallas_fused runs the "
+                        "gather/scatter-fused kernel "
+                        "(kernels/fused_dispatch.py)")
     g.add_argument("--route-scope", choices=("layer", "tick"), default=None,
                    help="MCMA routing granularity at decode: 'tick' makes "
                         "ONE dispatch plan per tick (reused by every "

@@ -23,9 +23,14 @@ module is the TPU-serving analog, one jit-stable pipeline behind
 Backends:
   * ``backend="pallas"`` — the weight-switch kernel path above
     (``interpret=True`` runs it on CPU; compiled on TPU).
+  * ``backend="pallas_fused"`` — the same plan executed by the FUSED
+    kernel (kernels/fused_dispatch.py): the class-sort permutation rides
+    into the kernel as a scalar-prefetched row-index vector, so the
+    gather/scatter legs disappear from the XLA program and activations
+    cross HBM once per layer.  Bit-identical to "pallas".
   * ``backend="xla"``    — the portable per-class gather/scatter loop the
-    seed shipped.  It is the semantic oracle: tests require the Pallas
-    path to match it on every dispatched row.
+    seed shipped.  It is the semantic oracle: tests require both Pallas
+    paths to match it on every dispatched row.
 
 Every call also returns ``invoke_stats`` (per-class routed counts,
 post-capacity dispatched counts, dropped rows, exact fraction, executed
@@ -72,6 +77,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+
+# Backends whose plans carry a live class-sort (order/pos/tile_cls) and
+# launch the worst-case single-class-tile grid; "xla" carries placeholders.
+PALLAS_BACKENDS = ("pallas", "pallas_fused")
+DISPATCH_BACKENDS = ("xla",) + PALLAS_BACKENDS
 
 
 def route(logits: jax.Array, tier: jax.Array | None = None,
@@ -150,15 +160,36 @@ def capacity_slots(cls_sorted: jax.Array, rank: jax.Array, cap: int, *,
 
 def scatter_rows(rows: jax.Array, slot: jax.Array, keep: jax.Array,
                  n_slots: int) -> jax.Array:
-    """rows (R, d) -> (n_slots, d) buffer; slot n_slots is the trash row."""
+    """rows (R, d) -> (n_slots, d) buffer; slot n_slots is the trash row.
+
+    Degenerate slots are PINNED, not incidental (the same contract as
+    ops.gather_resident_stacks): a slot outside [0, n_slots] is dropped —
+    routed to the trash row, never wrapped onto a real slot the way
+    jit's negative-index semantics would — and duplicate slots resolve
+    deterministically by summation (the buffer is zero-initialized, so
+    the engine's unique valid slots are written bit-identically to a
+    plain set).
+    """
+    slot = slot.astype(jnp.int32)
+    ok = keep & (slot >= 0) & (slot <= n_slots)
     buf = jnp.zeros((n_slots + 1, rows.shape[-1]), rows.dtype)
-    return buf.at[slot].set(rows * keep[:, None])[:n_slots]
+    return buf.at[jnp.where(ok, slot, n_slots)] \
+        .add(rows * ok[:, None])[:n_slots]
 
 
 def gather_rows(y: jax.Array, slot: jax.Array, keep: jax.Array) -> jax.Array:
-    """(n_slots, d_out) buffer -> per-row outputs; dropped rows are zero."""
+    """(n_slots, d_out) buffer -> per-row outputs; dropped rows are zero.
+
+    A slot outside [0, n_slots) reads the appended zero row (pinned like
+    ops.gather_resident_stacks — never jit's clamp onto a real slot) and
+    the row comes out exactly zero; duplicate slots simply duplicate the
+    buffer row.
+    """
+    n_slots = y.shape[0]
     y = jnp.concatenate([y, jnp.zeros((1, y.shape[-1]), y.dtype)], 0)
-    return y[slot] * keep[:, None]
+    slot = slot.astype(jnp.int32)
+    ok = keep & (slot >= 0) & (slot < n_slots)
+    return y[jnp.where(ok, slot, n_slots)] * ok[:, None]
 
 
 def capacity_path(x: jax.Array, mask: jax.Array, cap: int,
@@ -431,7 +462,7 @@ def make_dispatch_plan(logits: jax.Array,
     cap_of = jnp.asarray((0,) + class_caps, jnp.int32)
     kept = (cls > 0) & (rank < cap_of[cls])
     eff = jnp.where(kept, cls - 1, n).astype(jnp.int32)
-    if backend == "pallas":
+    if backend in PALLAS_BACKENDS:
         order, pos, tile_cls, _, _ = ops.class_sort_plan(eff, n + 1, block_t)
     else:
         n_tiles = ops.worst_case_rows(t, n + 1, block_t) // block_t
@@ -452,10 +483,10 @@ def make_dispatch_plan(logits: jax.Array,
     tier_dispatched = jnp.bincount(tier_ids * (n + 2) + disp_col,
                                    length=nt * (n + 2)) \
         .reshape(nt, n + 2)[:, :n + 1]
-    if backend == "pallas":
-        # the kernel launches the full static worst-case grid (including
-        # trailing zero tiles past the occupied region) — n+1 classes
-        # including the pseudo-class
+    if backend in PALLAS_BACKENDS:
+        # both Pallas executors launch the full static worst-case grid
+        # (including trailing zero tiles past the occupied region) — n+1
+        # classes including the pseudo-class
         executed = jnp.asarray(
             exact_cap + ops.worst_case_rows(t, n + 1, block_t), jnp.int32)
     elif backend == "xla":
@@ -656,20 +687,24 @@ def execute_dispatch(plan: DispatchPlan, x: jax.Array,
             slot = jnp.where(keep, plan.rank, cap_i)
             xb = scatter_rows(x, slot, keep, cap_i)
             out = out + gather_rows(approx_i(xb), slot, keep)
-    else:  # pallas — validated by make_dispatch_plan
+    else:  # pallas family — validated by make_dispatch_plan
         # one grouped kernel launch over ALL rows on the plan's precomputed
         # class-sort: exact + over-capacity (and masked-inactive) rows ride
         # the zero-weight pseudo-class n, whose tiles compute exact zeros
-        # (tanh(0)@0 + 0), so no post-mask is needed.
+        # (tanh(0)@0 + 0), so no post-mask is needed.  "pallas_fused" runs
+        # the same plan through the fused kernel — the sort permutation is
+        # scalar-prefetched and the standalone gather/scatter legs vanish.
+        apply = ops.switched_apply if plan.backend == "pallas" \
+            else ops.switched_apply_fused
         sort_plan = (plan.order, plan.pos, plan.tile_cls)
         if weights_prepadded:
-            out = out + ops.switched_apply(
+            out = out + apply(
                 x, plan.eff, a_w1, a_b1, a_w2, a_b2, block_t=plan.block_t,
                 interpret=interpret, prepadded=True, d_out=out.shape[-1],
                 sort_plan=sort_plan)
         else:
             zcls = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])], 0)
-            out = out + ops.switched_apply(
+            out = out + apply(
                 x, plan.eff, zcls(a_w1), zcls(a_b1), zcls(a_w2), zcls(a_b2),
                 block_t=plan.block_t, interpret=interpret,
                 sort_plan=sort_plan)

@@ -95,7 +95,9 @@ class ServeOptions:
     same defaults — the legacy shim folds kwargs straight in):
 
     batching:    batch, max_len, eos, greedy, seed
-    dispatch:    use_mcma_dispatch, backend ("pallas"/"xla"/None = config),
+    dispatch:    use_mcma_dispatch, backend ("pallas"/"pallas_fused"/
+                 "xla"/None = config; pallas_fused = the gather/scatter-
+                 fused kernel, kernels/fused_dispatch.py),
                  route_scope ("layer"/"tick"/None = config), mesh
     autotune:    autotune (True = default ladder, or an explicit rung
                  tuple), drop_budget, autotune_kwargs

@@ -283,7 +283,8 @@ class DecodeServer:
         # from the router, the capacity dispatch, and every invoke stat —
         # the rates are exact even on a mostly-idle slot table.
         # ``backend`` overrides the dispatch engine ("pallas" default,
-        # "xla" = the oracle the benches gate the kernel against).
+        # "pallas_fused" = the gather/scatter-fused kernel, "xla" = the
+        # oracle the benches gate both kernels against).
         self.use_mcma_dispatch = use_mcma_dispatch
         self.backend = backend
         # mesh: distributed deployment.  Params/cache are sharded by the

@@ -90,13 +90,16 @@ def mcma_serve_config(cfg: ModelConfig, *, backend: str | None = None) -> ModelC
     """Serve-mode cfg routing the ApproxFFN through the MCMA weight-switch
     dispatch engine (runtime/dispatch.py).  Default backend is the Pallas
     kernel (interpreter mode off-TPU so the same step compiles in CI/CPU
-    runs); ``backend="xla"`` swaps in the pure-XLA dispatch — the oracle
-    the benches gate the kernel against."""
+    runs); ``backend="pallas_fused"`` runs the gather/scatter-fused
+    kernel; ``backend="xla"`` swaps in the pure-XLA dispatch — the
+    oracle the benches gate both kernels against."""
     assert cfg.approx.enable, "MCMA dispatch requires cfg.approx.enable"
     backend = backend or "pallas"
+    from repro.runtime.dispatch import PALLAS_BACKENDS
     return dataclasses.replace(cfg, approx=dataclasses.replace(
         cfg.approx, backend=backend,
-        interpret=backend == "pallas" and jax.default_backend() != "tpu"))
+        interpret=backend in PALLAS_BACKENDS
+        and jax.default_backend() != "tpu"))
 
 
 @contextlib.contextmanager
@@ -183,7 +186,8 @@ def make_decode_step(cfg: ModelConfig, *, use_mcma_dispatch: bool = False,
     through the SAME compiled step, zero retraces.
 
     ``backend`` (with ``use_mcma_dispatch``) overrides the dispatch
-    backend: default "pallas", or "xla" for the oracle engine."""
+    backend: default "pallas", "pallas_fused" for the gather/scatter-
+    fused kernel, or "xla" for the oracle engine."""
     cfg = _serve_cfg(cfg, use_mcma_dispatch=use_mcma_dispatch,
                      operating_point=operating_point,
                      route_scope=route_scope, backend=backend)

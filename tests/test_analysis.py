@@ -153,6 +153,57 @@ def test_rl005_index_map_arity_is_caught(tmp_path):
     assert any(f.detail.startswith("index-map-arity") for f in fs), fs
 
 
+# the fused-dispatch kernel's shape: TWO scalar-prefetch operands and
+# index maps factored out as named defs — RL005 must resolve the name
+# and hold it to grid rank + 2
+RL005_NAMED_ARITY = """
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def launch(k, x, rows, tc):
+        def _resident(i, rows_s):
+            return (0, 0)
+        spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(4,),
+            in_specs=[pl.BlockSpec((1, 1), _resident)])
+        return pl.pallas_call(k, grid_spec=spec)(rows, tc, x)
+    """
+
+RL005_NAMED_ARITY_OK = """
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def launch(k, x, rows, tc):
+        def _resident(i, rows_s, tc_s):
+            return (0, 0)
+        _weight = lambda i, rows_s, tc_s: (tc_s[i], 0, 0)
+
+        def _any(*args):
+            return (0, 0)
+        spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(4,),
+            in_specs=[pl.BlockSpec((1, 1), _resident),
+                      pl.BlockSpec((1, 1), _weight),
+                      pl.BlockSpec((1, 1), _any)])
+        return pl.pallas_call(k, grid_spec=spec)(rows, tc, x)
+    """
+
+
+def test_rl005_named_index_map_arity_is_caught(tmp_path):
+    root = _mk_tree(tmp_path, {"src/repro/named.py": RL005_NAMED_ARITY})
+    fs = [f for f in lint_paths([root / "src"], root) if f.rule == "RL005"]
+    assert any(f.detail == "index-map-arity:2:3" for f in fs), fs
+
+
+def test_rl005_named_index_map_correct_arity_is_clean(tmp_path):
+    """def-based and lambda-assigned maps with the right arity pass; a
+    *args map stays unchecked rather than guessed."""
+    root = _mk_tree(tmp_path, {"src/repro/named.py": RL005_NAMED_ARITY_OK})
+    fs = [f for f in lint_paths([root / "src"], root) if f.rule == "RL005"
+          and f.detail.startswith("index-map-arity")]
+    assert fs == [], fs
+
+
 def test_guarded_and_plumbed_patterns_stay_clean(tmp_path):
     """The engine's own idioms must not trip the rules: an asserted
     floordiv, the round-up idiom, parameter-plumbed psum axes, a

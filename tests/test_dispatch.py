@@ -128,6 +128,43 @@ def test_over_capacity_rows_contribute_zero():
         assert int(s["dropped"]) == t - 10
 
 
+def test_scatter_gather_rows_pin_oob_and_duplicates():
+    """The capacity-path primitives' degenerate-slot semantics are PINNED
+    (the same contract as ops.gather_resident_stacks): an out-of-range
+    slot is dropped/zero — never wrapped by jit's negative-index
+    semantics or clamped onto a real slot — and duplicate scatter slots
+    resolve deterministically by summation.  Checked TRACED, where jit's
+    default OOB behaviors would otherwise silently diverge from eager."""
+    rows = jnp.arange(1.0, 13.0).reshape(4, 3)
+    keep = jnp.asarray([True, True, True, True])
+    n_slots = 4
+
+    def roundtrip(slot):
+        buf = D.scatter_rows(rows, slot, keep, n_slots)
+        return buf, D.gather_rows(buf, slot, keep)
+
+    # OOB high, OOB negative: dropped on scatter, zero on gather — jit
+    # would clamp the high one and wrap -1 onto the last slot
+    buf, back = jax.jit(roundtrip)(jnp.asarray([0, 2, 9, -1]))
+    np.testing.assert_array_equal(np.asarray(buf[0]), np.asarray(rows[0]))
+    np.testing.assert_array_equal(np.asarray(buf[2]), np.asarray(rows[1]))
+    np.testing.assert_array_equal(np.asarray(buf)[[1, 3]], np.zeros((2, 3)))
+    np.testing.assert_array_equal(np.asarray(back[:2]), np.asarray(rows[:2]))
+    np.testing.assert_array_equal(np.asarray(back[2:]), np.zeros((2, 3)))
+
+    # duplicates: deterministic summation on scatter (not last-writer-
+    # wins), plain duplication on gather
+    buf, back = jax.jit(roundtrip)(jnp.asarray([1, 1, 3, 0]))
+    np.testing.assert_array_equal(np.asarray(buf[1]),
+                                  np.asarray(rows[0] + rows[1]))
+    np.testing.assert_array_equal(np.asarray(back[0]), np.asarray(back[1]))
+
+    # keep=False drops a VALID slot entirely
+    buf2 = D.scatter_rows(rows, jnp.asarray([0, 1, 2, 3]),
+                          jnp.asarray([True, False, True, True]), n_slots)
+    np.testing.assert_array_equal(np.asarray(buf2[1]), np.zeros((3,)))
+
+
 def test_unknown_backend_raises():
     t, n = 16, 2
     x, logits, w, exact_fn = _mk_dispatch_case(jax.random.PRNGKey(1),
