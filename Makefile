@@ -34,7 +34,7 @@ analyze-lint:
 # mesh decode + the QoS tier-mix module) + the sharded dispatch microbench
 # on 8 virtual CPU devices
 test-multidevice:
-	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py tests/test_serving.py tests/test_library.py
+	$(MDFLAGS) $(PY) -m pytest -x -q tests/test_sharding.py tests/test_sharded_dispatch.py tests/test_dispatch_plan.py tests/test_qos_tiers.py tests/test_serving.py tests/test_library.py tests/test_paged_cache.py
 	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_dispatch --quick --devices 8 --autotune --decode-tick --qos --library --backend-sweep
 	PYTHONPATH=src $(MDFLAGS) $(PY) -m benchmarks.bench_serve --quick --devices 8 --n-reqs 6
 
@@ -87,9 +87,11 @@ bench-ci-dispatch:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dispatch --quick --autotune --decode-tick --qos --library --backend-sweep
 
 # serving-scheduler arrival replay: Poisson/bursty streams, chunked
-# prefill vs token-by-token, p50/p99 TTFT + tokens/sec per offered load;
-# gates chunked==token greedy tokens, chunked TTFT wins on long prompts,
-# and pallas==xla at the server level.  Writes benchmarks/out/serve.csv.
+# prefill vs token-by-token vs the paged KV cache, p50/p99 TTFT +
+# tokens/sec + resident-KV-bytes per offered load; gates chunked==token
+# greedy tokens, chunked TTFT wins on long prompts, paged==dense tokens
+# at strictly lower kv_bytes_resident, and pallas==xla at the server
+# level.  Writes benchmarks/out/serve.csv.
 bench-serve:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_serve --quick
 

@@ -10,11 +10,16 @@ Wall-clock TTFT and tokens/sec are reported next to the tick numbers; on
 CPU the Pallas dispatch runs in interpreter mode, so wall columns measure
 scheduling+plumbing, not kernel speed (rerun on TPU for real numbers).
 
-Three servers replay each (process, load) cell:
+Four servers replay each (process, load) cell:
   * ``token``  — prefill_chunk=0, FIFO admission: the pre-chunking
     reference path (one prompt token per decode tick);
   * ``chunk``  — chunked prefill + cost-model admission: the scheduler
     this bench exists to measure;
+  * ``paged``  — the chunk scheduler on the paged KV cache
+    (kv_page_size=16, full pool): same tokens, strictly fewer resident
+    KV bytes on this mixed-length stream (max_len=160 overshoots the
+    typical request by design — the dense layout pays worst case per
+    slot, the paged one pays its page high-water mark);
   * ``chunk-xla`` (one cell only) — same scheduler on the XLA oracle
     dispatch backend, gating the Pallas engine at the SERVER level.
 
@@ -26,6 +31,9 @@ Gates (the bench fails loudly, it does not just report):
     binds; docs/serving.md spells this out);
   * chunked prefill beats token-by-token mean TTFT (in ticks) on the
     long prompts (>= 64 tokens) of every cell;
+  * the paged cell's greedy tokens are IDENTICAL to the dense chunk
+    cell's, its ``kv_bytes_resident`` is STRICTLY below dense, and its
+    pages all return to the pool at drain;
   * pallas == xla greedy tokens on the gated cell.
 
     PYTHONPATH=src python -m benchmarks.bench_serve --quick
@@ -148,6 +156,12 @@ def summarize(reqs, stats) -> dict:
             round(stats.get("served_invocation_rate", 0.0), 4),
         "undrained_queued": stats["undrained_queued"],
         "undrained_inflight": stats["undrained_inflight"],
+        # serving-memory columns: dense cells report their (constant)
+        # worst-case resident KV bytes, paged cells the page high-water
+        # mark's worth plus the pool-utilisation ledger
+        "kv_bytes_resident": stats.get("kv_bytes_resident", 0),
+        "page_util": round(stats.get("page_util", 0.0), 4),
+        "peak_pages": stats.get("page_hwm", 0),
     }
 
 
@@ -204,7 +218,8 @@ def main(quick: bool = False, devices: int = 1, chunk: int = 16,
             use_mcma_dispatch=True, mesh=mesh, qos_tiers=tiers,
             route_scope="tick", backend=backend,
             prefill_chunk=0 if mode == "token" else chunk,
-            admission="fifo" if mode == "token" else "cost"))
+            admission="fifo" if mode == "token" else "cost",
+            kv_page_size=16 if mode == "paged" else 0))
 
     rows, gated = [], False
     for process in processes:
@@ -212,7 +227,7 @@ def main(quick: bool = False, devices: int = 1, chunk: int = 16,
             stream = gen_stream(process, load, n_reqs, cfg.vocab,
                                 n_tiers=len(tiers))
             cell = {}
-            for mode in ("token", "chunk"):
+            for mode in ("token", "chunk", "paged"):
                 reqs, stats = replay(server(mode), stream)
                 s = summarize(reqs, stats)
                 cell[mode] = (reqs, s)
@@ -224,13 +239,27 @@ def main(quick: bool = False, devices: int = 1, chunk: int = 16,
                       f"ticks={s['ticks']:5d} ttft p50/p99="
                       f"{s['ttft_p50_ticks']:.0f}/{s['ttft_p99_ticks']:.0f} "
                       f"tok/s={s['tokens_per_s']:8.1f} "
-                      f"inv={s['invocation_rate']:.3f}", flush=True)
-            # gate 1: identical greedy tokens per request, both modes
-            tt, tc = (_tokens_by_rid(cell[m][0]) for m in ("token", "chunk"))
+                      f"inv={s['invocation_rate']:.3f} "
+                      f"kvB={s['kv_bytes_resident']}", flush=True)
+            # gate 1: identical greedy tokens per request, all modes
+            tt, tc, tp = (_tokens_by_rid(cell[m][0])
+                          for m in ("token", "chunk", "paged"))
             assert tt == tc, \
                 f"chunked tokens diverge from token-by-token at " \
                 f"{process}/load={load}: " \
                 f"{ {k: (tt[k], tc[k]) for k in tt if tt[k] != tc[k]} }"
+            # gate 1b: the paged cache is invisible to the sampled tokens
+            assert tp == tc, \
+                f"paged tokens diverge from dense at " \
+                f"{process}/load={load}: " \
+                f"{ {k: (tc[k], tp[k]) for k in tc if tc[k] != tp[k]} }"
+            # gate 1c: paged must pay strictly fewer resident KV bytes
+            # than dense on this mixed-length stream, and drain clean
+            kb_d = cell["chunk"][1]["kv_bytes_resident"]
+            kb_p = cell["paged"][1]["kv_bytes_resident"]
+            assert 0 < kb_p < kb_d, \
+                f"paged KV bytes must undercut dense at " \
+                f"{process}/load={load}: paged {kb_p} vs dense {kb_d}"
             # gate 2: chunked prefill wins TTFT on long prompts
             lt = cell["token"][1]["ttft_long_mean_ticks"]
             lc = cell["chunk"][1]["ttft_long_mean_ticks"]

@@ -4,9 +4,11 @@ The linter (stage 1) proves contracts the AST can see; this stage proves
 the ones only tracing can: it builds the real engine entrypoints —
 ``make_dispatch_plan`` / ``execute_dispatch``, ``mcma_dispatch``,
 ``mcma_dispatch_sharded`` on a mesh, and the decode / prefill-chunk
-steps — and drives each compiled program across a capacity ladder, QoS
-margin settings, residency sets, and row masks, asserting the three
-runtime contracts every PR so far has defended ad hoc:
+steps (dense AND paged-KV layouts — 2 page sizes x 2 row masks with
+varying block-table contents) — and drives each compiled program across
+a capacity ladder, QoS margin settings, residency sets, and row masks,
+asserting the three runtime contracts every PR so far has defended ad
+hoc:
 
   TA001  exactly one compile per entrypoint per capacity point: QoS
          margins, residency vectors, tiers, and row masks are TRACED
@@ -319,6 +321,83 @@ def _audit_steps(backend: str) -> list[Finding]:
     return findings
 
 
+def _audit_paged_steps(backend: str) -> list[Finding]:
+    """The paged-KV serving entrypoints: per page size (its own shape,
+    so its own compilation unit) ONE compiled decode step and ONE
+    compiled prefill-chunk step absorb every block-table content, slot
+    position, and row mask the allocator can produce — page allocation
+    and free churn are traced-input changes, never retraces."""
+    import dataclasses
+
+    from repro.configs.registry import get_config, smoke_config
+    from repro.models import model as M
+    from repro.runtime import steps as steps_lib
+
+    base = smoke_config(get_config("internlm2-1.8b"))
+    cfg = dataclasses.replace(base, approx=dataclasses.replace(
+        base.approx, enable=True, library_size=6, backend=backend,
+        **(dict(interpret=True, block_t=16) if backend != "xla" else {})))
+    b, max_len = 4, 32
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jnp.arange(1, b + 1, dtype=jnp.int32)[:, None]
+    tier = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    masks = (jnp.ones((b,), bool), jnp.asarray([True, True, True, False]))
+    margins = jnp.asarray(MARGIN_SETS[0], jnp.float32)
+    residency = jnp.asarray(RESIDENCY_SETS[0], jnp.int32)
+
+    ctoks = jnp.tile(toks, (1, 4))
+    n_valid = jnp.asarray([4, 2, 4, 0], jnp.int32)
+
+    findings = []
+    for page_size in (8, 16):
+        assert max_len % page_size == 0, (max_len, page_size)
+        n_pp = max_len // page_size
+        n_pages = b * n_pp
+        # fresh step closures per page size: jax.jit keys its cache on
+        # the underlying callable, so re-wrapping ONE closure would count
+        # the other page size's (legitimately different-shape) program
+        # as a retrace
+        decode = steps_lib.make_decode_step(cfg, use_mcma_dispatch=True,
+                                            with_stats=True)
+        chunk = steps_lib.make_prefill_chunk_step(
+            cfg, use_mcma_dispatch=True, with_stats=True)
+        # two allocator states: in-order pages vs a scrambled free list
+        # with partially-filled rows (holes stay -1)
+        ident = jnp.arange(n_pages, dtype=jnp.int32).reshape(b, n_pp)
+        perm = jnp.asarray(
+            [(7 * k + 3) % n_pages for k in range(n_pages)],
+            jnp.int32).reshape(b, n_pp)
+        perm = perm.at[:, n_pp // 2:].set(-1) if n_pp > 1 else perm
+        tables = (ident, perm)
+
+        decode_fn, chunk_fn = jax.jit(decode), jax.jit(chunk)
+        for bt in tables:
+            for mask in masks:
+                cache = M.init_cache(cfg, b, max_len, page_size=page_size,
+                                     kv_pages=n_pages)
+                cache = dict(cache, block_table=bt)
+                decode_fn(params, cache, toks, mask, tier, margins,
+                          residency)
+                cache = M.init_cache(cfg, b, max_len, page_size=page_size,
+                                     kv_pages=n_pages)
+                cache = dict(cache, block_table=bt)
+                chunk_fn(params, cache, ctoks, n_valid, mask, tier,
+                         margins, residency)
+        tag = f"[{backend},P={page_size}]"
+        findings += retrace_findings(
+            decode_fn, scope=f"paged_decode_step{tag}", path="audit:steps")
+        findings += retrace_findings(
+            chunk_fn, scope=f"paged_prefill_chunk_step{tag}",
+            path="audit:steps")
+        findings += callback_findings(
+            decode,
+            (params, M.init_cache(cfg, b, max_len, page_size=page_size,
+                                  kv_pages=n_pages),
+             toks, masks[0], tier, margins, residency),
+            scope=f"paged_decode_step{tag}", path="audit:steps")
+    return findings
+
+
 def run_audit(*, backends=("xla", "pallas", "pallas_fused"),
               with_steps: bool = True) -> list[Finding]:
     """Trace-audit every engine entrypoint; [] = every contract holds.
@@ -338,5 +417,6 @@ def run_audit(*, backends=("xla", "pallas", "pallas_fused"),
         findings += _audit_sharded(be)
         if with_steps:
             findings += _audit_steps(be)
+            findings += _audit_paged_steps(be)
     findings.sort(key=lambda f: (f.path, f.scope, f.rule))
     return findings

@@ -23,7 +23,11 @@ functions).
 
 Scope: modules that import ``jax.experimental.pallas``, plus the
 ``kernels/`` tree (ops.py builds the tile grids without importing
-pallas).
+pallas).  Page-grid arithmetic is covered EVERYWHERE: a floor division
+whose denominator mentions ``page`` (the paged-KV block tables in
+models/, the server's allocator) is held to the same contract in any
+module — a non-dividing page size silently truncates the block table
+exactly like a grid tile.
 """
 from __future__ import annotations
 
@@ -167,8 +171,7 @@ def _check_index_map_arity(mod, fn, spec_call, findings):
 
 
 def check(mod: astutil.ModuleInfo) -> list[Finding]:
-    if not _uses_pallas(mod):
-        return []
+    pallas_scope = _uses_pallas(mod)
     findings = []
     for fn, _ in astutil.functions(mod.tree):
         proven = _divisibility_asserts(fn)
@@ -176,6 +179,11 @@ def check(mod: astutil.ModuleInfo) -> list[Finding]:
             if isinstance(node, ast.BinOp) \
                     and isinstance(node.op, ast.FloorDiv):
                 num, den = node.left, node.right
+                # outside the pallas/kernels scope only page-grid
+                # divisions are bound by the contract
+                if not pallas_scope \
+                        and "page" not in astutil.dump(den).lower():
+                    continue
                 if (astutil.dump(num), astutil.dump(den)) in proven:
                     continue
                 if _is_roundup_idiom(num, den):
@@ -189,7 +197,7 @@ def check(mod: astutil.ModuleInfo) -> list[Finding]:
                              "assert in this function — a non-dividing "
                              "size silently truncates the grid (rows past "
                              "the last tile never launch)")))
-            elif isinstance(node, ast.Call):
+            elif pallas_scope and isinstance(node, ast.Call):
                 name = mod.canonical(node.func) or ""
                 if name.endswith(("GridSpec", "pallas_call")) \
                         or "pallas_call" in name:

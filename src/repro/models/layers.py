@@ -222,6 +222,22 @@ def flash_attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
     return o.swapaxes(0, 1).reshape(b, sq, h, hd)
 
 
+def _gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Gather a paged pool back into a per-slot dense view.
+
+    pool: (n_pages, page_size, Kh, hd); block_table: (B, n_pp) int32 with
+    -1 marking unallocated entries.  Returns (B, n_pp * page_size, Kh, hd).
+    Holes clamp to page 0 — whatever lives there is garbage for that slot,
+    but every attended position (kpos <= pos) sits in a page the slot
+    owns, and the -1e30 mask ahead of the softmax zeroes the rest, so the
+    garbage never reaches an output.  With page_size dividing max_len the
+    gathered view has the dense cache's exact (B, max_len) reduction
+    shape — paged attention is bit-identical to the dense oracle."""
+    b, n_pp = block_table.shape
+    g = jnp.take(pool, jnp.maximum(block_table, 0), axis=0)
+    return g.reshape(b, n_pp * pool.shape[1], *pool.shape[2:])
+
+
 def _attention_chunk(cfg: ModelConfig, q, k, v, cache):
     """Chunked-prefill attention against the DECODE cache layout.
 
@@ -234,27 +250,52 @@ def _attention_chunk(cfg: ModelConfig, q, k, v, cache):
     causal mask is per-query (kpos <= pos + i), so a chunk's logits match
     feeding its tokens one decode tick at a time.  Returns (out, new_cache)
     with ``pos`` advanced by ``n_valid``.
+
+    A cache carrying ``block_table`` is PAGED: k/v are (n_pages,
+    page_size, Kh, hd) pools and each token's write lands inside its
+    slot's page for that position.  Padded tokens, positions past the
+    block table, and unallocated (-1) entries all remap to the
+    out-of-bounds page index ``n_pages`` so ``mode="drop"`` discards them
+    (-1 itself would WRAP to the last page under numpy index
+    normalization and corrupt it).
     """
     b, sq = q.shape[0], q.shape[1]
     pos, nv = cache["pos"], cache["n_valid"]
-    skv = cache["k"].shape[1]
     off = jnp.arange(sq)
     tok_ok = off[None, :] < nv[:, None]                     # (B, Sq)
-    idx = jnp.where(tok_ok, pos[:, None] + off[None, :], skv)
-    write = jax.vmap(lambda c, new, i: c.at[i].set(new, mode="drop"))
-    ck = write(cache["k"], k.astype(cache["k"].dtype), idx)
-    cv = write(cache["v"], v.astype(cache["v"].dtype), idx)
     qpos = pos[:, None] + off[None, :]                      # (B, Sq)
+    if "block_table" in cache:
+        bt = cache["block_table"]
+        n_pages, page_size = cache["k"].shape[0], cache["k"].shape[1]
+        n_pp = bt.shape[1]
+        skv = n_pp * page_size
+        pg_idx, within = jnp.divmod(qpos, page_size)
+        pg = jnp.take_along_axis(bt, jnp.minimum(pg_idx, n_pp - 1), axis=1)
+        pg = jnp.where(tok_ok & (pg_idx < n_pp) & (pg >= 0), pg, n_pages)
+        ck = cache["k"].at[pg, within].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[pg, within].set(
+            v.astype(cache["v"].dtype), mode="drop")
+        ak, av = _gather_pages(ck, bt), _gather_pages(cv, bt)
+        new_cache = {"k": ck, "v": cv, "block_table": bt, "pos": pos + nv}
+    else:
+        skv = cache["k"].shape[1]
+        idx = jnp.where(tok_ok, qpos, skv)
+        write = jax.vmap(lambda c, new, i: c.at[i].set(new, mode="drop"))
+        ck = write(cache["k"], k.astype(cache["k"].dtype), idx)
+        cv = write(cache["v"], v.astype(cache["v"].dtype), idx)
+        ak, av = ck, cv
+        new_cache = {"k": ck, "v": cv, "pos": pos + nv}
     valid = jnp.arange(skv)[None, None, :] <= qpos[:, :, None]  # (B, Sq, Skv)
     rep = cfg.n_heads // cfg.n_kv_heads
     qg = q.reshape(b, sq, cfg.n_kv_heads, rep, cfg.hd)
-    s_ = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ck).astype(jnp.float32) \
+    s_ = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ak).astype(jnp.float32) \
         * cfg.hd ** -0.5
     s_ = jnp.where(valid[:, None, None, :, :], s_, -1e30)
-    w = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
-    o = jnp.einsum("bgrqk,bkgd->bqgrd", w, cv)
+    w = jax.nn.softmax(s_, axis=-1).astype(av.dtype)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", w, av)
     o = o.reshape(b, sq, cfg.n_heads, cfg.hd)
-    return o, {"k": ck, "v": cv, "pos": pos + nv}
+    return o, new_cache
 
 
 def attention_fwd(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
@@ -263,7 +304,12 @@ def attention_fwd(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
     (train/prefill).  With a cache: single-step decode — update the cache at
     ``positions`` and attend over it.  A cache carrying ``n_valid`` takes
     the chunked-prefill path instead (S tokens per slot appended at per-slot
-    offsets; dense caches only — ring buffers feed token-by-token).
+    offsets; dense caches only — ring buffers feed token-by-token).  A
+    cache carrying ``block_table`` is PAGED (init_attn_cache(page_size=))
+    on either path: writes scatter into the slot's pages with
+    ``mode="drop"`` and attention gathers the pages back into the dense
+    per-slot view — the block table is a TRACED input, so page
+    allocation changes never retrace.
 
     Returns (out, new_cache).
     """
@@ -290,40 +336,92 @@ def attention_fwd(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
         # decode: cache["k"]: (B, Skv, Kh, hd); cache["pos"]: (B,) per-slot
         # positions (continuous batching: every row may be at a different
         # sequence offset).  Writes are a vmapped dynamic_update_slice.
+        # A cache carrying ``block_table`` is PAGED: k/v are (n_pages,
+        # page_size, Kh, hd) pools shared by every slot, the block table
+        # (B, n_pp) maps each slot's page index to a pool page (-1 =
+        # unallocated), and attention runs over the gathered per-slot
+        # view — same reduction shape as dense, so greedy tokens are
+        # bit-identical to the page_size=0 oracle.
         pos = cache["pos"]
-        skv = cache["k"].shape[1]
-        if cfg.sliding_window:
-            slot = jnp.mod(pos, skv)                       # ring buffer
+        if "block_table" in cache:
+            assert not cfg.sliding_window, \
+                "paged KV caches need absolute positions (no ring buffers)"
+            bt = cache["block_table"]
+            n_pages, page_size = cache["k"].shape[0], cache["k"].shape[1]
+            skv = bt.shape[1] * page_size
+            pg_idx, off = jnp.divmod(pos, page_size)
+            pg = jnp.take_along_axis(
+                bt, jnp.minimum(pg_idx, bt.shape[1] - 1)[:, None], 1)[:, 0]
+            # unallocated entries are -1, which numpy-style indexing would
+            # WRAP onto the last pool page — remap to the out-of-bounds
+            # index n_pages so mode="drop" discards the write instead of
+            # corrupting a live page
+            pg = jnp.where(pg < 0, n_pages, pg)
+            ck = cache["k"].at[pg, off].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[pg, off].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+            ak, av = _gather_pages(ck, bt), _gather_pages(cv, bt)
+            valid = jnp.arange(skv)[None, :] <= pos[:, None]
+            new_cache = {"k": ck, "v": cv, "block_table": bt, "pos": pos + 1}
         else:
-            slot = pos
-        write = jax.vmap(
-            lambda c, new, i: jax.lax.dynamic_update_slice(c, new, (i, 0, 0)))
-        ck = write(cache["k"], k.astype(cache["k"].dtype), slot)
-        cv = write(cache["v"], v.astype(cache["v"].dtype), slot)
-        kpos = jnp.arange(skv)
-        if cfg.sliding_window:
-            valid = (kpos[None, :] <= slot[:, None]) | (pos[:, None] >= skv)
-        else:
-            valid = kpos[None, :] <= pos[:, None]          # (B, Skv)
+            skv = cache["k"].shape[1]
+            if cfg.sliding_window:
+                slot = jnp.mod(pos, skv)                   # ring buffer
+            else:
+                slot = pos
+            write = jax.vmap(
+                lambda c, new, i: jax.lax.dynamic_update_slice(
+                    c, new, (i, 0, 0)))
+            ck = write(cache["k"], k.astype(cache["k"].dtype), slot)
+            cv = write(cache["v"], v.astype(cache["v"].dtype), slot)
+            kpos = jnp.arange(skv)
+            if cfg.sliding_window:
+                valid = (kpos[None, :] <= slot[:, None]) \
+                    | (pos[:, None] >= skv)
+            else:
+                valid = kpos[None, :] <= pos[:, None]      # (B, Skv)
+            ak, av = ck, cv
+            new_cache = {"k": ck, "v": cv, "pos": pos + 1}
         # grouped-query attention without materializing the head repeat:
         # q -> (B, 1, KV, rep, hd) and contract against the raw cache.
         rep = cfg.n_heads // cfg.n_kv_heads
         qg = q.reshape(b, q.shape[1], cfg.n_kv_heads, rep, cfg.hd)
-        s_ = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ck).astype(jnp.float32) \
+        s_ = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ak).astype(jnp.float32) \
             * cfg.hd ** -0.5
         s_ = jnp.where(valid[:, None, None, None, :], s_, -1e30)
-        w = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
-        o = jnp.einsum("bgrqk,bkgd->bqgrd", w, cv)
+        w = jax.nn.softmax(s_, axis=-1).astype(av.dtype)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", w, av)
         o = o.reshape(b, q.shape[1], cfg.n_heads, cfg.hd)
-        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
 
     o = o.reshape(b, o.shape[1], cfg.n_heads * cfg.hd)
     return jnp.dot(o, p["wo"].astype(o.dtype)), new_cache
 
 
-def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int):
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                    page_size: int = 0, n_pages: int = 0):
     """Decode KV cache; sliding-window archs get a ring buffer of window
-    size.  ``pos`` is per-slot (continuous batching)."""
+    size.  ``pos`` is per-slot (continuous batching).
+
+    ``page_size > 0`` builds the PAGED layout instead: k/v become a fixed
+    pool of ``(n_pages, page_size, Kh, hd)`` blocks shared by every slot,
+    plus a ``block_table`` (batch, max_len // page_size) int32 mapping
+    each slot's page index to a pool page (-1 = unallocated — writes to a
+    hole are dropped, never clamped).  ``page_size`` must divide
+    ``max_len`` so the gathered per-slot view keeps the dense reduction
+    shape (bit-exactness against the ``page_size=0`` oracle)."""
+    if page_size:
+        assert not cfg.sliding_window, \
+            "paged KV caches need absolute positions (no ring buffers)"
+        assert max_len % page_size == 0, (
+            f"page_size={page_size} must divide max_len={max_len}")
+        assert n_pages >= 1, f"paged cache needs n_pages >= 1, got {n_pages}"
+        n_pp = max_len // page_size
+        shape = (n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, cfg.adtype),
+                "v": jnp.zeros(shape, cfg.adtype),
+                "block_table": jnp.full((batch, n_pp), -1, jnp.int32),
+                "pos": jnp.zeros((batch,), jnp.int32)}
     length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     shape = (batch, length, cfg.n_kv_heads, cfg.hd)
     return {"k": jnp.zeros(shape, cfg.adtype), "v": jnp.zeros(shape, cfg.adtype),

@@ -351,9 +351,28 @@ def forward(cfg: ModelConfig, params, inputs: jax.Array, *,
 # Decode (single token, cache update)
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
-    """Empty decode cache sized for ``max_len`` context."""
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               page_size: int = 0, kv_pages: int = 0):
+    """Empty decode cache sized for ``max_len`` context.
+
+    ``page_size > 0`` builds the PAGED layout (uniform family only): k/v
+    are per-layer pools ``(L, kv_pages, page_size, Kh, hd)`` plus ONE
+    ``block_table`` (batch, max_len // page_size) shared by every layer —
+    all layers write the same positions, so one table serves the stack.
+    ``page_size=0`` keeps the dense ``(L, batch, max_len, Kh, hd)``
+    layout, the bit-exact oracle."""
     topo = topology(cfg)
+    if page_size:
+        assert topo.kind == "uniform" and not cfg.sliding_window, (
+            "paged KV caches need the uniform dense-attention family "
+            f"(got family={cfg.family!r}, "
+            f"sliding_window={cfg.sliding_window})")
+        c = L.init_attn_cache(cfg, batch, max_len, page_size=page_size,
+                              n_pages=kv_pages)
+        stack = lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape))
+        return {"k": stack(c["k"]), "v": stack(c["v"]),
+                "block_table": c["block_table"],
+                "pos": jnp.zeros((batch,), jnp.int32)}
     if topo.kind == "uniform":
         c = L.init_attn_cache(cfg, batch, max_len)
         stack = lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape))
@@ -381,21 +400,30 @@ def reset_slot(cfg: ModelConfig, cache, fresh, slot: int):
     """Reset one batch slot of a decode cache to ``fresh`` (a cache from
     init_cache): continuous batching admits a new request into a freed
     slot.  Batch-dim position per leaf: k/v (L, B, ...) -> 1; mlstm/mamba
-    states (G, P, B, ...) -> 2; slstm states (G, B, ...) -> 1; pos -> 0."""
+    states (G, P, B, ...) -> 2; slstm states (G, B, ...) -> 1; pos -> 0.
+
+    Paged caches (``block_table`` present): the k/v pools are SHARED by
+    every slot — freeing pages is the server allocator's job, so the
+    pools pass through untouched and only the slot's block-table row
+    (back to -1) and ``pos`` (back to 0) reset."""
+    paged = isinstance(cache, dict) and "block_table" in cache
+
     def bdim(path):
         head = path[0]
         if head in ("k", "v"):
-            return 1
+            return None if paged else 1
         if head in ("mlstm", "mamba"):
             return 2
         if head == "slstm":
             return 1
-        return 0  # pos
+        return 0  # pos, block_table
 
     def walk(path, c, f):
         if isinstance(c, dict):
             return {k: walk(path + (k,), c[k], f[k]) for k in c}
         d = bdim(path)
+        if d is None:
+            return c                       # shared page pool: not per-slot
         idx = tuple([slice(None)] * d + [slot])
         return c.at[idx].set(f[idx])
     return walk((), cache, fresh)
@@ -403,8 +431,9 @@ def reset_slot(cfg: ModelConfig, cache, fresh, slot: int):
 
 def pad_cache(cfg: ModelConfig, cache, max_len: int):
     """Grow a prefill-built cache's KV length to ``max_len`` (decode room).
-    No-op for pure-SSM caches and ring buffers (fixed window)."""
-    if "k" not in cache or cfg.sliding_window:
+    No-op for pure-SSM caches, ring buffers (fixed window), and paged
+    caches (a fixed pool — capacity is kv_pages, not per-slot length)."""
+    if "k" not in cache or cfg.sliding_window or "block_table" in cache:
         return cache
     pad = max_len - cache["k"].shape[2]
     if pad <= 0:
@@ -475,10 +504,14 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
         # inside the while loop aliases the donated input buffer) — passing
         # it as scan xs/ys would materialize two extra (L, B, S, KV, hd)
         # temporaries, which at 32k context is the whole HBM budget.
+        bt = cache.get("block_table")     # paged: ONE table for all layers
+
         def body(carry, blk_i):
             x, ck, cv = carry
             blk, i = blk_i
             lc = {"k": ck[i], "v": cv[i], "pos": pos}
+            if bt is not None:
+                lc["block_table"] = bt
             x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
                                        row_mask=row_mask, dispatch_plan=plan,
                                        tier=tier, tier_margins=tier_margins,
@@ -497,6 +530,8 @@ def decode(cfg: ModelConfig, params, cache, inputs: jax.Array, *,
         # without corrupting them.  Unmasked rows see pos + 1 exactly.
         adv = 1 if row_mask is None else row_mask.astype(jnp.int32)
         new_cache = {"k": ks, "v": vs, "pos": pos + adv}
+        if bt is not None:
+            new_cache["block_table"] = bt
         if collect_metrics and ms is not None:
             step_metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}
 
@@ -603,10 +638,14 @@ def decode_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
                                   residency=residency)
             tier = tier_margins = None   # the plan embeds the tiers
 
+    bt = cache.get("block_table")         # paged: ONE table for all layers
+
     def body(carry, blk_i):
         x, ck, cv = carry
         blk, i = blk_i
         lc = {"k": ck[i], "v": cv[i], "pos": pos, "n_valid": n_valid}
+        if bt is not None:
+            lc["block_table"] = bt
         x, nc, _, m = _dense_block(cfg, blk, x, positions, lc, serve=serve,
                                    row_mask=tok_mask, dispatch_plan=plan,
                                    tier=tier, tier_margins=tier_margins,
@@ -619,6 +658,8 @@ def decode_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
         body, (x, cache["k"], cache["v"]),
         (params["blocks"], jnp.arange(cfg.n_layers)))
     new_cache = {"k": ks, "v": vs, "pos": pos + n_valid.astype(jnp.int32)}
+    if bt is not None:
+        new_cache["block_table"] = bt
     metrics: dict[str, jax.Array] = {}
     if collect_metrics and ms is not None:
         metrics = {k: jnp.mean(v, axis=0) for k, v in ms.items()}

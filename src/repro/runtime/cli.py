@@ -98,6 +98,16 @@ def add_serve_options(parser: argparse.ArgumentParser,
                         "tokens")
     g.add_argument("--aging", type=float, default=0.05,
                    help="cost-admission aging rate (starvation guard)")
+    g.add_argument("--kv-page-size", type=int, default=0,
+                   help="paged KV cache: page length in tokens (must "
+                        "divide --max-len; admission then prices PAGES "
+                        "instead of prompt length; 0 = the dense "
+                        "(batch, max_len) layout, the bit-exact oracle)")
+    g.add_argument("--kv-pages", type=int, default=0,
+                   help="page-pool size with --kv-page-size (0 = batch x "
+                        "max_len/page_size, byte-parity with dense; set "
+                        "lower so long-max-len deployments stop "
+                        "reserving worst-case memory per slot)")
     if defaults:
         known = {a.dest for a in parser._actions}
         unknown = set(defaults) - known

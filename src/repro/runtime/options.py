@@ -105,6 +105,12 @@ class ServeOptions:
                  tuple), qos_app, qos_margin_scale
     scheduling:  prefill_chunk, admission ("cost"/"fifo"),
                  overflow ("reject"/"trim"), aging
+    memory:      kv_page_size (paged KV cache page length in tokens;
+                 must divide max_len; 0 = the dense (batch, max_len)
+                 layout, the bit-exact oracle), kv_pages (page-pool
+                 size; 0 = batch x max_len/page_size, byte-parity with
+                 dense — set lower so long-max_len deployments stop
+                 reserving worst-case memory per slot; docs/serving.md)
     library:     a ``LibrarySpec`` enabling approximator-library
                  residency (None = the historic all-resident engine)
     """
@@ -127,6 +133,8 @@ class ServeOptions:
     admission: str = "cost"
     overflow: str = "reject"
     aging: float = 0.05
+    kv_page_size: int = 0
+    kv_pages: int = 0
     backend: Optional[str] = None
     library: Optional[LibrarySpec] = None
 
@@ -144,7 +152,8 @@ class ServeOptions:
         kw = {}
         for f in ("batch", "max_len", "drop_budget", "route_scope",
                   "qos_app", "prefill_chunk", "admission", "overflow",
-                  "aging", "backend", "seed", "greedy", "eos"):
+                  "aging", "kv_page_size", "kv_pages", "backend", "seed",
+                  "greedy", "eos"):
             if hasattr(args, f):
                 kw[f] = getattr(args, f)
         if getattr(args, "autotune", False):

@@ -17,11 +17,23 @@ available and used by the bench as the TTFT baseline).  Chunking needs the
 uniform (dense-attention) family with a dense KV cache; SSM/hybrid/
 sliding-window models fall back to token-by-token feeding automatically.
 
-The ``max_len`` contract: the cache is a dense ``(batch, max_len)`` ring
-of nothing — positions are absolute, never recycled (dense paged-KV is a
-follow-up).  ``submit()`` enforces ``len(prompt) + max_new <= max_len``
-loudly (or trims the prompt's HEAD under ``overflow="trim"``), and the
-tick loop aborts — never clamp-writes — any slot whose prompt cannot fit.
+The ``max_len`` contract: positions are absolute, never recycled.
+``submit()`` enforces ``len(prompt) + max_new <= max_len`` loudly (or
+trims the prompt's HEAD under ``overflow="trim"``), and the tick loop
+aborts — never clamp-writes — any slot whose prompt cannot fit.
+
+The KV cache is dense ``(batch, max_len)`` by default, or PAGED when
+``ServeOptions.kv_page_size > 0``: a fixed pool of ``kv_pages`` blocks
+of ``kv_page_size`` tokens plus a per-slot block table (a TRACED leaf of
+the cache pytree — page allocation changes never retrace).  The
+host-side allocator here hands pages to slots lazily as their ``pos``
+crosses page boundaries, and takes every page back the moment a request
+finishes, aborts, or strands, so resident KV memory tracks tokens
+actually HELD instead of batch x max_len worst case.  Admission then
+reserves each request's worst-case page count up front (so in-flight
+growth can never deadlock the pool) and the cost model prices pages
+instead of raw prompt length.  Paged serving is bit-identical to the
+dense oracle (docs/serving.md).
 
 This is deliberately the same decode_step the dry-run lowers — the serving
 path at scale IS the lowered cell, just driven by this loop.
@@ -104,6 +116,17 @@ class DrainStats:
     lib_routed_per_class: Optional[list] = None   # (library_size + 1,)
     off_set_exact_rows: Optional[float] = None    # routed off-set, served exact
     residency: Optional[dict] = None              # ResidencyController.summary()
+    # paged KV cache (kv_page_size > 0 deployments only)
+    pages_in_use: Optional[int] = None            # pages held at drain end
+    page_hwm: Optional[int] = None                # peak pages held
+    alloc_failures: Optional[int] = None          # admission deferrals (pool
+                                                  # pressure) + pool-exhaust
+                                                  # aborts
+    page_util: Optional[float] = None             # held tokens / (held pages
+                                                  # x page_size), tick-meaned
+    # peak resident KV bytes: dense reports its (constant) worst case, a
+    # paged run reports page_hwm pages' worth — the bench's memory column
+    kv_bytes_resident: Optional[int] = None
     extras: dict = dataclasses.field(default_factory=dict)
 
     def __getitem__(self, k):
@@ -327,6 +350,40 @@ class DecodeServer:
             raise ValueError(f"unknown overflow policy: {overflow!r} "
                              "(expected 'reject' or 'trim')")
         self.overflow = overflow
+        # paged KV cache (kv_page_size > 0): k/v become per-layer pools of
+        # kv_pages blocks and this host-side allocator owns the per-slot
+        # block table.  Pages are acquired lazily as a slot's pos crosses
+        # a page boundary and released the moment its request finishes,
+        # aborts, or strands; admission reserves each request's worst-case
+        # ceil((prompt + max_new) / page_size) pages up front, so the lazy
+        # growth below can never run the pool dry mid-flight.
+        # kv_page_size=0 keeps the dense layout — the bit-exact oracle
+        # every paged deployment is pinned against.
+        self.page_size = int(o.kv_page_size)
+        self.n_pages = 0
+        if self.page_size:
+            assert self.chunkable, (
+                "paged KV caches need the uniform dense-attention family "
+                f"(got family={cfg.family!r}, "
+                f"sliding_window={cfg.sliding_window})")
+            assert max_len % self.page_size == 0, (
+                f"kv_page_size={self.page_size} must divide "
+                f"max_len={max_len} — the gathered page view must keep "
+                "the dense reduction shape for bit-exactness")
+            self.pages_per_slot = max_len // self.page_size
+            self.n_pages = int(o.kv_pages) or batch * self.pages_per_slot
+            assert self.n_pages >= 1, o.kv_pages
+            self._free_pages = list(range(self.n_pages))
+            self._slot_pages: list[list[int]] = [[] for _ in range(batch)]
+            self._bt = np.full((batch, self.pages_per_slot), -1, np.int32)
+            self._reserved = [0] * batch      # worst-case pages per slot
+            self._reserved_total = 0
+            self._pos_host = np.zeros((batch,), np.int64)
+            self._held_token_ticks = 0        # sum over ticks of held tokens
+            self._held_page_ticks = 0         # sum over ticks of held pages
+        self.pages_in_use = 0
+        self.page_hwm = 0
+        self.alloc_failures = 0
         # autotune: online capacity adaptation (runtime/autotune.py).
         # True -> the default ladder around cfg's static operating point;
         # a sequence of OperatingPoints -> that ladder.  One decode step
@@ -389,7 +446,9 @@ class DecodeServer:
         # bounded per-tick trace: (phase, tokens processed, invocation or
         # None) — the decode-phase stat-equality tests replay it
         self.tick_log: list[tuple] = []
-        self.cache = M.init_cache(cfg, batch, max_len)
+        self.cache = M.init_cache(cfg, batch, max_len,
+                                  page_size=self.page_size,
+                                  kv_pages=self.n_pages)
         if mesh is not None:
             self.params = self._shard_params(params)
             self.cache = self._shard_cache(self.cache)
@@ -522,6 +581,15 @@ class DecodeServer:
                     f"room for any prompt token within max_len "
                     f"({self.max_len}) — cannot trim")
             req.prompt = req.prompt[-budget:]   # trim policy: keep the tail
+        if self.page_size:
+            need = self._pages_needed(req.prompt.size + int(req.max_new))
+            if need > self.n_pages:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({req.prompt.size} tokens) "
+                    f"+ max_new ({req.max_new}) needs {need} KV pages but "
+                    f"the pool holds only {self.n_pages} "
+                    f"(kv_page_size={self.page_size}) — the request could "
+                    "never be scheduled; raise kv_pages or shorten it")
         if (req.error_bound is not None or req.tier is not None) \
                 and self.tier_bounds is None:
             raise ValueError(
@@ -560,35 +628,119 @@ class DecodeServer:
         self.queue.append(req)
 
     def _admission_cost(self, req: Request) -> float:
-        """Cost-model admission key: prompt length scaled by the tier's
-        capacity appetite (tight tiers route more rows to the exact FFN,
-        so a tight-tier token is more expensive to serve), minus an aging
-        credit so queue time eventually dominates any length/tier gap."""
+        """Cost-model admission key: the request's appetite for the
+        resource that actually constrains the server, scaled by the
+        tier's capacity appetite (tight tiers route more rows to the
+        exact FFN, so a tight-tier token is more expensive to serve),
+        minus an aging credit so queue time eventually dominates any
+        length/tier gap.  Dense caches price prompt length; paged caches
+        price the worst-case PAGE count (what admission reserves and what
+        the pool runs out of)."""
         mult = 1.0
         if self.tier_bounds is not None and len(self.tier_bounds) > 1:
             tier = req.tier if req.tier is not None else self.default_tier
             n = len(self.tier_bounds)
             mult = 1.0 + 0.5 * (n - 1 - tier) / (n - 1)   # tightest x1.5
         age = self.ticks - (req.arrival_tick or 0)
-        return float(len(req.prompt)) * mult - self.aging * age
+        work = float(self._pages_needed(req.prompt.size + int(req.max_new))) \
+            if self.page_size else float(len(req.prompt))
+        return work * mult - self.aging * age
+
+    def _pages_needed(self, tokens: int) -> int:
+        """Worst-case page count for ``tokens`` cache positions."""
+        return (int(tokens) + self.page_size - 1) // self.page_size
+
+    def _ensure_slot_pages(self, i: int, tokens: int):
+        """Grow slot ``i``'s block table to cover ``tokens`` positions,
+        taking pages from the free pool (lazy acquisition — a slot only
+        holds pages for tokens it has actually written or is about to
+        write this tick).  Admission reserved the worst case up front, so
+        the pool can never actually run dry here; if it does a scheduling
+        invariant broke and we fail LOUDLY rather than drop a live
+        token's write."""
+        need = self._pages_needed(tokens)
+        held = self._slot_pages[i]
+        while len(held) < need:
+            if not self._free_pages:
+                self.alloc_failures += 1
+                raise RuntimeError(
+                    f"KV page pool exhausted growing slot {i} to {tokens} "
+                    f"tokens (needs {need} pages; {self.pages_in_use}/"
+                    f"{self.n_pages} in use) — admission reservations "
+                    "should make this unreachable")
+            pg = self._free_pages.pop()
+            self._bt[i, len(held)] = pg
+            held.append(pg)
+            self.pages_in_use += 1
+            self.page_hwm = max(self.page_hwm, self.pages_in_use)
+
+    def _release_slot(self, i: int):
+        """Return slot ``i``'s pages to the pool and drop its reservation
+        — called the moment a request finishes, aborts, or strands
+        (free-on-abort: a long-lived server's pool must never leak)."""
+        if not self.page_size:
+            return
+        self._free_pages.extend(self._slot_pages[i])
+        self.pages_in_use -= len(self._slot_pages[i])
+        self._slot_pages[i] = []
+        self._bt[i, :] = -1
+        self._reserved_total -= self._reserved[i]
+        self._reserved[i] = 0
+        self._pos_host[i] = 0
+
+    def _sync_block_table(self):
+        """Refresh the cache's TRACED block-table leaf from the host
+        allocator's mirror.  Same shape/dtype every tick, so allocation
+        changes flow through the compiled steps as data — zero
+        retraces."""
+        if self.page_size:
+            self.cache = dict(self.cache,
+                              block_table=jnp.asarray(self._bt))
 
     def _admit(self):
         for i in range(self.batch):
-            if self.slots[i] is None and self.queue:
+            while self.slots[i] is None and self.queue:
                 if self.admission == "cost":
                     j = min(range(len(self.queue)),
                             key=lambda j: (self._admission_cost(self.queue[j]),
                                            getattr(self.queue[j], "_seq", j)))
                 else:
                     j = 0
-                req = self.queue.pop(j)
+                req = self.queue[j]
+                need = 0
+                if self.page_size:
+                    need = self._pages_needed(
+                        req.prompt.size + int(req.max_new))
+                    if need > self.n_pages:
+                        # can NEVER fit the pool (injected past submit()
+                        # validation): abort instead of wedging the head
+                        # of the queue forever
+                        self.queue.pop(j)
+                        req.aborted = True
+                        req.done = True
+                        continue            # retry this slot
+                    if self._reserved_total + need > self.n_pages:
+                        # worst-case reservation doesn't fit right now —
+                        # head-of-line block (skipping ahead to a cheaper
+                        # request would starve this one under sustained
+                        # load); pages free as in-flight requests finish
+                        self.alloc_failures += 1
+                        return
+                self.queue.pop(j)
                 self.slots[i] = req
                 self.remaining_prompt[i] = np.asarray(req.prompt, np.int32)
+                if self.page_size:
+                    self._reserved[i] = need
+                    self._reserved_total += need
                 if self._fresh is None:
-                    self._fresh = M.init_cache(self.cfg, self.batch, self.max_len)
+                    self._fresh = M.init_cache(self.cfg, self.batch,
+                                               self.max_len,
+                                               page_size=self.page_size,
+                                               kv_pages=self.n_pages)
                     if self.mesh is not None:
                         self._fresh = self._shard_cache(self._fresh)
                 self.cache = M.reset_slot(self.cfg, self.cache, self._fresh, i)
+                break
 
     def _abort_unservable(self):
         """Defensive wedge guard: abort (never clamp-write) any slot whose
@@ -607,6 +759,7 @@ class DecodeServer:
                 req.done = True
                 self.slots[i] = None
                 self.remaining_prompt[i] = np.zeros((0,), np.int32)
+                self._release_slot(i)       # free-on-abort: pages go back
 
     def _tiers_arr(self) -> np.ndarray:
         return np.asarray(
@@ -632,11 +785,18 @@ class DecodeServer:
             toks[i, :n] = self.remaining_prompt[i][:n]
             self.remaining_prompt[i] = self.remaining_prompt[i][n:]
             nv[i] = n
+        if self.page_size:
+            for i in rows:
+                self._ensure_slot_pages(i, int(self._pos_host[i]) + int(nv[i]))
+            self._sync_block_table()
         args = [self.params, self.cache, jnp.asarray(toks), jnp.asarray(nv)]
         if self.use_mcma_dispatch and self.tier_bounds is not None:
             args += [None, jnp.asarray(self._tiers_arr()),
                      jnp.asarray(self.tier_margins)]
         self.cache, m = self._prefill(*args, **self._residency_kw())
+        if self.page_size:
+            for i in rows:
+                self._pos_host[i] += int(nv[i])
         tokens = int(nv.sum())
         inv = None
         if self.use_mcma_dispatch and "invocation" in m:
@@ -664,6 +824,13 @@ class DecodeServer:
                 toks[i, 0] = req.out[-1]
             else:
                 toks[i, 0] = req.prompt[-1]
+        if self.page_size:
+            # every listed row writes ONE token at its pos this tick —
+            # make sure the page covering it is allocated (lazy
+            # acquisition at the boundary crossing)
+            for i in rows:
+                self._ensure_slot_pages(i, int(self._pos_host[i]) + 1)
+            self._sync_block_table()
         mask = jnp.asarray(active)
         if self.use_mcma_dispatch:
             # active-row mask: idle and mid-prefill slots are excluded
@@ -737,6 +904,13 @@ class DecodeServer:
             self.key, k = jax.random.split(self.key)
             nxt = np.asarray(jax.random.categorical(k, logits))
         pos = np.asarray(self.cache["pos"])           # (B,) per-slot
+        if self.page_size:
+            for i in rows:
+                self._pos_host[i] += 1
+                # the mirror drives page acquisition — drift would leak
+                # or clamp, so pin it against the device truth
+                assert int(pos[i]) == int(self._pos_host[i]), \
+                    (i, int(pos[i]), int(self._pos_host[i]))
         now = None
         for i in rows:
             req = self.slots[i]
@@ -752,6 +926,7 @@ class DecodeServer:
                     or int(pos[i]) >= self.max_len - 1:
                 req.done = True
                 self.slots[i] = None
+                self._release_slot(i)   # finished: pages back to the pool
 
     def _log_tick(self, phase: str, tokens: int, invocation):
         self.tick_log.append((phase, tokens, invocation))
@@ -778,6 +953,13 @@ class DecodeServer:
             self._phase_flip = False
             self._decode_tick(decode_rows)
         self.ticks += 1
+        if self.page_size:
+            # page_util's raw signal: tokens actually held vs the token
+            # capacity of the pages holding them, sampled once per tick
+            self._held_token_ticks += int(sum(
+                self._pos_host[i] for i in range(self.batch)
+                if self._slot_pages[i]))
+            self._held_page_ticks += self.pages_in_use
         return True
 
     def run_until_drained(self, max_ticks: int = 10_000) -> DrainStats:
@@ -792,9 +974,15 @@ class DecodeServer:
         # are marked aborted (done stays False) and counted here, so a
         # caller can never mistake a truncated drain for a finished one
         undrained_inflight = sum(s is not None for s in self.slots)
-        for s in self.slots:
+        for i, s in enumerate(self.slots):
             if s is not None:
                 s.aborted = True
+                # stranded slots release their KV state eagerly — with a
+                # paged pool this would otherwise be a real leak (the
+                # dense cache merely lingered until slot reuse)
+                self.slots[i] = None
+                self.remaining_prompt[i] = np.zeros((0,), np.int32)
+                self._release_slot(i)
         for r in self.queue:
             r.aborted = True
         stats["undrained_queued"] = len(self.queue)
@@ -856,7 +1044,28 @@ class DecodeServer:
             stats["autotune"] = self.controller.summary()
         if self.residency_controller is not None:
             stats["residency"] = self.residency_controller.summary()
+        if self.page_size:
+            stats["pages_in_use"] = self.pages_in_use
+            stats["page_hwm"] = self.page_hwm
+            stats["alloc_failures"] = self.alloc_failures
+            stats["page_util"] = self._held_token_ticks / max(
+                self._held_page_ticks * self.page_size, 1)
+        stats["kv_bytes_resident"] = self._kv_bytes_resident()
         return stats
+
+    def _kv_bytes_resident(self) -> int:
+        """Peak resident KV-cache bytes.  Dense caches reserve their
+        worst case permanently (batch x max_len whatever is held); a
+        paged run pays only for the pages at its high-water mark — the
+        bench's paged-vs-dense memory gate compares exactly this."""
+        k = self.cache.get("k") if isinstance(self.cache, dict) else None
+        if k is None:
+            return 0                      # pure-SSM caches: no KV to page
+        total = int(k.nbytes) * 2         # the k + v stacks
+        if not self.page_size:
+            return total
+        assert total % self.n_pages == 0, (total, self.n_pages)
+        return (total // self.n_pages) * self.page_hwm
 
     def derived_ladder(self, **kwargs):
         """runtime/autotune.ladder_from_counts over this server's served

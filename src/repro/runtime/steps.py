@@ -8,6 +8,13 @@ train_step = microbatched fwd+bwd (lax.scan gradient accumulation when
 cfg-level ``grad_accum > 1``) + global-norm clip + cosine LR + AdamW.
 All functions are pure and jit-friendly; sharding is applied by the caller
 (launch/dryrun.py, runtime/trainer.py) via in_shardings/out_shardings.
+
+The decode/chunk steps are cache-layout agnostic: a paged KV cache
+(models/model.init_cache with page_size > 0) rides through the same
+``cache`` pytree — pooled ``k``/``v`` leaves plus a ``block_table`` —
+so the step signatures and their compiled-once contract are unchanged.
+The server mutates the block table HOST-side and refreshes the traced
+leaf each tick (same shape/dtype always -> zero retraces).
 """
 from __future__ import annotations
 

@@ -348,7 +348,7 @@ def batch_pspec(mesh: Mesh, arr_or_spec) -> P:
     return P(*spec)
 
 
-def _cache_rule(mesh, path: str, arr) -> P:
+def _cache_rule(mesh, path: str, arr, *, paged: bool = False) -> P:
     name = path.split("/")[-1]
     shape = arr.shape
     md = _axis_size(mesh, "model")
@@ -356,6 +356,25 @@ def _cache_rule(mesh, path: str, arr) -> P:
     dpa = _dp_axes(mesh)
     if name == "pos" or len(shape) <= 1:
         return P()
+    if name == "block_table":
+        # (B, n_pp) int32: rides next to the batch like the k/v rows it
+        # indexes
+        return P(dpa if _fits(shape[0], dp) else None, None)
+    if name in ("k", "v") and paged:
+        # paged pool (L, n_pages, page_size, KV, hd): pages REPLICATE
+        # over data — any data shard's slot may hold any pool page, and
+        # sharding pages over data would partition the gathered Skv
+        # contraction (a different reduction order than the dense oracle,
+        # breaking bit-exactness).  Heads (else head_dim) shard over
+        # model exactly like the dense cache, so the attention einsums
+        # see the same per-shard operands either way.
+        l_, npg, ps, kv, hd = shape
+        spec = [None, None, None, None, None]
+        if _fits(kv, md):
+            spec[3] = "model"
+        elif _fits(hd, md):
+            spec[4] = "model"
+        return P(*spec)
     if name in ("k", "v"):
         # (L, B, S, KV, hd) or (G, B, S, KV, hd)
         l_, b, s, kv, hd = shape
@@ -382,7 +401,8 @@ def _cache_rule(mesh, path: str, arr) -> P:
 
 def cache_pspecs(mesh: Mesh, cache):
     flat = _tree_paths(cache)
-    specs = {k: _cache_rule(mesh, k, v) for k, v in flat.items()}
+    paged = any(k.split("/")[-1] == "block_table" for k in flat)
+    specs = {k: _cache_rule(mesh, k, v, paged=paged) for k, v in flat.items()}
 
     def rebuild(prefix, subtree):
         if isinstance(subtree, dict):

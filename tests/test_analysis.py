@@ -204,6 +204,34 @@ def test_rl005_named_index_map_correct_arity_is_clean(tmp_path):
     assert fs == [], fs
 
 
+# the paged-KV extension: page-grid floor divisions are held to the
+# divisibility contract in ANY module (no pallas import, not kernels/);
+# unrelated floor divisions outside the pallas scope stay unchecked
+RL005_PAGE_GRID = """
+    def bad_table_shape(max_len, page_size):
+        return max_len // page_size
+
+    def guarded_table_shape(max_len, page_size):
+        assert max_len % page_size == 0
+        return max_len // page_size
+
+    def pages_needed(tokens, page_size):
+        return (tokens + page_size - 1) // page_size
+
+    def unrelated(total, workers):
+        return total // workers
+    """
+
+
+def test_rl005_page_grid_arithmetic_covered_everywhere(tmp_path):
+    root = _mk_tree(tmp_path, {"src/repro/runtime/pager.py":
+                               RL005_PAGE_GRID})
+    fs = [f for f in lint_paths([root / "src"], root) if f.rule == "RL005"]
+    assert len(fs) == 1, fs                      # ONLY the unguarded one
+    assert fs[0].scope == "bad_table_shape", fs
+    assert fs[0].detail.startswith("floordiv"), fs
+
+
 def test_guarded_and_plumbed_patterns_stay_clean(tmp_path):
     """The engine's own idioms must not trip the rules: an asserted
     floordiv, the round-up idiom, parameter-plumbed psum axes, a

@@ -36,7 +36,8 @@ SERVE_OPTIONS_FIELDS = (
     "batch", "max_len", "eos", "greedy", "seed", "use_mcma_dispatch",
     "mesh", "autotune", "drop_budget", "autotune_kwargs", "route_scope",
     "qos_tiers", "qos_app", "qos_margin_scale", "prefill_chunk",
-    "admission", "overflow", "aging", "backend", "library",
+    "admission", "overflow", "aging", "kv_page_size", "kv_pages",
+    "backend", "library",
 )
 
 LIBRARY_SPEC_FIELDS = (
@@ -57,7 +58,8 @@ DRAIN_STATS_FIELDS = (
     "prefill_invocation_rate", "dropped_rows", "routed_per_class",
     "dispatched_per_class", "dropped_frac", "served_invocation_rate",
     "per_tier", "autotune", "lib_routed_per_class", "off_set_exact_rows",
-    "residency", "extras",
+    "residency", "pages_in_use", "page_hwm", "alloc_failures",
+    "page_util", "kv_bytes_resident", "extras",
 )
 
 
